@@ -1,0 +1,77 @@
+"""Shared benchmark scaffolding: the §IV experimental protocol.
+
+Paper protocol: 2500 uniformly sampled design points evaluated with the
+(surrogate) VLSI flow form the finite metric space; methods are compared by
+ADRS against that pool's true Pareto front, repeated over seeds. Pool
+metrics are cached under results/bench_cache/ — evaluation is one batched
+XLA call, but the cache keeps repeated figure runs identical and instant.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.core import make_space, pareto_front
+from repro.soc import VLSIFlow, SimplifiedFlow
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "bench_cache")
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "benchmarks")
+
+METHODS = ("soc-tuner", "microal", "regression", "xgb", "rf", "svr", "random")
+
+
+@dataclass
+class Bench:
+    space: object
+    pool: np.ndarray          # [N, d] candidate index vectors
+    y: np.ndarray             # [N, 3] flow metrics for the whole pool
+    ref_front: np.ndarray     # true Pareto front of the pool
+    flow_factory: object      # () -> fresh VLSIFlow (for budget counting)
+    workload: str
+
+
+def make_bench(workload: str = "resnet50", n_pool: int = 2500,
+               seed: int = 0, simplified: bool = False) -> Bench:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    space = make_space()
+    tag = f"{workload}_{n_pool}_{seed}{'_simp' if simplified else ''}"
+    cache = os.path.join(CACHE_DIR, tag + ".npz")
+    flow_cls = SimplifiedFlow if simplified else VLSIFlow
+    if os.path.exists(cache):
+        z = np.load(cache)
+        pool, y = z["pool"], z["y"]
+    else:
+        pool = np.asarray(space.sample(jax.random.PRNGKey(seed), n_pool))
+        y = np.asarray(flow_cls(space, workload)(pool))
+        np.savez(cache, pool=pool, y=y)
+    return Bench(space=space, pool=pool, y=y, ref_front=pareto_front(y),
+                 flow_factory=lambda: flow_cls(space, workload),
+                 workload=workload)
+
+
+def run_method(name: str, bench: Bench, *, T: int, b: int, n: int,
+               seed: int = 0, use_kernels: bool = False):
+    from repro.core import run_baseline, soc_tuner
+    key = jax.random.PRNGKey(seed)
+    flow = bench.flow_factory()
+    if name == "soc-tuner":
+        return soc_tuner(bench.space, bench.pool, flow, T=T, n=n, b=b,
+                         reference_front=bench.ref_front, key=key,
+                         use_kernels=use_kernels)
+    return run_baseline(name, bench.space, bench.pool, flow, T=T, b=b,
+                        key=key, reference_front=bench.ref_front)
+
+
+def write_csv(name: str, header: list[str], rows: list[list]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path

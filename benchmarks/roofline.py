@@ -1,0 +1,118 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_dot_flops / (chips x 197 TFLOP/s bf16)
+  memory term     = HLO_bytes     / (chips x 819 GB/s HBM)
+  collective term = collective_bytes / (chips x 50 GB/s ICI per link)
+
+HLO numbers are per-device (the SPMD-partitioned program), trip-count
+corrected by ``repro.launch.hlo_stats``, so terms are per-chip seconds
+directly (no extra /chips). MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D
+(MoE) per step; the ratio MODEL_FLOPS/HLO_FLOPs exposes remat/redundancy
+waste (>1/3 of HLO flops being "useful" is healthy for full-remat training:
+fwd+bwd+recompute = 8N vs the 6N model count).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12       # bf16 / chip (TPU v5e)
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D (active params x tokens) for the step the cell lowers."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def terms(rec: dict) -> dict:
+    """The three roofline terms (seconds/step, per chip) + diagnosis."""
+    chips = rec["devices"]
+    t_comp = rec["dot_flops"] / PEAK_FLOPS
+    t_mem = rec["dot_bytes"] / HBM_BW
+    t_coll = rec["collective_total"] / ICI_BW
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    step = max(t_comp, t_mem, t_coll)
+    return {
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "bottleneck": dom[0],
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / max(rec["dot_flops"], 1.0),
+        # fraction of peak compute actually achieved if the dominant term
+        # sets step time (the score in EXPERIMENTS.md §Perf)
+        "roofline_frac": mf / max(step, 1e-12) / PEAK_FLOPS,
+    }
+
+
+def advice(rec: dict, t: dict) -> str:
+    b = t["bottleneck"]
+    if b == "collective":
+        big = max(rec["collective_bytes"], key=rec["collective_bytes"].get)
+        return (f"cut {big} traffic (sharding transition or ZeRO gather "
+                f"schedule)")
+    if b == "memory":
+        return "raise arithmetic intensity (fuse, widen tiles, bf16 buffers)"
+    if t["useful_ratio"] < 0.4:
+        return "reduce recompute (remat policy) / redundant dots"
+    return "near compute roofline; overlap residual collectives"
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | MODEL/HLO | roofline frac | next lever |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for rec in load_cells(mesh):
+        if rec["status"] == "skip":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skipped | — | — | {rec['reason'][:48]} |")
+            continue
+        if rec["status"] != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"ERROR | — | — | {rec.get('error', '')[:48]} |")
+            continue
+        t = terms(rec)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']:.3g} | "
+            f"{t['memory_s']:.3g} | {t['collective_s']:.3g} | "
+            f"{t['bottleneck']} | {t['useful_ratio']:.2f} | "
+            f"{t['roofline_frac']*100:.1f}% | {advice(rec, t)} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    print(markdown_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""SoC-Tuner core: the paper's contribution.
+
+- ``space``       TABLE I design space (encode/sample/prune)
+- ``icd``         Algorithm 1 — inter-cluster-distance importance
+- ``sampling``    Algorithm 2 — importance-guided TED initialization
+- ``gp``          GP surrogates (Eqs. 3-4), pure JAX
+- ``acquisition`` IMOO information-gain acquisition (Eqs. 5-10)
+- ``tuner``       Algorithm 3 — the full exploration loop
+- ``pareto``      dominance / Pareto front / ADRS (Eq. 12) / hypervolume
+- ``baselines``   the six comparison methods of §IV
+"""
+from .space import DesignSpace, Feature, TABLE_I, make_space
+from .icd import icd, icd_from_data
+from .sampling import soc_init, ted_select, transform_to_icd
+from .gp import GPState, fit_gp, gp_predict, gp_joint_samples
+from .acquisition import imoo_scores, mes_information_gain, frontier_maxima
+from .pareto import adrs, dominance_counts, hypervolume, pareto_front, pareto_mask
+from .tuner import TunerResult, soc_tuner
+from .baselines import BASELINES, run_baseline
+
+__all__ = [
+    "DesignSpace", "Feature", "TABLE_I", "make_space",
+    "icd", "icd_from_data",
+    "soc_init", "ted_select", "transform_to_icd",
+    "GPState", "fit_gp", "gp_predict", "gp_joint_samples",
+    "imoo_scores", "mes_information_gain", "frontier_maxima",
+    "adrs", "dominance_counts", "hypervolume", "pareto_front", "pareto_mask",
+    "TunerResult", "soc_tuner",
+    "BASELINES", "run_baseline",
+]

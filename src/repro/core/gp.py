@@ -1,0 +1,195 @@
+"""Gaussian-process surrogates (paper Eqs. 3-4), pure JAX.
+
+One independent GP per objective (the paper combines per-objective GPs as a
+stacked MVN, Eq. 3); hyperparameters θ = (ARD log-lengthscales, log-variance,
+log-noise) are fit by maximizing the exact marginal likelihood with Adam
+(paper Alg. 3 line 9: "θ is optimized via gradient descent").
+
+Everything is jit-compiled and vmapped over objectives, so a 3-objective fit
+is a single XLA program; predictive code paths are Cholesky-based throughout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GPParams", "GPState", "fit_gp", "gp_predict", "gp_joint_samples"]
+
+JITTER = 1e-5
+
+
+class GPParams(NamedTuple):
+    log_ls: jnp.ndarray  # [m, d] ARD log-lengthscales
+    log_var: jnp.ndarray  # [m] log signal variance
+    log_noise: jnp.ndarray  # [m] log noise variance (σ_e² in Eq. 4)
+
+
+class GPState(NamedTuple):
+    params: GPParams
+    x: jnp.ndarray  # [n, d] training inputs (ICD space)
+    y: jnp.ndarray  # [n, m] standardized targets
+    y_mean: jnp.ndarray  # [m]
+    y_std: jnp.ndarray  # [m]
+    chol: jnp.ndarray  # [m, n, n] Cholesky of K + σ²I
+    alpha: jnp.ndarray  # [m, n]  (K+σ²I)⁻¹ y
+
+
+def _sqdist(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    aa = jnp.sum(a * a, -1)[:, None]
+    bb = jnp.sum(b * b, -1)[None, :]
+    return jnp.maximum(aa + bb - 2.0 * (a @ b.T), 0.0)
+
+
+def _kernel(params_i, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """ARD RBF kernel for one objective."""
+    log_ls, log_var = params_i
+    ls = jnp.exp(log_ls)
+    d2 = _sqdist(a / ls[None, :], b / ls[None, :])
+    return jnp.exp(log_var) * jnp.exp(-0.5 * d2)
+
+
+def _nll_one(log_ls, log_var, log_noise, x, y, mask=None) -> jnp.ndarray:
+    """Exact negative log marginal likelihood for one objective."""
+    n = x.shape[0]
+    K = _kernel((log_ls, log_var), x, x)
+    K = K + (jnp.exp(log_noise) + JITTER) * jnp.eye(n)
+    if mask is not None:  # inert padded rows: effectively infinite noise
+        K = K + jnp.diag(1e6 * mask)
+    L = jnp.linalg.cholesky(K)
+    alpha = jax.scipy.linalg.cho_solve((L, True), y)
+    nll = 0.5 * y @ alpha + jnp.sum(jnp.log(jnp.diagonal(L))) + 0.5 * n * jnp.log(2 * jnp.pi)
+    # Weak log-normal hyperpriors keep lengthscales in a sane band when n is
+    # tiny (first BO rounds) — standard practice, removable via prior_w=0.
+    prior = 0.05 * (jnp.sum(log_ls**2) + log_var**2 + (log_noise + 4.0) ** 2)
+    return nll + prior
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _fit(params: GPParams, x, y, mask, steps: int = 200,
+         lr: float = 5e-2) -> GPParams:
+    """Adam on the summed per-objective NLL (objectives are independent, so a
+    joint sum is exactly per-objective optimization)."""
+
+    def loss(p: GPParams):
+        per = jax.vmap(_nll_one, in_axes=(0, 0, 0, None, 1, None))(
+            p.log_ls, p.log_var, p.log_noise, x, y, mask)
+        return jnp.sum(per)
+
+    grad_fn = jax.value_and_grad(loss)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def step(carry, t):
+        p, m, v = carry
+        _, g = grad_fn(p)
+        m = jax.tree.map(lambda mi, gi: b1 * mi + (1 - b1) * gi, m, g)
+        v = jax.tree.map(lambda vi, gi: b2 * vi + (1 - b2) * gi * gi, v, g)
+        mh = jax.tree.map(lambda mi: mi / (1 - b1 ** (t + 1.0)), m)
+        vh = jax.tree.map(lambda vi: vi / (1 - b2 ** (t + 1.0)), v)
+        p = jax.tree.map(lambda pi, mi, vi: pi - lr * mi / (jnp.sqrt(vi) + eps), p, mh, vh)
+        # clamp to a numerically safe band: noiseless smooth targets push
+        # noise->0 / var->inf, and the f32 Cholesky NaNs past cond ~1e7
+        p = GPParams(
+            log_ls=jnp.clip(p.log_ls, -3.0, 3.5),
+            log_var=jnp.clip(p.log_var, -3.0, 3.0),
+            log_noise=jnp.clip(p.log_noise, -7.0, 2.0),
+        )
+        return (p, m, v), None
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    (params, _, _), _ = jax.lax.scan(step, (params, zeros, zeros), jnp.arange(steps))
+    return params
+
+
+@jax.jit
+def _posterior_cache(params: GPParams, x, y, mask):
+    def one(log_ls, log_var, log_noise, yi):
+        n = x.shape[0]
+        K = _kernel((log_ls, log_var), x, x) + (jnp.exp(log_noise) + JITTER) * jnp.eye(n)
+        K = K + jnp.diag(1e6 * mask)
+        L = jnp.linalg.cholesky(K)
+        alpha = jax.scipy.linalg.cho_solve((L, True), yi)
+        return L, alpha
+
+    return jax.vmap(one, in_axes=(0, 0, 0, 1))(
+        params.log_ls, params.log_var, params.log_noise, y)
+
+
+def fit_gp(x: jnp.ndarray, y: jnp.ndarray, steps: int = 200,
+           params: GPParams | None = None, bucket: int = 8) -> GPState:
+    """Fit m independent GPs on (x [n,d], y [n,m]); y standardized internally.
+
+    Training sets are padded to multiples of ``bucket`` with inert rows
+    (masked by a huge per-point noise) so the BO loop's growing-n refits hit
+    the jit cache (O(log T) compiles instead of O(T))."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    n = x.shape[0]
+    pad = (-n) % bucket
+    mask = jnp.concatenate([jnp.zeros((n,)), jnp.full((pad,), 1.0)])
+    if pad:
+        x = jnp.concatenate([x, jnp.tile(x[-1:], (pad, 1)) + 10.0], axis=0)
+        y = jnp.concatenate([y, jnp.tile(y[-1:], (pad, 1))], axis=0)
+    m, d = y.shape[1], x.shape[1]
+    y_mean, y_std = y.mean(0), y.std(0) + 1e-9
+    yn = (y - y_mean) / y_std
+    if params is None:
+        params = GPParams(
+            log_ls=jnp.zeros((m, d)) - 0.5,
+            log_var=jnp.zeros((m,)),
+            log_noise=jnp.zeros((m,)) - 4.0,
+        )
+    params = _fit(params, x, yn, mask, steps=steps)
+    chol, alpha = _posterior_cache(params, x, yn, mask)
+    return GPState(params, x, yn, y_mean, y_std, chol, alpha)
+
+
+@jax.jit
+def gp_predict(state: GPState, xq: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Posterior mean/std at query points, de-standardized. Returns ([q,m],[q,m])."""
+
+    def one(log_ls, log_var, L, alpha):
+        Ks = _kernel((log_ls, log_var), state.x, xq)  # [n, q]
+        mean = Ks.T @ alpha
+        Vs = jax.scipy.linalg.solve_triangular(L, Ks, lower=True)
+        var = jnp.exp(log_var) - jnp.sum(Vs * Vs, axis=0)
+        return mean, jnp.sqrt(jnp.maximum(var, 1e-10))
+
+    mean, std = jax.vmap(one)(state.params.log_ls, state.params.log_var,
+                              state.chol, state.alpha)
+    return (mean.T * state.y_std + state.y_mean, std.T * state.y_std)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def gp_joint_samples(state: GPState, xq: jnp.ndarray, key: jax.Array,
+                     s: int = 10) -> jnp.ndarray:
+    """``s`` joint posterior samples at ``xq`` [q,d] -> [s, q, m].
+
+    Used for Monte-Carlo Pareto-frontier sampling in the acquisition (Eq. 7):
+    a joint draw needs the full q×q posterior covariance Cholesky — that is
+    MXU-shaped work on TPU and the reason ``xq`` is a subsampled candidate
+    set in the tuner."""
+
+    def one(log_ls, log_var, L, alpha, k):
+        q = xq.shape[0]
+        Ks = _kernel((log_ls, log_var), state.x, xq)  # [n, q]
+        Kqq = _kernel((log_ls, log_var), xq, xq)
+        mean = Ks.T @ alpha
+        Vs = jax.scipy.linalg.solve_triangular(L, Ks, lower=True)
+        cov = Kqq - Vs.T @ Vs
+        # prior-scaled jitter: the f32 subtraction leaves small negative
+        # eigenvalues when the posterior collapses (long lengthscales);
+        # 1e-4 x prior variance dominates them at every hyperparameter
+        jit = 1e-4 * jnp.exp(log_var) + 1e-6
+        Lq = jnp.linalg.cholesky(cov + jit * jnp.eye(q))
+        eps = jax.random.normal(k, (q, s))
+        return mean[:, None] + Lq @ eps  # [q, s]
+
+    keys = jax.random.split(key, state.y.shape[1])
+    samp = jax.vmap(one)(state.params.log_ls, state.params.log_var,
+                         state.chol, state.alpha, keys)  # [m, q, s]
+    samp = jnp.transpose(samp, (2, 1, 0))  # [s, q, m]
+    return samp * state.y_std[None, None, :] + state.y_mean[None, None, :]

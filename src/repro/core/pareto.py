@@ -1,0 +1,121 @@
+"""Pareto-set machinery (paper Definitions 2-3, Problem 1, Eq. 12).
+
+Convention: **all objectives are minimized** in user space (latency, power,
+area). Internal BO code negates where it needs "bigger is better".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dominance_counts", "pareto_mask", "pareto_front", "adrs", "hypervolume",
+    "nondominated_sort",
+]
+
+
+def dominance_counts(y: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
+    """Number of points that strictly dominate each row of ``y`` [N, m].
+
+    A point q dominates p (minimization) iff all(q <= p) and any(q < p)
+    (Definition 3 / Eq. (1) with the inequality direction flipped to
+    minimization, as used in the paper's experiments).
+    """
+    if use_kernel:
+        from repro.kernels.pareto_count import ops as _ops
+
+        return _ops.dominance_counts(y)
+    le = jnp.all(y[:, None, :] <= y[None, :, :], axis=-1)  # le[q,p]: q<=p all dims
+    lt = jnp.any(y[:, None, :] < y[None, :, :], axis=-1)
+    dom = jnp.logical_and(le, lt)
+    return jnp.sum(dom, axis=0)
+
+
+def pareto_mask(y: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
+    """Boolean mask [N] of non-dominated points (the Pareto optimal set)."""
+    return dominance_counts(y, use_kernel=use_kernel) == 0
+
+
+def pareto_front(y: np.ndarray) -> np.ndarray:
+    """Rows of ``y`` forming the Pareto front, sorted by first objective."""
+    y = np.asarray(y)
+    mask = np.asarray(pareto_mask(jnp.asarray(y)))
+    front = y[mask]
+    return front[np.argsort(front[:, 0])]
+
+
+def nondominated_sort(y: np.ndarray, max_fronts: int = 32) -> np.ndarray:
+    """NSGA-style front index per point (0 = Pareto front). Used by baselines."""
+    y = np.asarray(y)
+    rank = np.full(y.shape[0], -1, dtype=np.int32)
+    remaining = np.arange(y.shape[0])
+    for r in range(max_fronts):
+        if remaining.size == 0:
+            break
+        mask = np.asarray(pareto_mask(jnp.asarray(y[remaining])))
+        rank[remaining[mask]] = r
+        remaining = remaining[~mask]
+    rank[rank < 0] = max_fronts
+    return rank
+
+
+def adrs(reference: np.ndarray, learned: np.ndarray,
+         normalizer: np.ndarray | None = None) -> float:
+    """Average Distance to Reference Set (Eq. 12).
+
+    ``ADRS(Γ, Ω) = (1/|Γ|) Σ_{γ∈Γ} min_{ω∈Ω} ||γ - ω||₂`` — for every point of
+    the *real* Pareto set Γ, the distance to the closest *learned* point.
+    Metrics are scale-normalized first (per-dimension range of Γ) so latency in
+    cycles does not drown area in mm².
+    """
+    ref = np.asarray(reference, dtype=np.float64)
+    lrn = np.asarray(learned, dtype=np.float64)
+    if ref.size == 0 or lrn.size == 0:
+        return float("inf")
+    if normalizer is None:
+        normalizer = np.maximum(ref.max(axis=0) - ref.min(axis=0), 1e-12)
+    ref = ref / normalizer
+    lrn = lrn / normalizer
+    d = np.linalg.norm(ref[:, None, :] - lrn[None, :, :], axis=-1)
+    return float(d.min(axis=1).mean())
+
+
+def hypervolume(front: np.ndarray, ref_point: np.ndarray) -> float:
+    """Dominated hypervolume for minimization, exact for m<=3 (sweep), used by
+    the EHVI-style baseline and reporting. Points beyond ``ref_point`` are
+    clipped out."""
+    f = np.asarray(front, dtype=np.float64)
+    r = np.asarray(ref_point, dtype=np.float64)
+    f = f[np.all(f <= r, axis=1)]
+    if f.size == 0:
+        return 0.0
+    m = f.shape[1]
+    if m == 1:
+        return float(r[0] - f[:, 0].min())
+    if m == 2:
+        mask = np.asarray(pareto_mask(jnp.asarray(f)))
+        p = f[mask]
+        p = p[np.argsort(p[:, 0])]
+        hv, prev_y = 0.0, r[1]
+        for x, y in p:
+            hv += (r[0] - x) * (prev_y - y)
+            prev_y = y
+        return float(hv)
+    if m == 3:
+        # Sweep over sorted z; 2D hypervolume of the slab between z-levels.
+        mask = np.asarray(pareto_mask(jnp.asarray(f)))
+        p = f[mask]
+        order = np.argsort(p[:, 2])
+        p = p[order]
+        hv = 0.0
+        zs = list(p[:, 2]) + [r[2]]
+        active: list[np.ndarray] = []
+        for i in range(len(p)):
+            active.append(p[i, :2])
+            dz = zs[i + 1] - zs[i]
+            if dz <= 0:
+                continue
+            hv += hypervolume(np.asarray(active), r[:2]) * dz
+        return float(hv)
+    raise NotImplementedError("hypervolume only implemented for m<=3")

@@ -1,0 +1,109 @@
+"""Algorithm 2 — SoC-Init(X, u, b, v, v_th): importance-guided TED init.
+
+Line 1 prunes (pins) unimportant features; line 2 maps the candidate pool to
+ICD space ``x' = v ⊙ x``; lines 3-8 run Transductive Experimental Design
+(Yu, Bi & Tresp, ICML'06) greedily: pick the point whose kernel column has the
+largest energy, then deflate the kernel matrix with the rank-1 downdate.
+
+The paper writes Φ(.) as "Euclidean distance"; TED's selection rule is only
+meaningful on a *similarity* kernel (the diagonal of a distance matrix is 0,
+which would make the normalizer constant and the downdate divide by µ alone).
+As in BOOM-Explorer — the paper's own reference [9] for this component — we
+build K as a Gaussian kernel over those Euclidean distances with a
+median-heuristic bandwidth. Recorded in DESIGN.md §1 fidelity notes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .space import DesignSpace
+
+__all__ = ["soc_init", "ted_select", "transform_to_icd", "median_bandwidth"]
+
+
+def transform_to_icd(space: DesignSpace, idx: jnp.ndarray, v: np.ndarray) -> jnp.ndarray:
+    """Line 2: X' = { v ⊙ x } over normalized features (Fig. 3 transform).
+
+    ``v`` is rescaled so max(v)=1: the paper's toy example moves unimportant
+    features *closer* while keeping important ones in place; sum-normalized v
+    would shrink every dimension with d=26 and break the GP's unit-scale
+    priors."""
+    v = np.asarray(v, dtype=np.float32)
+    v = v / max(v.max(), 1e-12)
+    return space.encode(idx) * jnp.asarray(v)[None, :]
+
+
+def median_bandwidth(x: jnp.ndarray) -> float:
+    """Median pairwise distance heuristic for the TED kernel bandwidth."""
+    d2 = pairwise_sqdist(x, x)
+    n = x.shape[0]
+    off = d2[jnp.triu_indices(n, 1)] if n > 1 else d2.reshape(-1)
+    med = jnp.sqrt(jnp.maximum(jnp.median(off), 1e-12))
+    return float(med)
+
+
+def pairwise_sqdist(a: jnp.ndarray, b: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
+    """‖a_i − b_j‖² via the MXU-friendly ‖a‖²+‖b‖²−2ab form."""
+    if use_kernel:
+        from repro.kernels.pairdist import ops as _ops
+
+        return _ops.pairwise_sqdist(a, b)
+    aa = jnp.sum(a * a, axis=-1)
+    bb = jnp.sum(b * b, axis=-1)
+    ab = a @ b.T
+    return jnp.maximum(aa[:, None] + bb[None, :] - 2.0 * ab, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def _ted_loop(K: jnp.ndarray, b: int, mu: float) -> jnp.ndarray:
+    """Greedy TED: lines 4-8 of Algorithm 2, as a lax.fori_loop."""
+
+    def body(_, carry):
+        K, chosen, step = carry
+        norm = jnp.sum(K * K, axis=0)  # ||K_x||² (column energy)
+        score = norm / (jnp.diagonal(K) + mu)  # line 5
+        # Mask already-chosen points.
+        taken = jnp.zeros(K.shape[0], dtype=bool).at[chosen].set(True, mode="drop")
+        score = jnp.where(taken, -jnp.inf, score)
+        z = jnp.argmax(score)
+        Kz = K[:, z]
+        K = K - jnp.outer(Kz, Kz) / (K[z, z] + mu)  # line 7 downdate
+        chosen = chosen.at[step].set(z)
+        return K, chosen, step + 1
+
+    # Sentinel = N (out of bounds) so the scatter with mode="drop" ignores
+    # not-yet-chosen slots; -1 would wrap to the last row.
+    chosen0 = jnp.full((b,), K.shape[0], dtype=jnp.int32)
+    _, chosen, _ = jax.lax.fori_loop(0, b, body, (K, chosen0, 0))
+    return chosen
+
+
+def ted_select(x: jnp.ndarray, b: int, mu: float = 0.1,
+               bandwidth: float | None = None,
+               use_kernel: bool = False) -> np.ndarray:
+    """Select ``b`` maximally informative rows of ``x`` [N, d] (TED)."""
+    if bandwidth is None:
+        bandwidth = median_bandwidth(x)
+    d2 = pairwise_sqdist(x, x, use_kernel=use_kernel)
+    K = jnp.exp(-d2 / (2.0 * bandwidth**2 + 1e-12))
+    return np.asarray(_ted_loop(K, b, float(mu)))
+
+
+def soc_init(space: DesignSpace, pool_idx: np.ndarray, v: np.ndarray,
+             v_th: float, b: int, mu: float = 0.1,
+             use_kernel: bool = False) -> tuple[np.ndarray, DesignSpace, jnp.ndarray]:
+    """Full Algorithm 2 over a candidate pool.
+
+    Returns ``(init_rows, pruned_space, pool_icd)`` where ``init_rows`` indexes
+    into ``pool_idx`` and ``pool_icd`` is the whole pool mapped to ICD space
+    (reused by the tuner as the GP feature matrix).
+    """
+    pruned = space.prune(np.asarray(v), v_th)  # line 1
+    pool_pruned = pruned.apply_pins(jnp.asarray(pool_idx))
+    pool_icd = transform_to_icd(space, pool_pruned, v)  # line 2
+    rows = ted_select(pool_icd, b=b, mu=mu, use_kernel=use_kernel)  # lines 3-8
+    return rows, pruned, pool_icd

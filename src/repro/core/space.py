@@ -1,0 +1,173 @@
+"""SoC design space (paper TABLE I).
+
+A design point is a vector of integer *candidate indices*, one per feature.
+``DesignSpace.encode`` maps index vectors to normalized float features used by
+every distance-based algorithm (ICD, TED, GP). Numeric features are normalized
+in log2 space (almost all candidates are powers of two); categorical features
+(HostCore, Dataflow) are normalized ordinal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Feature", "DesignSpace", "TABLE_I", "make_space"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Feature:
+    """One row of TABLE I."""
+
+    name: str
+    values: tuple[float, ...]  # candidate values (categoricals use ordinal codes)
+    group: str  # component group, for reporting (Fig. 5 grouping)
+    categorical: bool = False
+
+    @property
+    def t(self) -> int:  # number of candidates (``t_i`` in Alg. 1)
+        return len(self.values)
+
+
+# Candidate tables, verbatim from TABLE I of the paper. Categorical codes:
+#   HostCore: 0=c1 (LargeBoom), 1=c2 (LargeRocket), 2=c3 (MedRocket)
+#   Dataflow: 0=WS, 1=OS, 2=BOTH
+TABLE_I: tuple[Feature, ...] = (
+    Feature("HostCore", (0, 1, 2), "cpu_l2", categorical=True),
+    Feature("L2Bank", (1, 2, 4), "cpu_l2"),
+    Feature("L2Way", (4, 8, 16), "cpu_l2"),
+    Feature("L2Capa", (128, 256, 512), "cpu_l2"),  # KiB per bank
+    Feature("TileRow", (1, 2, 4, 8), "systolic"),
+    Feature("TileCol", (1, 2, 4, 8), "systolic"),
+    Feature("MeshRow", (8, 16, 32, 64), "systolic"),
+    Feature("MeshCol", (8, 16, 32, 64), "systolic"),
+    Feature("Dataflow", (0, 1, 2), "systolic", categorical=True),
+    Feature("InputType", (8, 16, 32), "systolic"),
+    Feature("AccType", (8, 16, 32), "systolic"),
+    Feature("OutType", (8, 20, 32), "systolic"),
+    Feature("SpBank", (4, 8, 16, 32), "acc_mem"),
+    Feature("SpCapa", (64, 128, 256, 512), "acc_mem"),  # rows per bank
+    Feature("AccBank", (1, 2, 4, 8), "acc_mem"),
+    Feature("AccCapa", (64, 128, 256, 512), "acc_mem"),  # rows per bank
+    Feature("LdQueue", (2, 4, 8, 16), "controller"),
+    Feature("StQueue", (2, 4, 8, 16), "controller"),
+    Feature("ExQueue", (2, 4, 8, 16), "controller"),
+    Feature("LdRes", (2, 4, 8, 16), "controller"),
+    Feature("StRes", (2, 4, 8, 16), "controller"),
+    Feature("ExRes", (2, 4, 8, 16), "controller"),
+    Feature("MemReq", (16, 32, 64), "rocc"),
+    Feature("DMABus", (32, 64, 128), "rocc"),  # bits
+    Feature("DMABytes", (32, 64, 128), "rocc"),  # burst bytes
+    Feature("TLBSize", (4, 8, 16), "rocc"),
+)
+
+
+class DesignSpace:
+    """The (possibly pruned) cartesian design space over ``features``.
+
+    ``pinned`` maps feature index -> pinned candidate index (Alg. 2 line 1:
+    unimportant features are fixed to their median candidate).
+    """
+
+    def __init__(self, features: Sequence[Feature] = TABLE_I,
+                 pinned: dict[int, int] | None = None):
+        self.features = tuple(features)
+        self.d = len(self.features)
+        self.pinned = dict(pinned or {})
+        self.t = np.array([f.t for f in self.features], dtype=np.int32)
+        # Precompute normalized candidate value tables, padded to max t.
+        tmax = int(self.t.max())
+        norm = np.zeros((self.d, tmax), dtype=np.float32)
+        for i, f in enumerate(self.features):
+            vals = np.asarray(f.values, dtype=np.float64)
+            if f.categorical:
+                x = vals / max(1.0, vals.max())
+            else:
+                lv = np.log2(np.maximum(vals, 1e-9))
+                lo, hi = lv.min(), lv.max()
+                x = (lv - lo) / max(hi - lo, 1e-9)
+            norm[i, : f.t] = x
+        self._norm_table = jnp.asarray(norm)
+        self._tmax = tmax
+
+    # ------------------------------------------------------------------ size
+    @property
+    def log10_size(self) -> float:
+        """log10 of the number of design points in the (pruned) space."""
+        s = 0.0
+        for i, f in enumerate(self.features):
+            if i not in self.pinned:
+                s += math.log10(f.t)
+        return s
+
+    def pruned_fraction(self, base: "DesignSpace | None" = None) -> float:
+        """Fraction of design points removed relative to ``base`` (Alg. 2)."""
+        base = base or DesignSpace(self.features)
+        return 1.0 - 10.0 ** (self.log10_size - base.log10_size)
+
+    # -------------------------------------------------------------- sampling
+    def sample(self, key: jax.Array, n: int) -> jnp.ndarray:
+        """Uniformly sample ``n`` index vectors [n, d] (int32), honoring pins."""
+        keys = jax.random.split(key, self.d)
+        cols = []
+        for i, f in enumerate(self.features):
+            if i in self.pinned:
+                cols.append(jnp.full((n,), self.pinned[i], dtype=jnp.int32))
+            else:
+                cols.append(jax.random.randint(keys[i], (n,), 0, f.t, dtype=jnp.int32))
+        return jnp.stack(cols, axis=1)
+
+    def apply_pins(self, idx: jnp.ndarray) -> jnp.ndarray:
+        """Project index vectors into the pruned space (pin columns)."""
+        idx = jnp.asarray(idx)
+        for i, j in self.pinned.items():
+            idx = idx.at[..., i].set(j)
+        return idx
+
+    # -------------------------------------------------------------- encoding
+    def encode(self, idx: jnp.ndarray) -> jnp.ndarray:
+        """Index vectors [..., d] -> normalized float features [..., d] in [0,1]."""
+        idx = jnp.asarray(idx, dtype=jnp.int32)
+        cols = jnp.arange(self.d)
+        return self._norm_table[cols, idx]  # broadcasts over leading dims
+
+    def values(self, idx: np.ndarray) -> np.ndarray:
+        """Index vectors -> raw candidate values (float64), for the SoC model."""
+        idx = np.asarray(idx)
+        out = np.zeros(idx.shape, dtype=np.float64)
+        for i, f in enumerate(self.features):
+            out[..., i] = np.asarray(f.values)[idx[..., i]]
+        return out
+
+    def names(self) -> list[str]:
+        return [f.name for f in self.features]
+
+    def feature_index(self, name: str) -> int:
+        return self.names().index(name)
+
+    # -------------------------------------------------------------- pruning
+    def prune(self, v: np.ndarray, v_th: float) -> "DesignSpace":
+        """Alg. 2 line 1: pin features with importance below ``v_th`` to the
+        median candidate."""
+        v = np.asarray(v)
+        pinned = dict(self.pinned)
+        for i, f in enumerate(self.features):
+            if i not in pinned and v[i] < v_th:
+                pinned[i] = (f.t - 1) // 2  # medium(.) of the ordered candidates
+        return DesignSpace(self.features, pinned)
+
+    def describe(self) -> str:
+        rows = []
+        for i, f in enumerate(self.features):
+            pin = (f" PINNED={f.values[self.pinned[i]]}" if i in self.pinned else "")
+            rows.append(f"{f.name:<10s} {f.group:<10s} {f.values}{pin}")
+        return "\n".join(rows)
+
+
+def make_space() -> DesignSpace:
+    """The full TABLE I space."""
+    return DesignSpace(TABLE_I)

@@ -1,0 +1,152 @@
+"""Algorithm 3 — SoC-Tuner(X, T, n, u, b, v_th): the full exploration loop.
+
+Operates over a finite candidate *pool* (the paper's experiments sample 2500
+design points and treat their flow metrics as the metric space); the flow is
+any callable ``idx [k,d] -> y [k,m]`` — the bundled VLSI-flow surrogate, the
+simplified analytical model, or a real flow runner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .acquisition import imoo_scores
+from .gp import fit_gp
+from .icd import icd_from_data
+from .pareto import adrs, pareto_mask
+from .sampling import soc_init
+from .space import DesignSpace
+
+__all__ = ["TunerResult", "soc_tuner"]
+
+FlowFn = Callable[[np.ndarray], np.ndarray]
+
+
+@dataclasses.dataclass
+class TunerResult:
+    space: DesignSpace                # pruned space actually explored
+    v: np.ndarray                     # ICD importance vector (Alg. 1)
+    evaluated_rows: np.ndarray        # pool-row indices, in evaluation order
+    y: np.ndarray                     # metrics for evaluated rows [k, m]
+    pareto_rows: np.ndarray           # subset of evaluated_rows on the front
+    pareto_y: np.ndarray              # their metrics (the learned Y*)
+    history: list[dict]               # per-round log (for ADRS curves)
+    wall_s: float
+
+    def pareto_idx(self, pool_idx: np.ndarray) -> np.ndarray:
+        """Design-point index vectors X* restored to the original space
+        (Alg. 3 line 11)."""
+        return np.asarray(pool_idx)[self.pareto_rows]
+
+
+def _front(y: np.ndarray) -> np.ndarray:
+    return np.asarray(pareto_mask(jnp.asarray(np.asarray(y, np.float64))))
+
+
+def soc_tuner(
+    space: DesignSpace,
+    pool_idx: np.ndarray,
+    flow: FlowFn,
+    *,
+    T: int = 40,
+    n: int = 30,
+    mu: float = 0.1,
+    b: int = 20,
+    v_th: float = 0.07,
+    s_frontiers: int = 10,
+    frontier_subset: int = 512,
+    gp_steps: int = 150,
+    key: jax.Array | None = None,
+    reference_front: np.ndarray | None = None,
+    reuse_icd_trials: bool = True,
+    use_kernels: bool = False,
+    verbose: bool = False,
+) -> TunerResult:
+    """Run SoC-Tuner over ``pool_idx`` [N, d] candidate designs.
+
+    Follows Algorithm 3 line by line; ``reference_front`` (the real Pareto
+    front of the pool, if known) enables per-round ADRS logging for Fig. 7(a).
+    """
+    t0 = time.time()
+    key = jax.random.PRNGKey(0) if key is None else key
+    pool_idx = np.asarray(pool_idx)
+    N = pool_idx.shape[0]
+
+    # Line 1: v = ICD(X, n). Trials are drawn from the pool so their metrics
+    # can seed the GP (the paper's flow budget accounting does the same: the
+    # n importance trials are real evaluations).
+    k_icd, k_init, key = jax.random.split(key, 3)
+    trial_rows = np.asarray(
+        jax.random.choice(k_icd, N, shape=(min(n, N),), replace=False))
+    trial_y = np.asarray(flow(pool_idx[trial_rows]))
+    v = icd_from_data(space, pool_idx[trial_rows], trial_y)
+
+    # Line 2: Z = SoC-Init(X, µ, b, v, v_th)   (prune + ICD transform + TED)
+    init_rows, pruned, pool_icd = soc_init(
+        space, pool_idx, v, v_th=v_th, b=b, mu=mu, use_kernel=use_kernels)
+    pool_icd = jnp.asarray(pool_icd, jnp.float32)
+
+    # Line 4: y <- VLSIFlow(Z)
+    evaluated: list[int] = list(dict.fromkeys(int(r) for r in init_rows))
+    y_list: list[np.ndarray] = [np.asarray(flow(pool_idx[np.asarray(evaluated)]))]
+    if reuse_icd_trials:
+        fresh = [int(r) for r in trial_rows if int(r) not in set(evaluated)]
+        evaluated = evaluated + fresh
+        keep = [i for i, r in enumerate(trial_rows) if int(r) in set(fresh)]
+        y_list.append(trial_y[keep])
+    y = np.concatenate(y_list, axis=0)
+
+    history: list[dict] = []
+    params = None
+
+    def log_round(i: int):
+        front = _front(y)
+        rec = {"round": i, "evaluations": len(evaluated),
+               "pareto_size": int(front.sum())}
+        if reference_front is not None:
+            rec["adrs"] = adrs(reference_front, y[front])
+        history.append(rec)
+        if verbose:
+            print(f"[soc-tuner] round {i:3d} evals={rec['evaluations']:4d} "
+                  f"front={rec['pareto_size']:3d}"
+                  + (f" adrs={rec['adrs']:.4f}" if "adrs" in rec else ""))
+
+    log_round(0)
+
+    # Lines 5-10: BO loop.
+    for it in range(T):
+        key, k_fit, k_acq, k_sub = jax.random.split(key, 4)
+        rows = np.asarray(evaluated)
+        x_train = pool_icd[rows]
+        # Negate: paper metrics are minimized, MES maximizes.
+        state = fit_gp(x_train, jnp.asarray(-y, jnp.float32), steps=gp_steps)
+
+        # Frontier sampling over a subset (O(q³) Cholesky), scoring over all.
+        if N > frontier_subset:
+            sub = np.asarray(jax.random.choice(
+                k_sub, N, shape=(frontier_subset,), replace=False))
+            frontier_cand = pool_icd[sub]
+        else:
+            frontier_cand = pool_icd
+        scores = np.array(imoo_scores(
+            state, pool_icd, k_acq, s=s_frontiers, frontier_cand=frontier_cand))
+        scores[rows] = -np.inf  # never re-evaluate
+        nxt = int(np.argmax(scores))  # Line 7 (Eq. 10/11, maximize — see notes)
+
+        # Line 8: evaluate and append.
+        y_new = np.asarray(flow(pool_idx[nxt][None, :]))
+        evaluated.append(nxt)
+        y = np.concatenate([y, y_new], axis=0)
+        log_round(it + 1)
+
+    front = _front(y)
+    rows = np.asarray(evaluated)
+    return TunerResult(
+        space=pruned, v=np.asarray(v), evaluated_rows=rows, y=y,
+        pareto_rows=rows[front], pareto_y=y[front], history=history,
+        wall_s=time.time() - t0)

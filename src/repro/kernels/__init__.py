@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated with interpret=True off-TPU).
+
+- ``pairdist``      tiled ||xi-xj||^2 with fused RBF (TED + GP kernel matrices)
+- ``pareto_count``  tiled Pareto dominance counting
+- ``systolic_eval`` batched SoC cost-model evaluation (the "VLSI flow" on TPU)
+- ``flash_attn``    causal flash attention (LM prefill hot loop)
+"""
+from . import common  # noqa: F401
+
+__all__ = ["common", "pairdist", "pareto_count", "systolic_eval", "flash_attn"]

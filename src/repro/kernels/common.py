@@ -1,0 +1,31 @@
+"""Shared kernel plumbing: interpret-mode fallback + padding helpers.
+
+TPU is the *target*; this container is CPU-only, so every ``ops.py`` wrapper
+runs the kernel with ``interpret=True`` off-TPU (the kernel body executes in
+Python with real BlockSpec tiling semantics) and compiled on real hardware.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["use_interpret", "pad_to", "cdiv"]
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to(x: jnp.ndarray, multiple: int, axis: int,
+           value: float = 0.0) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: causal flash attention (prefill hot loop).
+
+Grid (batch*heads, q_tiles, k_tiles) with the k dim innermost/sequential;
+running max/sum/accumulator live in VMEM scratch across k steps, the output
+tile is written once at the last k step. [Sq, Sk] logits never exist — the
+same online-softmax contraction the jnp ``_sdpa`` path uses, but with
+MXU-aligned (128, head_dim) tiles and no HBM round-trips for the running
+state. Causality skips nothing (masked compute) — a @pl.when early-out on
+fully-masked tiles is a recorded perf follow-up, not correctness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_Q = 128
+TILE_K = 128
+NEG_INF = -2.0e38
+
+
+def _body(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+          causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [TQ, hd]
+    k = k_ref[0].astype(jnp.float32)                  # [TK, hd]
+    v = v_ref[0].astype(jnp.float32)                  # [TK, hd]
+    logits = jax.lax.dot_general(                     # [TQ, TK]
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    if causal:
+        qpos = qi * TILE_Q + jax.lax.broadcasted_iota(jnp.int32, (TILE_Q, TILE_K), 0)
+        kpos = ki * TILE_K + jax.lax.broadcasted_iota(jnp.int32, (TILE_Q, TILE_K), 1)
+        logits = jnp.where(kpos <= qpos, logits, NEG_INF)
+
+    m_prev = m_scr[...]                               # [TQ, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                       # [TQ, TK]
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    scale: float, causal: bool = True,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q/k/v [BH, S, hd] (S a tile multiple, hd a lane multiple)."""
+    BH, S, hd = q.shape
+    grid = (BH, S // TILE_Q, S // TILE_K)
+    return pl.pallas_call(
+        functools.partial(_body, scale=scale, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TILE_Q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, TILE_K, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, TILE_K, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_Q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((TILE_Q, 1)),
+            _vmem((TILE_Q, 1)),
+            _vmem((TILE_Q, hd)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

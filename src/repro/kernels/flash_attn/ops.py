@@ -1,0 +1,31 @@
+"""jit wrapper: [B,S,H,hd] <-> [BH,S,hd] layout + tile padding."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, use_interpret
+from .kernel import TILE_Q, flash_attention as _kernel
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True) -> jnp.ndarray:
+    """q/k/v [B, S, H, hd] (k/v already repeated to H heads)."""
+    B, S, H, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+
+    def fold(t):
+        t = jnp.moveaxis(t, 2, 1).reshape(B * H, S, t.shape[-1])
+        t = pad_to(t, TILE_Q, axis=1)
+        return pad_to(t, 128, axis=2)
+
+    out = _kernel(fold(q), fold(k), fold(v), scale=scale, causal=causal,
+                  interpret=use_interpret())
+    out = out[:, :S, :hd].reshape(B, H, S, hd)
+    return jnp.moveaxis(out, 1, 2)

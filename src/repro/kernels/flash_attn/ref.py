@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: materialized-softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, scale: float,
+              causal: bool = True) -> jnp.ndarray:
+    """q/k/v [BH, S, hd]."""
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        S = q.shape[1]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask[None], logits, -2.0e38)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: tiled pairwise squared distance + fused RBF kernel.
+
+TED initialization (Alg. 2) and the GP surrogate both consume kernel matrices
+K[i,j] = exp(-||xi-xj||² / 2σ²) over thousands of candidate designs. The
+cross term -2·xi·xjᵀ is an MXU matmul; fusing the row/col norms and the
+``exp`` into the same VMEM pass writes K once to HBM instead of
+write-D² + read-D² + write-K (3x HBM traffic saved at N=4096: 200MB -> 67MB).
+
+Tiling: 128x128 output tiles (MXU-native), the feature dim D is padded to a
+lane multiple by ``ops.py`` (zero-padding leaves distances unchanged).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_I = 128
+TILE_J = 128
+
+
+def _body(xi_ref, xj_ref, out_ref, *, inv2s2: float, fuse_rbf: bool):
+    xi = xi_ref[...].astype(jnp.float32)           # [TI, D]
+    xj = xj_ref[...].astype(jnp.float32)           # [TJ, D]
+    ii = jnp.sum(xi * xi, axis=-1)[:, None]        # [TI, 1]
+    jj = jnp.sum(xj * xj, axis=-1)[None, :]        # [1, TJ]
+    cross = jax.lax.dot_general(                   # MXU: [TI, TJ]
+        xi, xj, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(ii + jj - 2.0 * cross, 0.0)
+    out_ref[...] = jnp.exp(-d2 * inv2s2) if fuse_rbf else d2
+
+
+def pairdist(x: jnp.ndarray, y: jnp.ndarray, *, bandwidth: float | None = None,
+             interpret: bool = False) -> jnp.ndarray:
+    """x [N, D], y [M, D] (D a lane multiple; N, M tile multiples).
+    Returns exp(-d²/2σ²) when ``bandwidth`` is given, else d²."""
+    N, D = x.shape
+    M = y.shape[0]
+    fuse = bandwidth is not None
+    inv2s2 = 1.0 / (2.0 * bandwidth * bandwidth + 1e-12) if fuse else 0.0
+    grid = (N // TILE_I, M // TILE_J)
+    return pl.pallas_call(
+        functools.partial(_body, inv2s2=inv2s2, fuse_rbf=fuse),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_I, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_J, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_I, TILE_J), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, M), jnp.float32),
+        interpret=interpret,
+    )(x, y)

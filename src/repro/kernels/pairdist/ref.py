@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the pairdist kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sqdist(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    return jnp.maximum(xx + yy - 2.0 * (x @ y.T), 0.0)
+
+
+def rbf(x: jnp.ndarray, y: jnp.ndarray, bandwidth: float) -> jnp.ndarray:
+    d2 = pairwise_sqdist(x.astype(jnp.float32), y.astype(jnp.float32))
+    return jnp.exp(-d2 / (2.0 * bandwidth * bandwidth + 1e-12))

@@ -1,0 +1,18 @@
+"""jit wrapper: +inf row padding (padded rows dominate nothing, are sliced)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, use_interpret
+from .kernel import TILE_I, dominance_counts as _kernel
+
+__all__ = ["dominance_counts"]
+
+
+@jax.jit
+def dominance_counts(y: jnp.ndarray) -> jnp.ndarray:
+    N = y.shape[0]
+    yp = pad_to(y.astype(jnp.float32), TILE_I, axis=0, value=jnp.inf)
+    out = _kernel(yp, interpret=use_interpret())
+    return out[:N, 0]

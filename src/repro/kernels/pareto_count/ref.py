@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for dominance counting (mirrors core.pareto)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dominance_counts(y: jnp.ndarray) -> jnp.ndarray:
+    le = jnp.all(y[:, None, :] <= y[None, :, :], axis=-1)
+    lt = jnp.any(y[:, None, :] < y[None, :, :], axis=-1)
+    return jnp.sum(jnp.logical_and(le, lt), axis=0)

@@ -1,0 +1,18 @@
+"""jit wrapper: row padding (pad designs are evaluated then sliced away)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, use_interpret
+from .kernel import TILE_N, soc_metrics as _kernel
+
+__all__ = ["soc_metrics"]
+
+
+@jax.jit
+def soc_metrics(vals: jnp.ndarray, layers: jnp.ndarray) -> jnp.ndarray:
+    N = vals.shape[0]
+    vp = pad_to(vals.astype(jnp.float32), TILE_N, axis=0, value=1.0)
+    return _kernel(vp, layers.astype(jnp.float32),
+                   interpret=use_interpret())[:N]

@@ -1,0 +1,2 @@
+"""Oracle: the plain-jnp SoC model (the kernel re-tiles this exact math)."""
+from repro.soc.model import soc_metrics  # noqa: F401

@@ -1,0 +1,4 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve CLIs."""
+from .mesh import make_production_mesh, make_mesh_named
+
+__all__ = ["make_production_mesh", "make_mesh_named"]

@@ -1,0 +1,166 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract memory / cost / collective statistics.
+
+This is the proof that the distribution config is coherent at 256/512 chips
+without hardware: sharding mismatches, compile-time OOM, or unsupported
+collectives all fail HERE.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+      --shape train_4k --mesh multi --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --jobs 6 --out results/dryrun
+"""
+# The VERY FIRST lines, before any other import (jax locks the device count
+# at first init). Do NOT move or merge these.
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import subprocess    # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, cell_skip_reason  # noqa: E402
+from repro.launch.hlo_stats import analyze_hlo                # noqa: E402
+from repro.launch.mesh import make_mesh_named                 # noqa: E402
+from repro.launch.specs import build_cell, cell_rules         # noqa: E402
+from repro.parallel.sharding import axis_rules                # noqa: E402
+
+
+def run_cell(arch: str, shape: str, mesh_name: str,
+             overrides: dict | None = None) -> dict:
+    """Lower + compile one cell; return the §Dry-run record."""
+    skip = cell_skip_reason(arch, shape)
+    if skip:
+        return {"arch": arch, "shape": shape, "mesh": mesh_name,
+                "status": "skip", "reason": skip}
+    t0 = time.time()
+    mesh = make_mesh_named(mesh_name)
+    rules_over = cell_rules(SHAPES[shape], arch)
+    if overrides and "rules" in overrides:
+        rules_over = dict(rules_over)
+        rules_over.update({k: tuple(tuple(c) for c in v)
+                           for k, v in overrides["rules"].items()})
+        overrides = {k: v for k, v in overrides.items() if k != "rules"}
+    with mesh, axis_rules(mesh, rules_over) as rules:
+        cell = build_cell(arch, shape, rules, overrides)
+        lowered = jax.jit(cell.fn).lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        stats = analyze_hlo(hlo)
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "status": "ok",
+        "devices": int(n_dev),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # raw XLA numbers (while bodies counted once — see hlo_stats.py)
+        "xla_flops_raw": float(cost.get("flops", -1.0)) if cost else -1.0,
+        "xla_bytes_raw": float(cost.get("bytes accessed", -1.0)) if cost else -1.0,
+        # trip-count-corrected per-device numbers from the HLO walk
+        "dot_flops": stats.dot_flops,
+        "dot_bytes": stats.dot_bytes,
+        "collective_bytes": {k: float(v) for k, v in stats.coll_bytes.items()},
+        "collective_counts": {k: int(v) for k, v in stats.coll_counts.items()},
+        "collective_total": stats.coll_total,
+        "n_params": cell.cfg.n_params(),
+        "n_active_params": cell.cfg.n_active_params(),
+    }
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            rec[attr] = int(v)
+    return rec
+
+
+def _worker_main(argv) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--overrides", default="{}")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+    name = f"{args.arch}__{args.shape}__{args.mesh}.json"
+    path = os.path.join(args.out, name)
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh,
+                       json.loads(args.overrides))
+    except Exception as e:  # recorded, not raised: the runner aggregates
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps({k: v for k, v in rec.items() if k != "trace"}))
+    return 0 if rec.get("status") in ("ok", "skip") else 1
+
+
+def _runner_main(args) -> int:
+    """Launch every cell as a subprocess (isolation + parallelism: a single
+    512-device CPU process serializes XLA compiles; N workers don't)."""
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = [(a, s, m) for a in ARCH_IDS for s in SHAPES for m in meshes]
+    pending = []
+    for a, s, m in cells:
+        path = os.path.join(args.out, f"{a}__{s}__{m}.json")
+        if args.resume and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skip"):
+                    continue
+        pending.append((a, s, m))
+    print(f"[dryrun] {len(pending)} cells to run "
+          f"({len(cells) - len(pending)} cached)")
+    procs: list[tuple[subprocess.Popen, tuple]] = []
+    fails = 0
+    while pending or procs:
+        while pending and len(procs) < args.jobs:
+            a, s, m = pending.pop(0)
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+                   "--shape", s, "--mesh", m, "--out", args.out]
+            procs.append((subprocess.Popen(cmd), (a, s, m)))
+        time.sleep(2.0)
+        alive = []
+        for pr, cell in procs:
+            if pr.poll() is None:
+                alive.append((pr, cell))
+            else:
+                ok = pr.returncode == 0
+                fails += (not ok)
+                print(f"[dryrun] {'ok  ' if ok else 'FAIL'} {cell}")
+        procs = alive
+    print(f"[dryrun] done; {fails} failures")
+    return 1 if fails else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--resume", action="store_true", default=True)
+    ap.add_argument("--overrides", default="{}")
+    args = ap.parse_args()
+    if args.all:
+        return _runner_main(args)
+    return _worker_main(["--arch", args.arch, "--shape", args.shape,
+                         "--mesh", args.mesh, "--out", args.out,
+                         "--overrides", args.overrides])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

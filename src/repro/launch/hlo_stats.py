@@ -1,0 +1,192 @@
+"""Optimized-HLO statistics with while-loop trip-count correction.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any scan-based
+program (layers, microbatches, flash key-chunks) under-reports flops and
+collective traffic by orders of magnitude. This walker parses the optimized
+HLO text into computations, evaluates dot-flops / collective-result-bytes
+bottom-up through fusions+calls, and multiplies while bodies by their trip
+count (max integer constant compared in the loop condition — validated
+against known layer counts in tests).
+
+Outputs per program:
+  dot_flops          2*M*N*K per dot, trip-corrected (per-device)
+  coll_bytes[kind]   result bytes per collective kind, trip-corrected
+  dot_bytes          operand+result bytes of dots (memory-term proxy)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = ["analyze_hlo", "HLOStats"]
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8, "u64": 8,
+                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPKIND_RE = re.compile(r"^\(?[a-z0-9\[\],{}\s/*=]*?\)?\s*([a-z][\w\-]*)\(")
+_CALLEE_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclasses.dataclass
+class HLOStats:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    while_trips: list = dataclasses.field(default_factory=list)
+
+    def add(self, other: "HLOStats", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.dot_bytes += other.dot_bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * mult
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _shapes_of(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _TYPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _nbytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _shapes_of(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: Optional[str] = None
+    entry_alias: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry_alias = cur
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    if entry_alias:
+        comps["__entry__"] = comps[entry_alias]
+    return comps
+
+
+def _dot_flops(attr_str: str, result_shapes, shape_table) -> tuple[float, float]:
+    """flops, bytes for one dot line."""
+    # result elements
+    relems = 1
+    rbytes = 0.0
+    for dt, dims in result_shapes:
+        for d in dims:
+            relems *= d
+        n = 1
+        for d in dims:
+            n *= d
+        rbytes += n * _DTYPE_BYTES[dt]
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", attr_str)
+    ops = _OPERANDS_RE.findall(attr_str.split("),")[0])
+    if not m or not ops:
+        return 2.0 * relems, rbytes
+    lhs_shape = shape_table.get(ops[0])
+    contract = 1
+    if lhs_shape:
+        for i in (int(x) for x in m.group(1).split(",") if x):
+            if i < len(lhs_shape[1]):
+                contract *= lhs_shape[1][i]
+    obytes = sum(_prod_bytes(shape_table.get(o)) for o in ops[:2])
+    return 2.0 * relems * contract, rbytes + obytes
+
+
+def _prod_bytes(shape) -> float:
+    if not shape:
+        return 0.0
+    dt, dims = shape
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def analyze_hlo(text: str) -> HLOStats:
+    comps = _split_computations(text)
+    memo: dict[str, HLOStats] = {}
+
+    def trip_count(cond_name: str) -> float:
+        lines = comps.get(cond_name, [])
+        consts = [int(c) for ln in lines for c in _CONST_RE.findall(ln)]
+        return float(max(consts)) if consts else 1.0
+
+    def visit(name: str, stack: frozenset) -> HLOStats:
+        if name in memo:
+            return memo[name]
+        if name in stack:
+            return HLOStats()
+        stats = HLOStats()
+        shape_table: dict[str, tuple] = {}
+        for line in comps.get(name, []):
+            m = _OP_LINE.match(line)
+            if not m:
+                continue
+            var, rhs = m.group(1), m.group(2)
+            # split "TYPE opkind(operands), attrs"
+            km = _OPKIND_RE.match(rhs)
+            opkind = km.group(1) if km else ""
+            shapes = _shapes_of(rhs.split(opkind + "(")[0]) if opkind else \
+                _shapes_of(rhs)
+            if shapes:
+                shape_table[var] = shapes[0]
+            if opkind == "dot":
+                fl, by = _dot_flops(rhs.split("dot(", 1)[1], shapes, shape_table)
+                stats.dot_flops += fl
+                stats.dot_bytes += by
+            elif opkind.rstrip("-start") in COLLECTIVES or \
+                    opkind.replace("-start", "") in COLLECTIVES:
+                kind = opkind.replace("-start", "")
+                head = rhs.split(opkind + "(")[0]
+                stats.coll_bytes[kind] = stats.coll_bytes.get(kind, 0.0) \
+                    + _nbytes(head)
+                stats.coll_counts[kind] = stats.coll_counts.get(kind, 0.0) + 1
+            elif opkind == "while":
+                cm = re.search(r"condition=%?([\w.\-]+)", rhs)
+                bm = re.search(r"body=%?([\w.\-]+)", rhs)
+                if bm:
+                    trips = trip_count(cm.group(1)) if cm else 1.0
+                    stats.while_trips.append(trips)
+                    stats.add(visit(bm.group(1), stack | {name}), trips)
+            else:
+                for callee in _CALLEE_RE.findall(rhs):
+                    stats.add(visit(callee, stack | {name}), 1.0)
+        memo[name] = stats
+        return stats
+
+    return visit("__entry__", frozenset())

@@ -1,0 +1,42 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state: smoke tests see 1 CPU device; only
+``dryrun.py`` (which sets XLA_FLAGS before any import) sees 512.
+
+Mesh shapes (TPU v5e pods):
+  single-pod : (16, 16)   = 256 chips, axes (data, model)
+  multi-pod  : (2, 16, 16) = 512 chips, axes (pod, data, model)
+``pod`` and ``data`` both carry data parallelism (batch shards over both);
+``model`` carries tensor/expert parallelism. The ``pod`` axis is the slow
+inter-pod hop — gradient compression (``repro.parallel.collectives``)
+targets exactly that axis's all-reduce.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_named"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devs)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(dryrun.py sets this automatically)")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_mesh_named(name: str) -> jax.sharding.Mesh:
+    if name in ("single", "single_pod", "pod"):
+        return make_production_mesh(multi_pod=False)
+    if name in ("multi", "multi_pod", "2pod"):
+        return make_production_mesh(multi_pod=True)
+    raise KeyError(name)

@@ -1,0 +1,223 @@
+"""Abstract program construction for the dry-run: every (arch x shape x mesh)
+cell as (fn, ShapeDtypeStruct inputs with shardings) — no array allocation.
+
+``abstract_init`` / ``abstract_cache`` run the real init code under
+``jax.eval_shape`` (the logical-axes trees come out through a side channel —
+they are Python data, independent of array values), so a 42B-param MoE
+"exists" here as shape metadata only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ArchConfig, ShapeSpec, get_config
+from repro.models import decode_step, init, init_cache, loss_fn, prefill
+from repro.parallel.sharding import AxisRules, axis_rules, current_rules
+from repro.train import TrainConfig, TrainState, make_train_step
+from repro.train.optimizer import tree_zero1_specs
+
+__all__ = ["abstract_init", "abstract_cache", "input_specs", "build_cell",
+           "CELL_PRESETS", "cell_rules"]
+
+
+# -------------------------------------------------- per-cell launch presets
+# microbatch counts chosen so per-chip live activations fit 16G HBM (v5e)
+CELL_PRESETS: dict[tuple[str, str], dict] = {
+    ("phi3.5-moe-42b-a6.6b", "train_4k"): dict(microbatch=8),
+    ("deepseek-v2-lite-16b", "train_4k"): dict(microbatch=4),
+    ("mistral-nemo-12b", "train_4k"): dict(microbatch=4),
+    ("qwen3-14b", "train_4k"): dict(microbatch=4),
+    ("minicpm3-4b", "train_4k"): dict(microbatch=4),
+    ("starcoder2-3b", "train_4k"): dict(microbatch=2),
+    ("recurrentgemma-9b", "train_4k"): dict(microbatch=4),
+    ("pixtral-12b", "train_4k"): dict(microbatch=4),
+    ("mamba2-370m", "train_4k"): dict(microbatch=2),
+    ("whisper-tiny", "train_4k"): dict(microbatch=1),
+}
+
+
+def cell_rules(shape: ShapeSpec, arch: Optional[str] = None) -> dict:
+    """Shape- and arch-dependent rule overrides.
+
+    decode: weights stay *resident* (no ZeRO/FSDP dim — per-token weight
+    all-gathers dominated the §Perf baseline); batch=1 long-context decode
+    additionally shards the cache sequence over (data, model) since the
+    batch axis is unshardable.
+
+    train/prefill on archs whose head count cannot shard 16-way (qwen3 40H,
+    minicpm3 40H, starcoder2 24H): full sequence parallelism — "ff" is
+    disabled so activations stay token-sharded through the MLP and the
+    per-layer activation all-gather/all-reduce pair (the §Perf iteration-3
+    bottleneck, 167 MB x layers x microbatches) disappears in favor of
+    once-per-step weight gathers.
+    """
+    rules: dict = {}
+    if shape.kind == "decode":
+        rules["embed_fsdp"] = ()
+        if shape.global_batch == 1:
+            rules["cache_seq"] = (("data", "model"), ("model",), ("data",))
+    elif arch is not None:
+        cfg = get_config(arch)
+        if cfg.n_heads == 0 or cfg.n_heads % 16 == 0 or cfg.is_encdec:
+            # head-shardable (or attention-free / tiny enc-dec): plain TP;
+            # sequence parallelism only *adds* transitions (§Perf iter. 7
+            # measured a 2x regression on mistral with "seq" active)
+            rules["seq"] = ()
+        else:
+            # sequence-parallel arch; token-sharded MLP (ff disabled) only
+            # pays off when the replicated MLP weights fit comfortably:
+            # minicpm3 6.1GB yes, qwen3 21.4GB no (qwen3 keeps TP MLP with
+            # Megatron-SP all-gather/reduce-scatter transitions instead)
+            mlp_bytes = 3 * cfg.d_model * cfg.d_ff * cfg.n_layers * 2
+            if mlp_bytes < 8e9:
+                rules["ff"] = ()
+    return rules
+
+
+# ------------------------------------------------------------ abstract init
+def abstract_init(cfg: ArchConfig) -> tuple[Any, Any]:
+    store = {}
+
+    def f(key):
+        params, axes = init(cfg, key)
+        store["axes"] = axes
+        return params
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, store["axes"]
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, length: int) -> tuple[Any, Any]:
+    store = {}
+
+    def f():
+        caches, axes = init_cache(cfg, batch, length)
+        store["axes"] = axes
+        return caches
+
+    shapes = jax.eval_shape(f)
+    return shapes, store["axes"]
+
+
+def _shard(tree_shapes: Any, tree_axes: Any, rules: AxisRules) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    def one(axes, s):
+        sh = rules.sharding(axes, s.shape)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+
+    return jax.tree.map(
+        one, tree_axes, tree_shapes,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            a is None or isinstance(a, str) for a in t))
+
+
+def _zero1_shard(tree_shapes: Any, tree_axes: Any, rules: AxisRules) -> Any:
+    specs = tree_zero1_specs(tree_axes, tree_shapes, rules)
+    return jax.tree.map(
+        lambda s, spec: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=(NamedSharding(rules.mesh, spec) if rules.mesh else None)),
+        tree_shapes, specs)
+
+
+def _batch_sds(shape, dtype, rules: AxisRules, axes=("batch",)) -> Any:
+    ax = tuple(axes) + (None,) * (len(shape) - len(axes))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=rules.sharding(ax, shape))
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, rules: AxisRules) -> dict:
+    """ShapeDtypeStruct stand-ins for the data inputs of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {}
+    if shape.kind == "train":
+        batch["tokens"] = _batch_sds((B, S + 1), jnp.int32, rules)
+        if cfg.frontend == "audio":
+            batch["frames"] = _batch_sds((B, cfg.enc_len, cfg.d_model),
+                                         jnp.bfloat16, rules)
+        if cfg.frontend == "vision":
+            batch["images"] = _batch_sds((B, cfg.n_patches, cfg.d_model),
+                                         jnp.bfloat16, rules)
+    elif shape.kind == "prefill":
+        batch["tokens"] = _batch_sds((B, S), jnp.int32, rules)
+        if cfg.frontend == "audio":
+            batch["frames"] = _batch_sds((B, cfg.enc_len, cfg.d_model),
+                                         jnp.bfloat16, rules)
+        if cfg.frontend == "vision":
+            batch["images"] = _batch_sds((B, cfg.n_patches, cfg.d_model),
+                                         jnp.bfloat16, rules)
+    else:  # decode
+        batch["token"] = _batch_sds((B,), jnp.int32, rules)
+        batch["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return batch
+
+
+# ---------------------------------------------------------------- programs
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple
+    cfg: ArchConfig
+
+
+def build_cell(arch: str, shape_name: str, rules: AxisRules,
+               overrides: Optional[dict] = None) -> Cell:
+    """Construct (fn, abstract args) for one dry-run cell. Must be called
+    inside ``axis_rules(mesh, ...)`` so constraints resolve.
+
+    ``overrides`` knobs (the mesh-tuner design space, see
+    examples/mesh_tuner.py): microbatch:int, remat:bool, xent_chunks:int,
+    plus "rules": {logical axis: candidate tuples} handled by the caller.
+    """
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    preset = dict(CELL_PRESETS.get((arch, shape_name), {}))
+    preset.update(overrides or {})
+    if "remat" in preset:
+        cfg = _dc.replace(cfg, remat=bool(preset["remat"]))
+    params_s, params_axes = abstract_init(cfg)
+    batch = input_specs(cfg, shape, rules)
+
+    if shape.kind == "train":
+        micro = preset.get("microbatch", 1)
+        tcfg = TrainConfig(microbatch=micro)
+        step = make_train_step(cfg, tcfg, params_axes)
+        zero = (_zero1_shard(params_s, params_axes, rules)
+                if preset.get("zero1", True)
+                else _shard(params_s, params_axes, rules))
+        state = TrainState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            params=zero,
+            m=zero,
+            v=jax.tree.map(lambda s: s, zero),
+        )
+        ef = jax.tree.map(
+            lambda _: jax.ShapeDtypeStruct((), jnp.float32), params_s)
+        return Cell(arch, shape_name, step, (state, batch, ef), cfg)
+
+    # serving params are bf16 casts with the plain (non-ZeRO) specs
+    p_bf = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if (s.dtype == jnp.float32 and
+                                      len(s.shape) > 1) else s.dtype),
+        params_s)
+    p_bf = _shard(p_bf, params_axes, rules)
+
+    if shape.kind == "prefill":
+        fn = lambda p, b: prefill(p, cfg, b)  # noqa: E731
+        return Cell(arch, shape_name, fn, (p_bf, batch), cfg)
+
+    cache_s, cache_axes = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    cache_s = _shard(cache_s, cache_axes, rules)
+    fn = lambda p, c, t, pos: decode_step(p, cfg, c, t, pos)  # noqa: E731
+    return Cell(arch, shape_name, fn,
+                (p_bf, cache_s, batch["token"], batch["pos"]), cfg)

@@ -1,0 +1,60 @@
+"""Training launcher: ``--arch <id>`` end-to-end driver.
+
+Smoke-scale by default (reduced config, CPU-runnable); ``--full`` selects the
+exact published config (requires the production mesh / real accelerators).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b \
+      --steps 200 --batch 8 --seq 64 --ckpt /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.models import init
+from repro.train import (DataConfig, LRSchedule, TrainConfig, bigram_entropy,
+                         train)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--full", action="store_true",
+                    help="exact published config (needs real accelerators)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--preempt-after", type=int, default=None,
+                    help="fault-tolerance drill: simulate preemption")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch, seed=args.seed)
+    tcfg = TrainConfig(
+        steps=args.steps, microbatch=args.microbatch,
+        lr=LRSchedule(base=args.lr, warmup=max(10, args.steps // 20),
+                      total=args.steps),
+        compress_grads=args.compress_grads,
+        ckpt_dir=args.ckpt, ckpt_every=max(10, args.steps // 5),
+        log_every=max(1, args.steps // 20))
+    print(f"[launch] arch={cfg.arch_id} params~{cfg.n_params()/1e6:.1f}M "
+          f"steps={args.steps} CE floor(bigram)={bigram_entropy(dcfg):.3f}")
+    state, hist = train(cfg, tcfg, dcfg,
+                        lambda: init(cfg, jax.random.PRNGKey(args.seed)),
+                        preempt_after=args.preempt_after)
+    if hist:
+        print(f"[launch] final loss {hist[-1]['loss']:.4f} "
+              f"({hist[-1]['step']} steps, {hist[-1]['wall_s']:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

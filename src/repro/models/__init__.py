@@ -1,0 +1,9 @@
+"""Model substrate: ArchConfig -> JAX init/loss/prefill/decode."""
+from .model import init, loss_fn, prefill, decode_step, init_cache, xent_chunks
+from .layers import cross_entropy, rms_norm, rope
+from . import attention, moe, rglru, ssm
+
+__all__ = [
+    "init", "loss_fn", "prefill", "decode_step", "init_cache", "xent_chunks",
+    "cross_entropy", "rms_norm", "rope", "attention", "moe", "rglru", "ssm",
+]

@@ -1,0 +1,327 @@
+"""Attention variants: GQA (+ sliding window, qk-norm) and MLA (DeepSeek).
+
+Sharding strategy (resolved by ``repro.parallel.sharding`` at lower time):
+* heads divisible by the ``model`` axis  -> head-parallel attention;
+* otherwise (qwen3 40H, minicpm3 40H, starcoder2 24H, whisper 6H) the weights
+  stay replicated/FSDP and the *activations* are sequence-parallel: q is
+  sharded on its sequence dim, k/v are all-gathered — the constraints below
+  express both cases with the same code because a logical axis that fails
+  divisibility resolves to None.
+* decode: the KV (or MLA latent) cache shards on ``cache_seq`` — the
+  flash-decoding split: per-shard partial softmax, combined by the small
+  psums XLA derives from the sharded reduction.
+
+MLA decode uses the **absorbed** formulation (the technique's raison d'etre):
+q_nope is folded through W_uk so attention runs directly over the cached
+latent; W_uv is applied after the attention-weighted latent sum. Cache per
+token = kv_lora + qk_rope floats, independent of head count.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constraint
+from .layers import dense_init, rms_norm, rope, scalar_init
+
+__all__ = ["gqa_init", "gqa_apply", "mla_init", "mla_apply", "KVCache",
+           "MLACache", "init_kv_cache", "init_mla_cache"]
+
+NEG_INF = -2.0e38
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray   # [B, S_cache, K, hd]
+    v: jnp.ndarray   # [B, S_cache, K, hd]
+
+
+class MLACache(NamedTuple):
+    latent: jnp.ndarray  # [B, S_cache, kv_lora]
+    k_rope: jnp.ndarray  # [B, S_cache, qk_rope]
+
+
+# ------------------------------------------------------------------ GQA
+def gqa_init(key: jax.Array, cfg) -> tuple[dict, dict]:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["wq"], a["wq"] = dense_init(ks[0], (d, H, hd), ("embed_fsdp", "heads", "head_dim"))
+    p["wk"], a["wk"] = dense_init(ks[1], (d, K, hd), ("embed_fsdp", "kv_heads", "head_dim"))
+    p["wv"], a["wv"] = dense_init(ks[2], (d, K, hd), ("embed_fsdp", "kv_heads", "head_dim"))
+    p["wo"], a["wo"] = dense_init(ks[3], (H, hd, d), ("heads", "head_dim", "embed_fsdp"))
+    if cfg.qk_norm:
+        p["q_norm"], a["q_norm"] = scalar_init((hd,), (None,))
+        p["k_norm"], a["k_norm"] = scalar_init((hd,), (None,))
+    return p, a
+
+
+def _pick_chunk(sk: int, target: int = 1024, threshold: int = 4096) -> int:
+    """Largest k-chunk <= ~target that divides Sk; 0 = don't chunk."""
+    if sk < threshold:
+        return 0
+    n = -(-sk // target)  # ceil
+    while sk % n:
+        n += 1
+    c = sk // n
+    return c if c < sk else 0
+
+
+def _sdpa(q, k, v, scale, qpos=None, kpos=None, causal=True,
+          window=None, valid_to=None):
+    """Flash-style attention with running softmax over key chunks.
+
+    q [B,Sq,H,hd]; k [B,Sk,H,hd]; v [B,Sk,H,hdv] (GQA callers repeat k/v to
+    H heads first — the repeat fuses into the dot and keeps every einsum dim
+    shardable on whichever of heads/seq resolved). The key dim is processed
+    in chunks with an online max/sum so [Sq, Sk] logits never materialize —
+    this is the memory bound that makes 32k-token prefill lowerable; on real
+    TPU the Pallas ``flash_attn`` kernel replaces this inner loop.
+
+    Masks: ``causal`` uses qpos/kpos [B,Sq]/[B,Sk]; ``window`` adds a
+    sliding-window bound; ``valid_to`` [B] masks decode cache slots > pos.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    hdv = v.shape[-1]
+    qf = q.astype(jnp.float32) * scale
+    # Never chunk single-query (decode) attention: logits [B,H,1,Sk] are
+    # small, and slicing key chunks out of a *sequence-sharded* cache makes
+    # GSPMD all-gather the whole cache (§Perf iteration 1: 437 GB/token on
+    # qwen3 decode_32k). Chunking is a prefill/train memory bound only.
+    chunk = 0 if Sq == 1 else _pick_chunk(Sk)
+
+    def block(kc, vc, kposc):
+        logits = jnp.einsum("bqhd,bshd->bhqs", qf, kc.astype(jnp.float32))
+        mask = None
+        if causal and qpos is not None:
+            mask = kposc[:, None, None, :] <= qpos[:, None, :, None]
+            if window:
+                mask &= kposc[:, None, None, :] > qpos[:, None, :, None] - window
+        if valid_to is not None:
+            vmask = kposc[:, None, None, :] <= valid_to[:, None, None, None]
+            mask = vmask if mask is None else (mask & vmask)
+        if mask is not None:
+            logits = jnp.where(mask, logits, NEG_INF)
+        return logits
+
+    if not chunk:
+        logits = block(k, v, kpos if kpos is not None else
+                       jnp.broadcast_to(jnp.arange(Sk), (B, Sk)))
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqs,bshd->bqhd", w, v.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    nck = Sk // chunk
+    kposs = kpos if kpos is not None else jnp.broadcast_to(
+        jnp.arange(Sk), (B, Sk))
+    kr = jnp.moveaxis(k.reshape(B, nck, chunk, H, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nck, chunk, H, hdv), 1, 0)
+    pr = jnp.moveaxis(kposs.reshape(B, nck, chunk), 1, 0)
+
+    def body(carry, xs):
+        m, s, acc = carry
+        kc, vc, kposc = xs
+        logits = block(kc, vc, kposc)                      # [B,H,Sq,C]
+        cm = jnp.max(logits, axis=-1)
+        new_m = jnp.maximum(m, cm)
+        alpha = jnp.exp(m - new_m)
+        pe = jnp.exp(logits - new_m[..., None])
+        s = s * alpha + pe.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqs,bshd->bhqd", pe, vc.astype(jnp.float32))
+        return (new_m, s, acc), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hdv), jnp.float32)
+    (m, s, acc), _ = jax.lax.scan(body, (m0, s0, a0), (kr, vr, pr))
+    out = acc / jnp.maximum(s, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # [B,Sq,H,hdv]
+
+
+def _repeat_kv(t: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B,S,K,hd] -> [B,S,H,hd] by repeating each kv head H/K times."""
+    K = t.shape[2]
+    if K == n_heads:
+        return t
+    return jnp.repeat(t, n_heads // K, axis=2)
+
+
+def gqa_apply(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+              cache: Optional[KVCache] = None,
+              cache_pos: Optional[jnp.ndarray] = None,
+              causal: bool = True, use_rope: bool = True,
+              ) -> tuple[jnp.ndarray, Optional[KVCache]]:
+    """x [B, S, d]; prefill/train when cache is None (causal), else one-step
+    decode (S == 1) writing in-place at ``cache_pos`` (ring-indexed when the
+    config has a sliding window). ``causal=False``/``use_rope=False`` serve
+    the whisper encoder (bidirectional, absolute positions)."""
+    B, S, d = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(hd)
+
+    if cache is None:  # train / prefill: causal (+window) mask
+        q = constraint(q, "batch", "seq", "heads", None)
+        k = constraint(k, "batch", None, "kv_heads", None)
+        v = constraint(v, "batch", None, "kv_heads", None)
+        out = _sdpa(q, _repeat_kv(k, H), _repeat_kv(v, H), scale,
+                    qpos=positions, kpos=positions, causal=causal,
+                    window=cfg.window)
+        new_cache = None
+        if cache_pos is not None:  # prefill returning a cache
+            new_cache = KVCache(k, v)
+    else:  # decode: S == 1
+        assert S == 1
+        slot = cache_pos % cfg.window if cfg.window else cache_pos
+        k_c = _scatter_time(cache.k, k, slot)
+        v_c = _scatter_time(cache.v, v, slot)
+        S_c = k_c.shape[1]
+        if cfg.window:
+            # ring buffer: every slot below min(pos+1, window) is a valid
+            # (absolute-rope-encoded) key; older slots were overwritten
+            valid_to = jnp.broadcast_to(
+                jnp.minimum(cache_pos, cfg.window - 1), (B,))
+        else:
+            valid_to = jnp.broadcast_to(cache_pos, (B,))
+        out = _sdpa(q, _repeat_kv(k_c, H), _repeat_kv(v_c, H), scale,
+                    causal=False, valid_to=valid_to)
+        new_cache = KVCache(k_c, v_c)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return y, new_cache
+
+
+def _scatter_time(cache: jnp.ndarray, item: jnp.ndarray,
+                  pos: jnp.ndarray) -> jnp.ndarray:
+    """Write item [B,1,...] into cache [B,S,...] at time index ``pos``.
+
+    Deliberately a masked ``where`` rather than dynamic_update_slice: a DUS
+    at a *runtime* position on a sharded time axis makes GSPMD fall back to
+    all-gather + update + reshard (measured 437 GB/token on qwen3
+    decode_32k — EXPERIMENTS.md §Perf iteration 1). The mask compare is
+    shard-local, so the write costs one cache rewrite of HBM bandwidth and
+    zero collective bytes.
+    """
+    S = cache.shape[1]
+    sel = (jnp.arange(S, dtype=jnp.int32) == pos.astype(jnp.int32))
+    sel = sel.reshape((1, S) + (1,) * (cache.ndim - 2))
+    return jnp.where(sel, item.astype(cache.dtype), cache)
+
+
+def init_kv_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16
+                  ) -> tuple[KVCache, KVCache]:
+    """Returns (cache, logical axes)."""
+    L = min(length, cfg.window) if cfg.window else length
+    shape = (batch, L, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("batch", "cache_seq", "kv_heads", None)
+    z = jnp.zeros(shape, dtype)
+    return KVCache(z, z), KVCache(axes, axes)
+
+
+# ------------------------------------------------------------------ MLA
+def mla_init(key: jax.Array, cfg) -> tuple[dict, dict]:
+    d, H = cfg.d_model, cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    if cfg.q_lora:
+        p["wq_a"], a["wq_a"] = dense_init(ks[0], (d, cfg.q_lora), ("embed_fsdp", None))
+        p["wq_b"], a["wq_b"] = dense_init(ks[1], (cfg.q_lora, H, qd), (None, "heads", None))
+    else:
+        p["wq"], a["wq"] = dense_init(ks[0], (d, H, qd), ("embed_fsdp", "heads", None))
+    # joint KV latent down-projection + decoupled rope key
+    p["wkv_a"], a["wkv_a"] = dense_init(
+        ks[2], (d, cfg.kv_lora + cfg.qk_rope_dim), ("embed_fsdp", None))
+    p["wkv_b"], a["wkv_b"] = dense_init(
+        ks[3], (cfg.kv_lora, H, cfg.qk_nope_dim + cfg.v_head_dim),
+        (None, "heads", None))
+    p["wo"], a["wo"] = dense_init(
+        ks[4], (H, cfg.v_head_dim, d), ("heads", None, "embed_fsdp"))
+    p["kv_norm"], a["kv_norm"] = scalar_init((cfg.kv_lora,), (None,))
+    return p, a
+
+
+def _mla_q(p, cfg, x, positions):
+    dt = x.dtype
+    if cfg.q_lora:
+        q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt))
+        q = jnp.einsum("bsr,rhk->bshk", q, p["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+              cache: Optional[MLACache] = None,
+              cache_pos: Optional[jnp.ndarray] = None,
+              ) -> tuple[jnp.ndarray, Optional[MLACache]]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dt = x.dtype
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    latent = rms_norm(kv_a[..., : cfg.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(kv_a[..., None, cfg.kv_lora:], positions, cfg.rope_theta)[:, :, 0]
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+
+    if cache is None:  # train/prefill: naive (un-absorbed) path
+        # replicate the *latent* (kv_lora+rope floats/token) before the
+        # per-head expansion: under sequence parallelism this gathers 13 MB
+        # instead of the 45x bigger [B,S,H,nope+v] tensor (§Perf iter. 5);
+        # the duplicated up-projection flops are ~3% of the step
+        latent = constraint(latent, "batch", None, None)
+        k_rope = constraint(k_rope, "batch", None, None)
+        kv = jnp.einsum("bsr,rhk->bshk", latent, p["wkv_b"].astype(dt))
+        k_nope = kv[..., : cfg.qk_nope_dim]
+        v = kv[..., cfg.qk_nope_dim:]
+        # fold the decoupled rope key into one MHA call: concat on head_dim
+        q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q_cat = constraint(q_cat, "batch", "seq", "heads", None)
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(
+                k_rope[:, :, None, :], k_nope.shape[:3] + (cfg.qk_rope_dim,))],
+            axis=-1)
+        out = _sdpa(q_cat, k_cat, v, scale, qpos=positions, kpos=positions,
+                    causal=True).astype(dt)
+        new_cache = MLACache(latent, k_rope) if cache_pos is not None else None
+    else:  # decode: absorbed attention over the latent cache
+        assert S == 1
+        lat_c = _scatter_time(cache.latent, latent, cache_pos)
+        kr_c = _scatter_time(cache.k_rope, k_rope, cache_pos)
+        w_uk = p["wkv_b"].astype(dt)[..., : cfg.qk_nope_dim]  # [r, H, nope]
+        q_eff = jnp.einsum("bqhk,rhk->bqhr", q_nope, w_uk)    # absorb W_uk
+        logits = (jnp.einsum("bqhr,bsr->bhqs", q_eff.astype(jnp.float32),
+                             lat_c.astype(jnp.float32))
+                  + jnp.einsum("bqhk,bsk->bhqs", q_rope.astype(jnp.float32),
+                               kr_c.astype(jnp.float32))) * scale
+        valid = jnp.arange(lat_c.shape[1])[None, None, None, :] <= cache_pos
+        logits = jnp.where(valid, logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        lat_sum = jnp.einsum("bhqs,bsr->bqhr", w, lat_c.astype(jnp.float32))
+        w_uv = p["wkv_b"].astype(dt)[..., cfg.qk_nope_dim:]   # [r, H, v]
+        out = jnp.einsum("bqhr,rhv->bqhv", lat_sum.astype(dt), w_uv)
+        new_cache = MLACache(lat_c, kr_c)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(dt), p["wo"].astype(dt))
+    return y, new_cache
+
+
+def init_mla_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16
+                   ) -> tuple[MLACache, MLACache]:
+    lat = jnp.zeros((batch, length, cfg.kv_lora), dtype)
+    kr = jnp.zeros((batch, length, cfg.qk_rope_dim), dtype)
+    axes = ("batch", "cache_seq", None)
+    return MLACache(lat, kr), MLACache(axes, axes)

@@ -1,0 +1,163 @@
+"""Shared model building blocks, pure JAX.
+
+Every ``init_*`` returns ``(params, axes)`` — two mirrored pytrees, the second
+holding per-dim *logical axis names* consumed by ``repro.parallel.sharding``.
+Compute is bf16 with f32 norm/softmax internals; params are stored f32 (the
+train loop keeps them as master weights and casts to bf16 at use).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constraint
+
+__all__ = [
+    "dense_init", "scalar_init", "rms_norm", "rms_norm_init", "rope",
+    "gated_mlp_init", "gated_mlp", "embedding_init", "embed", "lm_head",
+    "cross_entropy", "stack_inits", "Axes",
+]
+
+Axes = tuple  # tuple of logical axis names (or None), one per dim
+
+
+# ------------------------------------------------------------- initializers
+def dense_init(key: jax.Array, shape: tuple[int, ...], axes: Axes,
+               scale: Optional[float] = None) -> tuple[jnp.ndarray, Axes]:
+    """Truncated-normal fan-in init; returns (param, logical axes)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    w = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return w, axes
+
+
+def scalar_init(shape: tuple[int, ...], axes: Axes,
+                value: float = 1.0) -> tuple[jnp.ndarray, Axes]:
+    return jnp.full(shape, value, jnp.float32), axes
+
+
+def rms_norm_init(d: int) -> tuple[jnp.ndarray, Axes]:
+    return scalar_init((d,), (None,), 1.0)
+
+
+def stack_inits(init_fn, keys: jax.Array) -> tuple[Any, Any]:
+    """vmap an ``init_fn(key) -> (params, axes)`` over ``keys`` to build
+    scan-stacked layer params [L, ...]; logical axes get a leading None."""
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, axes = init_fn(keys[0])
+    axes = jax.tree.map(lambda a: (None,) + a, axes,
+                        is_leaf=lambda t: isinstance(t, tuple) and all(
+                            x is None or isinstance(x, str) for x in t))
+    return params, axes
+
+
+# ------------------------------------------------------------------ compute
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4) -> jnp.ndarray:
+    """Rotary embedding on the last dim of ``x`` [..., S, n, d] with
+    ``positions`` [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over the heads dim
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- gated MLP
+def gated_mlp_init(key: jax.Array, d: int, ff: int) -> tuple[dict, dict]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    wg, ag = dense_init(k1, (d, ff), ("embed_fsdp", "ff"))
+    wu, au = dense_init(k2, (d, ff), ("embed_fsdp", "ff"))
+    wd, ad = dense_init(k3, (ff, d), ("ff", "embed_fsdp"))
+    return ({"wg": wg, "wu": wu, "wd": wd}, {"wg": ag, "wu": au, "wd": ad})
+
+
+def gated_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * (x @ p["wu"].astype(x.dtype))
+    # "ff" wins where it divides (tensor parallel); with ff disabled by the
+    # sequence-parallel cell rules, "seq" keeps the MLP token-sharded and
+    # the (small) weights are gathered instead of the (large) activations.
+    if h.ndim == 3:
+        h = constraint(h, "batch", "seq", "ff")
+    else:
+        h = constraint(h, "batch", "ff")
+    return h @ p["wd"].astype(x.dtype)
+
+
+# -------------------------------------------------------------- embeddings
+def embedding_init(key: jax.Array, vocab: int, d: int) -> tuple[jnp.ndarray, Axes]:
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * (1.0 / math.sqrt(d))
+    return w, ("vocab", "embed_fsdp")
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return jnp.take(table.astype(dtype), tokens, axis=0)
+
+
+def lm_head(table_or_w: jnp.ndarray, x: jnp.ndarray, tied: bool) -> jnp.ndarray:
+    """Logits [..., V]. ``tied`` uses the embedding table transposed."""
+    w = table_or_w.astype(x.dtype)
+    return x @ (w.T if tied else w)
+
+
+# ------------------------------------------------------ chunked cross entropy
+def cross_entropy(head_w: jnp.ndarray, x: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray, tied: bool, n_chunks: int = 1) -> jnp.ndarray:
+    """Mean next-token CE over masked positions.
+
+    ``x`` [B, S, d] final hidden states, ``labels``/``mask`` [B, S].
+    ``n_chunks > 1`` streams the vocab dimension in chunks so archs whose
+    vocab cannot shard over the ``model`` axis (mamba2 50280, minicpm3 73448,
+    whisper 51865) never materialize [B, S, V] — the logsumexp and the
+    label logits accumulate per chunk (flash-softmax style, exact).
+    """
+    w = head_w.T if tied else head_w  # [d, V] view either way
+    V = w.shape[-1]
+    maskf = mask.astype(jnp.float32)
+    denom = jnp.maximum(maskf.sum(), 1.0)
+    if n_chunks <= 1:
+        logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - lab) * maskf) / denom
+
+    assert V % n_chunks == 0, (V, n_chunks)
+    C = V // n_chunks
+
+    def body(carry, i):
+        m, s, lab_acc = carry
+        wc = jax.lax.dynamic_slice_in_dim(w, i * C, C, axis=1)
+        logits = (x @ wc.astype(x.dtype)).astype(jnp.float32)  # [B,S,C]
+        cm = jnp.max(logits, axis=-1)
+        new_m = jnp.maximum(m, cm)
+        s = s * jnp.exp(m - new_m) + jnp.sum(
+            jnp.exp(logits - new_m[..., None]), axis=-1)
+        local = labels - i * C
+        hit = (local >= 0) & (local < C)
+        lab_logit = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, C - 1)[..., None], axis=-1)[..., 0]
+        lab_acc = jnp.where(hit, lab_logit, lab_acc)
+        return (new_m, s, lab_acc), None
+
+    B, S = labels.shape
+    init = (jnp.full((B, S), -jnp.inf, jnp.float32),
+            jnp.zeros((B, S), jnp.float32),
+            jnp.zeros((B, S), jnp.float32))
+    (m, s, lab), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    lse = m + jnp.log(s)
+    return jnp.sum((lse - lab) * maskf) / denom

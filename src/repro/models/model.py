@@ -1,0 +1,461 @@
+"""Model assembly: ArchConfig -> init / loss / prefill / decode functions.
+
+One code path covers all 10 assigned families by composing blocks:
+  dense | moe | vlm : [pre-norm attn (gqa|mla) + residual] [pre-norm ffn|moe]
+  ssm               : [pre-norm mamba2 + residual] x L
+  hybrid            : groups of (rglru, rglru, local-attn), each + MLP
+  audio (enc-dec)   : bidirectional encoder + causal decoder w/ cross-attn
+
+Layers are stacked on a leading axis and driven by ``lax.scan`` (optionally
+``jax.checkpoint``-rematerialized) so the HLO stays one-layer-sized — this is
+what keeps 512-chip dry-run compiles tractable and real-TPU compile times
+sane. Heterogeneous leading/trailing layers (deepseek's dense layer 0, the
+hybrid tail) live outside the scan with their own params.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constraint
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import (cross_entropy, dense_init, embed, embedding_init,
+                     gated_mlp, gated_mlp_init, lm_head, rms_norm,
+                     rms_norm_init, stack_inits)
+
+__all__ = ["init", "loss_fn", "prefill", "decode_step", "init_cache",
+           "xent_chunks"]
+
+
+# ----------------------------------------------------------------- helpers
+def xent_chunks(cfg) -> int:
+    """Vocab chunking for the loss: 1 when the vocab can shard over the
+    ``model`` axis (sharded logits are fine); otherwise the smallest divisor
+    >= 5 so [B,S,V] is never materialized on replicated-head archs."""
+    if cfg.vocab % 16 == 0:
+        return 1
+    for c in (8, 5, 4, 10, 7, 3, 2):
+        if cfg.vocab % c == 0:
+            return c
+    return 1
+
+
+def _is_axes(t) -> bool:
+    return isinstance(t, tuple) and all(a is None or isinstance(a, str) for a in t)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees, is_leaf=_is_axes)
+
+
+def _moe_layer(cfg, layer: int) -> bool:
+    return bool(cfg.n_experts) and layer >= cfg.first_dense_layers
+
+
+# ---------------------------------------------------------------- block init
+def _block_init(key: jax.Array, cfg, kind: str) -> tuple[dict, dict]:
+    """kind: attn_mlp | attn_moe | ssm | rglru | enc | dec (cross-attn)."""
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    a: dict[str, Any] = {}
+    if kind in ("attn_mlp", "attn_moe", "enc", "dec"):
+        p["ln1"], a["ln1"] = rms_norm_init(cfg.d_model)
+        if cfg.attn_kind == "mla":
+            p["attn"], a["attn"] = attn.mla_init(ks[0], cfg)
+        else:
+            p["attn"], a["attn"] = attn.gqa_init(ks[0], cfg)
+        p["ln2"], a["ln2"] = rms_norm_init(cfg.d_model)
+        if kind == "dec":  # cross-attention sub-block
+            p["lnx"], a["lnx"] = rms_norm_init(cfg.d_model)
+            p["xattn"], a["xattn"] = attn.gqa_init(ks[2], cfg)
+        if kind == "attn_moe":
+            p["moe"], a["moe"] = moe_mod.moe_init(ks[1], cfg)
+        else:
+            p["mlp"], a["mlp"] = gated_mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+    elif kind == "ssm":
+        p["ln1"], a["ln1"] = rms_norm_init(cfg.d_model)
+        p["ssm"], a["ssm"] = ssm_mod.mamba2_init(ks[0], cfg)
+    elif kind == "rglru":
+        p["ln1"], a["ln1"] = rms_norm_init(cfg.d_model)
+        p["lru"], a["lru"] = rglru_mod.rglru_init(ks[0], cfg)
+        p["ln2"], a["ln2"] = rms_norm_init(cfg.d_model)
+        p["mlp"], a["mlp"] = gated_mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+    else:
+        raise ValueError(kind)
+    return p, a
+
+
+def _dense_block_init(key: jax.Array, cfg, d_ff: int) -> tuple[dict, dict]:
+    """deepseek-style leading dense layer (own ff width)."""
+    ks = jax.random.split(key, 2)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = rms_norm_init(cfg.d_model)
+    if cfg.attn_kind == "mla":
+        p["attn"], a["attn"] = attn.mla_init(ks[0], cfg)
+    else:
+        p["attn"], a["attn"] = attn.gqa_init(ks[0], cfg)
+    p["ln2"], a["ln2"] = rms_norm_init(cfg.d_model)
+    p["mlp"], a["mlp"] = gated_mlp_init(ks[1], cfg.d_model, d_ff)
+    return p, a
+
+
+# --------------------------------------------------------------- block apply
+def _attn_apply(p, cfg, x, positions, cache, cache_pos, causal=True,
+                use_rope=True):
+    if cfg.attn_kind == "mla":
+        return attn.mla_apply(p, cfg, x, positions, cache, cache_pos)
+    return attn.gqa_apply(p, cfg, x, positions, cache, cache_pos,
+                          causal=causal, use_rope=use_rope)
+
+
+def _cross_attn(p, cfg, x, enc_kv: attn.KVCache):
+    """Decoder cross-attention: q from x, k/v precomputed from encoder."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    out = attn._sdpa(q, attn._repeat_kv(enc_kv.k, cfg.n_heads),
+                     attn._repeat_kv(enc_kv.v, cfg.n_heads),
+                     1.0 / math.sqrt(cfg.head_dim), causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def _block_apply(p: dict, cfg, kind: str, x, positions, cache, cache_pos,
+                 enc_kv=None, use_rope=True):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Any = None
+    if kind in ("attn_mlp", "attn_moe", "enc", "dec"):
+        h, new_attn_cache = _attn_apply(
+            p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+            None if cache is None else cache.get("attn"),
+            cache_pos, causal=(kind != "enc"), use_rope=use_rope)
+        x = x + h
+        if kind == "dec":
+            kv = cache["cross"] if cache is not None else enc_kv
+            x = x + _cross_attn(p["xattn"], cfg,
+                                rms_norm(x, p["lnx"], cfg.norm_eps), kv)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind == "attn_moe":
+            h, aux = moe_mod.moe_apply(p["moe"], cfg, h)
+        else:
+            h = gated_mlp(p["mlp"], h)
+        x = x + h
+        if new_attn_cache is not None:
+            new_cache = {"attn": new_attn_cache}
+            if kind == "dec":
+                new_cache["cross"] = kv
+    elif kind == "ssm":
+        h, new_ssm = ssm_mod.mamba2_apply(
+            p["ssm"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps),
+            None if cache is None else cache.get("ssm"), cache_pos)
+        x = x + h
+        if new_ssm is not None:
+            new_cache = {"ssm": new_ssm}
+    elif kind == "rglru":
+        h, new_lru = rglru_mod.rglru_apply(
+            p["lru"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps),
+            None if cache is None else cache.get("lru"), cache_pos)
+        x = x + h
+        x = x + gated_mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        if new_lru is not None:
+            new_cache = {"lru": new_lru}
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------ layer plans
+class _Plan(NamedTuple):
+    """How the arch's layers are grouped for scanning."""
+    scan_kinds: tuple[str, ...]   # kinds inside one scanned super-layer
+    n_scan: int                   # number of scanned super-layers
+    lead_kinds: tuple[str, ...]   # layers before the scan (own params)
+    tail_kinds: tuple[str, ...]   # layers after the scan
+
+
+def _plan(cfg) -> _Plan:
+    if cfg.family == "ssm":
+        return _Plan(("ssm",), cfg.n_layers, (), ())
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+        kinds = tuple("rglru" if (i + 1) % period else "attn_mlp"
+                      for i in range(period))
+        n_groups, rem = divmod(cfg.n_layers, period)
+        tail = tuple("rglru" if (i + 1) % period else "attn_mlp"
+                     for i in range(rem))
+        return _Plan(kinds, n_groups, (), tail)
+    if cfg.family == "audio":
+        return _Plan(("dec",), cfg.n_layers, (), ())
+    # dense / moe / vlm
+    kind = "attn_moe" if cfg.n_experts else "attn_mlp"
+    lead = tuple("dense_lead" for _ in range(cfg.first_dense_layers))
+    return _Plan((kind,), cfg.n_layers - cfg.first_dense_layers, lead, ())
+
+
+# ------------------------------------------------------------------- init
+def init(cfg, key: jax.Array) -> tuple[dict, dict]:
+    """Returns (params, logical-axes tree). Params are f32 master copies."""
+    plan = _plan(cfg)
+    keys = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    a: dict[str, Any] = {}
+    p["embed"], a["embed"] = embedding_init(keys[0], cfg.vocab, cfg.d_model)
+    if cfg.max_pos:
+        p["pos_embed"], a["pos_embed"] = (
+            0.02 * jax.random.normal(keys[6], (cfg.max_pos, cfg.d_model),
+                                     jnp.float32), (None, "embed_fsdp"))
+    if not cfg.tie_embeddings:
+        p["head"], a["head"] = dense_init(
+            keys[1], (cfg.d_model, cfg.vocab), ("embed_fsdp", "vocab"))
+    p["final_ln"], a["final_ln"] = rms_norm_init(cfg.d_model)
+
+    def one_super_layer(k):
+        ks = jax.random.split(k, len(plan.scan_kinds))
+        ps, as_ = [], []
+        for kk, kind in zip(ks, plan.scan_kinds):
+            pi, ai = _block_init(kk, cfg, kind)
+            ps.append(pi)
+            as_.append(ai)
+        return dict(enumerate_map(ps)), dict(enumerate_map(as_))
+
+    layer_keys = jax.random.split(keys[2], plan.n_scan)
+    p["layers"], a["layers"] = stack_inits(one_super_layer, layer_keys)
+
+    for i, kind in enumerate(plan.lead_kinds):
+        pi, ai = _dense_block_init(jax.random.fold_in(keys[3], i), cfg,
+                                   cfg.dense_d_ff or cfg.d_ff)
+        p[f"lead_{i}"], a[f"lead_{i}"] = pi, ai
+    for i, kind in enumerate(plan.tail_kinds):
+        pi, ai = _block_init(jax.random.fold_in(keys[4], i), cfg, kind)
+        p[f"tail_{i}"], a[f"tail_{i}"] = pi, ai
+
+    if cfg.is_encdec:
+        def one_enc_layer(k):
+            return _block_init(k, cfg, "enc")
+        enc_keys = jax.random.split(keys[5], cfg.enc_layers)
+        p["enc_layers"], a["enc_layers"] = stack_inits(one_enc_layer, enc_keys)
+        p["enc_ln"], a["enc_ln"] = rms_norm_init(cfg.d_model)
+    return p, a
+
+
+def enumerate_map(items: list) -> list[tuple[str, Any]]:
+    return [(f"b{i}", v) for i, v in enumerate(items)]
+
+
+# -------------------------------------------------------------- embeddings
+def _sinusoid(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed_inputs(p, cfg, tokens, batch: dict, positions, dtype=jnp.bfloat16):
+    x = embed(p["embed"], tokens, dtype)
+    if cfg.max_pos:  # learned absolute positions (whisper decoder)
+        x = x + jnp.take(p["pos_embed"].astype(dtype), positions, axis=0)
+    if cfg.frontend == "vision" and "images" in batch:
+        P = min(cfg.n_patches, x.shape[1])  # patch embeds fill the first slots
+        img = batch["images"][:, :P].astype(dtype)
+        x = jnp.concatenate([img, x[:, P:]], axis=1)
+    # anchor the residual stream; "seq" resolves only under the sequence-
+    # parallel cell rules (decode S==1 stays unsharded)
+    if x.shape[1] > 1:
+        return constraint(x, "batch", "seq", None)
+    return constraint(x, "batch", None, None)
+
+
+def _encode(p, cfg, frames, dtype=jnp.bfloat16):
+    """Whisper encoder over precomputed frame embeddings [B, T_enc, d]."""
+    x = frames.astype(dtype) + _sinusoid(frames.shape[1],
+                                         cfg.d_model).astype(dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                           frames.shape[:2]).astype(jnp.int32)
+
+    def body(x, pl):
+        x, _, _ = _block_apply(pl, cfg, "enc", x, pos, None, None,
+                               use_rope=False)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, p["enc_layers"])
+    return rms_norm(x, p["enc_ln"], cfg.norm_eps)
+
+
+def _enc_kv(p_layer, cfg, enc_out) -> attn.KVCache:
+    """Precompute one decoder layer's cross-attention K/V."""
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p_layer["xattn"]["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p_layer["xattn"]["wv"].astype(dt))
+    return attn.KVCache(k, v)
+
+
+# ------------------------------------------------------------- forward core
+def _forward(p, cfg, tokens, batch, positions, caches=None, cache_pos=None,
+             remat=False, want_cache=False):
+    """Shared train/prefill/decode trunk -> (hidden [B,S,d], caches', aux)."""
+    plan = _plan(cfg)
+    dtype = jnp.bfloat16
+    x = _embed_inputs(p, cfg, tokens, batch, positions, dtype)
+
+    enc_out = None
+    if cfg.is_encdec:
+        if caches is not None:  # decode: cross K/V already cached
+            enc_out = None
+        else:
+            enc_out = _encode(p, cfg, batch["frames"], dtype)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    out_caches: dict[str, Any] = {}
+    # ---- leading layers (deepseek dense layer 0) ----
+    for i, kind in enumerate(plan.lead_kinds):
+        c = None if caches is None else caches[f"lead_{i}"]
+        x, nc, aux = _block_apply(p[f"lead_{i}"], cfg, "attn_mlp", x,
+                                  positions, c, cache_pos)
+        aux_total += aux
+        if nc is not None:
+            out_caches[f"lead_{i}"] = nc
+
+    # ---- scanned stack ----
+    use_rope = not cfg.is_encdec
+
+    def body(carry, xs):
+        x, aux_sum = carry
+        pl, cache_sl, enc_kv_sl = xs
+        new_cache_sl = {}
+        for j, kind in enumerate(plan.scan_kinds):
+            c = None if cache_sl is None else cache_sl[f"b{j}"]
+            ekv = None
+            if kind == "dec":
+                ekv = enc_kv_sl if enc_kv_sl is not None else None
+            x, nc, aux = _block_apply(pl[f"b{j}"], cfg, kind, x, positions,
+                                      c, cache_pos, enc_kv=ekv,
+                                      use_rope=use_rope)
+            if x.shape[1] > 1:  # re-anchor the residual each layer
+                x = constraint(x, "batch", "seq", None)
+            aux_sum = aux_sum + aux
+            if nc is not None:
+                new_cache_sl[f"b{j}"] = nc
+        return (x, aux_sum), (new_cache_sl or None)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    cache_xs = None if caches is None else caches["layers"]
+    enc_kv_xs = None
+    if cfg.is_encdec and enc_out is not None:
+        # build per-layer cross K/V (stacked) by vmapping over layer params
+        enc_kv_xs = jax.vmap(lambda pl: _enc_kv(pl["b0"], cfg, enc_out))(
+            p["layers"])
+    xs = (p["layers"], cache_xs, enc_kv_xs)
+    (x, aux_total), new_layer_caches = jax.lax.scan(body, (x, aux_total), xs)
+
+    # ---- tail layers (hybrid remainder) ----
+    if new_layer_caches is not None:
+        out_caches["layers"] = new_layer_caches
+    for i, kind in enumerate(plan.tail_kinds):
+        c = None if caches is None else caches[f"tail_{i}"]
+        x, nc, aux = _block_apply(p[f"tail_{i}"], cfg, kind, x, positions,
+                                  c, cache_pos, use_rope=use_rope)
+        aux_total += aux
+        if nc is not None:
+            out_caches[f"tail_{i}"] = nc
+
+    x = rms_norm(x, p["final_ln"], cfg.norm_eps)
+    return x, (out_caches or None), aux_total
+
+
+# ---------------------------------------------------------------- loss / api
+def loss_fn(p, cfg, batch: dict, remat: Optional[bool] = None):
+    """batch["tokens"]: [B, S+1] int32 (inputs=[:-1], labels=[1:]).
+    Optional batch["frames"] (audio) / batch["images"] (vision)."""
+    remat = cfg.remat if remat is None else remat
+    tokens_full = batch["tokens"]
+    tokens, labels = tokens_full[:, :-1], tokens_full[:, 1:]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, _, aux = _forward(p, cfg, tokens, batch, positions, remat=remat)
+    mask = jnp.ones((B, S), bool)
+    if cfg.frontend == "vision":
+        mask &= (jnp.arange(S) >= cfg.n_patches)[None, :]
+    head = p["embed"] if cfg.tie_embeddings else p["head"]
+    ce = cross_entropy(head, x, labels, mask, cfg.tie_embeddings,
+                       n_chunks=xent_chunks(cfg))
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill(p, cfg, batch: dict):
+    """Process the prompt; returns (caches, last-position logits [B, V])."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, caches, _ = _forward(p, cfg, tokens, batch, positions,
+                            cache_pos=jnp.int32(S), want_cache=True,
+                            remat=False)
+    head = p["embed"] if cfg.tie_embeddings else p["head"]
+    logits = lm_head(head, x[:, -1:], cfg.tie_embeddings)[:, 0]
+    return caches, logits
+
+
+def decode_step(p, cfg, caches, token: jnp.ndarray, pos: jnp.ndarray):
+    """One decode step. token [B] int32, pos scalar int32 (current write
+    position = number of tokens already in the cache)."""
+    B = token.shape[0]
+    tokens = token[:, None]
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+    x, caches, _ = _forward(p, cfg, tokens, {}, positions, caches=caches,
+                            cache_pos=pos.astype(jnp.int32), remat=False)
+    head = p["embed"] if cfg.tie_embeddings else p["head"]
+    logits = lm_head(head, x, cfg.tie_embeddings)[:, 0]
+    return caches, logits
+
+
+# ------------------------------------------------------------------- caches
+def init_cache(cfg, batch: int, length: int, dtype=jnp.bfloat16):
+    """Decode caches for ``batch`` sequences of max ``length``. Returns
+    (caches, axes) — leaves stacked [n_scan, ...] under "layers"."""
+    plan = _plan(cfg)
+
+    def one(kind):
+        c, ax = {}, {}
+        if kind in ("attn_mlp", "attn_moe", "dec"):
+            if cfg.attn_kind == "mla":
+                cc, aa = attn.init_mla_cache(cfg, batch, length, dtype)
+            else:
+                cc, aa = attn.init_kv_cache(cfg, batch, length, dtype)
+            c["attn"], ax["attn"] = cc, aa
+            if kind == "dec":
+                z = jnp.zeros((batch, cfg.enc_len, cfg.n_kv_heads,
+                               cfg.head_dim), dtype)
+                c["cross"] = attn.KVCache(z, z)
+                axes = ("batch", None, "kv_heads", None)
+                ax["cross"] = attn.KVCache(axes, axes)
+        elif kind == "ssm":
+            c["ssm"], ax["ssm"] = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+        elif kind == "rglru":
+            c["lru"], ax["lru"] = rglru_mod.init_lru_cache(cfg, batch, dtype)
+        return c, ax
+
+    def stack(tree, n):
+        return jax.tree.map(lambda leaf: jnp.broadcast_to(
+            leaf[None], (n,) + leaf.shape).copy() if n else leaf, tree)
+
+    caches: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    sl_c, sl_a = {}, {}
+    for j, kind in enumerate(plan.scan_kinds):
+        cc, aa = one(kind)
+        sl_c[f"b{j}"], sl_a[f"b{j}"] = cc, aa
+    caches["layers"] = jax.tree.map(
+        lambda leaf: jnp.zeros((plan.n_scan,) + leaf.shape, leaf.dtype), sl_c)
+    axes["layers"] = _tmap(lambda a: (None,) + a, sl_a)
+    for i, kind in enumerate(plan.lead_kinds):
+        caches[f"lead_{i}"], axes[f"lead_{i}"] = one("attn_mlp")
+    for i, kind in enumerate(plan.tail_kinds):
+        caches[f"tail_{i}"], axes[f"tail_{i}"] = one(kind)
+    return caches, axes

@@ -1,0 +1,107 @@
+"""Top-k Mixture-of-Experts with capacity-based gather/scatter dispatch (EP).
+
+Dispatch is index-based (gather into [E, C, d] slabs, per-expert GEMMs via a
+single stacked einsum, weighted scatter-add back) — never the one-hot
+[T, E, C] dispatch matmul, whose memory is quadratic-ish in tokens. Experts
+stack on a leading ``experts`` axis that shards over the ``model`` mesh axis
+(expert parallelism); XLA emits the token all-to-all from the sharding
+transition between token-sharded activations and expert-sharded slabs.
+
+Load-balancing aux loss (Switch-style: mean fraction-routed x mean router
+prob, scaled by E) is returned to the trainer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constraint
+from .layers import dense_init, gated_mlp, gated_mlp_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key: jax.Array, cfg) -> tuple[dict, dict]:
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    p["router"], a["router"] = dense_init(ks[0], (d, E), ("embed_fsdp", None))
+    p["wg"], a["wg"] = dense_init(ks[1], (E, d, ff), ("experts", "embed_fsdp", None))
+    p["wu"], a["wu"] = dense_init(ks[2], (E, d, ff), ("experts", "embed_fsdp", None))
+    p["wd"], a["wd"] = dense_init(ks[3], (E, ff, d), ("experts", None, "embed_fsdp"))
+    if cfg.n_shared:
+        sp, sa = gated_mlp_init(ks[4], d, cfg.n_shared * ff)
+        p["shared"], a["shared"] = sp, sa
+    return p, a
+
+
+def moe_apply(p: dict, cfg, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    capacity_factor = getattr(cfg, "capacity_factor", 1.25)
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                 # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * mean_e(frac_tokens_e * mean_prob_e)
+    frac = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(frac * probs.mean(axis=0))
+
+    # ---- capacity-based slot assignment (no [T,E,C] one-hot) ----
+    # floor at k, cap at T (per-expert assignments can never exceed T)
+    C = int(min(max(k, round(T * k / E * capacity_factor)), T))
+    # Hierarchical arrival-order cumsum: a flat prefix sum over all T*k
+    # assignments is sequential across batch shards, so GSPMD all-gathers
+    # the [T*k, E] one-hot (403 MB x layers x microbatches on deepseek
+    # train_4k — EXPERIMENTS.md §Perf iteration 8). Instead: local cumsum
+    # within each batch row + tiny [B, E] cross-row offsets.
+    e_rows = eidx.reshape(B, S * k)                      # [B, S*k]
+    onehot = jax.nn.one_hot(e_rows, E, dtype=jnp.int32)  # [B, S*k, E] local
+    within = jnp.cumsum(onehot, axis=1) - onehot
+    totals = jnp.sum(onehot, axis=1)                     # [B, E] small
+    offsets = jnp.cumsum(totals, axis=0) - totals        # exclusive over B
+    pos_in_e = (within + offsets[:, None, :]).reshape(T * k, E)
+    e_flat = eidx.reshape(-1)                            # [T*k]
+    slot = jnp.take_along_axis(pos_in_e, e_flat[:, None], axis=1)[:, 0]
+    keep = slot < C                                      # dropped beyond capacity
+    tok_id = jnp.repeat(jnp.arange(T), k)
+
+    # scatter token ids into [E, C] (sentinel T = padding row)
+    slots = _scatter_slots(e_flat, slot, keep, tok_id, E, C, T)
+
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xs = jnp.take(xpad, slots, axis=0)                   # [E, C, d]
+    xs = constraint(xs, "experts", "expert_cap", None)
+
+    dt = x.dtype
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, p["wg"].astype(dt))) \
+        * jnp.einsum("ecd,edf->ecf", xs, p["wu"].astype(dt))
+    ys = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(dt))  # [E, C, d]
+    ys = constraint(ys, "experts", "expert_cap", None)
+
+    # weighted scatter-add back to tokens
+    gate_flat = jnp.where(keep, gate.reshape(-1), 0.0)
+    gslot = jnp.zeros((E, C), jnp.float32).at[e_flat, slot].set(
+        gate_flat, mode="drop")
+    y = jnp.zeros((T + 1, d), jnp.float32).at[slots.reshape(-1)].add(
+        (ys * gslot[..., None].astype(dt)).reshape(E * C, d).astype(jnp.float32),
+        mode="drop")[:T]
+    y = y.astype(dt)
+    if cfg.n_shared:
+        y = y + gated_mlp(p["shared"], xt)
+    return y.reshape(B, S, d), aux
+
+
+def _scatter_slots(e_flat, slot, keep, tok_id, E, C, sentinel):
+    """slots[e, s] = token id routed to expert e at capacity slot s."""
+    e_safe = jnp.where(keep, e_flat, E)       # out-of-range rows -> dropped
+    s_safe = jnp.where(keep, slot, C)
+    return jnp.full((E, C), sentinel, jnp.int32).at[e_safe, s_safe].set(
+        tok_id.astype(jnp.int32), mode="drop")

@@ -1,0 +1,176 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060, TPU-adapted.
+
+The SSD algorithm computes the selective-SSM output as block-decomposed
+matmuls: within a chunk the (lower-triangular, decay-weighted) quadratic form
+runs on the MXU; across chunks a small recurrent state [H, hd, N] carries via
+``lax.scan``. This is exactly the paper's insight re-expressed for TPU: the
+"semiseparable matrix" view turns a sequential scan into dense tiles.
+
+Decode is the O(1) recurrent update: h = da*h + dt*x*B ; y = C.h + D*x.
+
+Layout: heads shard over ``model`` (ssm_heads); B/C are per-group (ngroups=1
+here -> replicated, tiny). Chunked scan keeps the HLO small for 500k-token
+sequences and bounds live activation memory to one chunk.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constraint
+from .layers import dense_init, rms_norm, scalar_init
+
+__all__ = ["mamba2_init", "mamba2_apply", "SSMCache", "init_ssm_cache"]
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # [B, W-1, conv_dim] rolling conv window
+    state: jnp.ndarray  # [B, H, hd, N] recurrent SSD state
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_heads * cfg.ssm_head_dim
+    n = cfg.ssm_state * cfg.ssm_groups
+    conv_dim = d_in + 2 * n
+    return d_in, n, conv_dim
+
+
+def mamba2_init(key: jax.Array, cfg) -> tuple[dict, dict]:
+    d = cfg.d_model
+    d_in, n, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["wz"], a["wz"] = dense_init(ks[0], (d, d_in), ("embed_fsdp", "d_inner"))
+    p["wx"], a["wx"] = dense_init(ks[1], (d, d_in), ("embed_fsdp", "d_inner"))
+    p["wbc"], a["wbc"] = dense_init(ks[2], (d, 2 * n), ("embed_fsdp", None))
+    p["wdt"], a["wdt"] = dense_init(ks[3], (d, cfg.ssm_heads), ("embed_fsdp", "ssm_heads"))
+    p["conv_w"], a["conv_w"] = dense_init(ks[4], (cfg.conv_width, conv_dim),
+                                          (None, "conv_dim"), scale=0.5)
+    p["A_log"], a["A_log"] = scalar_init((cfg.ssm_heads,), ("ssm_heads",), 0.0)
+    p["D"], a["D"] = scalar_init((cfg.ssm_heads,), ("ssm_heads",), 1.0)
+    p["dt_bias"], a["dt_bias"] = scalar_init((cfg.ssm_heads,), ("ssm_heads",), 0.0)
+    p["norm"], a["norm"] = scalar_init((d_in,), (None,))
+    p["wo"], a["wo"] = dense_init(ks[5], (d_in, d), ("d_inner", "embed_fsdp"))
+    return p, a
+
+
+def _conv1d(xbc: jnp.ndarray, w: jnp.ndarray,
+            prev: Optional[jnp.ndarray]) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv, width W. xbc [B,S,C]; prev [B,W-1,C] or None.
+    Returns (out [B,S,C], new_prev)."""
+    W = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([prev, xbc], axis=1)  # [B, S+W-1, C]
+    out = sum(xp[:, i: i + xbc.shape[1]] * w[i][None, None, :].astype(xbc.dtype)
+              for i in range(W))
+    return jax.nn.silu(out), xp[:, -(W - 1):]
+
+
+def _ssd_chunked(xh, B_, C_, dt, A, chunk: int):
+    """SSD over chunks. xh [B,S,H,hd]; B_/C_ [B,S,N]; dt [B,S,H] (softplus'd);
+    A [H] (negative). Returns y [B,S,H,hd]."""
+    Bb, S, H, hd = xh.shape
+    N = B_.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+    xc = xh.reshape(Bb, nc, chunk, H, hd)
+    Bc = B_.reshape(Bb, nc, chunk, N)
+    Cc = C_.reshape(Bb, nc, chunk, N)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+
+    def chunk_body(state, inp):
+        x, b, c, dtt = inp  # [B,chunk,H,hd], [B,chunk,N], [B,chunk,N], [B,chunk,H]
+        # per-step log decay a_t = dt_t * A  (A negative)
+        la = dtt * A[None, None, :]                      # [B,c,H] log-decay
+        cum = jnp.cumsum(la, axis=1)                     # inclusive
+        # ---- intra-chunk (quadratic, decay-masked) ----
+        # L[i,j] = exp(cum_i - cum_j) for i >= j (decay from j+1..i), else 0
+        diff = cum[:, :, None, :] - cum[:, None, :, :]   # [B,i,j,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", c.astype(jnp.float32),
+                        b.astype(jnp.float32))           # [B,i,j]
+        g = cb[..., None] * L                            # [B,i,j,H]
+        xin = x.astype(jnp.float32) * dtt[..., None].astype(jnp.float32)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", g, xin)
+        # ---- inter-chunk: contribution of carried state ----
+        y_state = jnp.einsum("bin,bhpn->bihp", c.astype(jnp.float32), state) \
+            * jnp.exp(cum)[..., None]
+        # ---- state update for next chunk ----
+        # state' = exp(sum la) * state + sum_j exp(cum_last - cum_j) dt_j x_j b_j^T
+        wdec = jnp.exp(cum[:, -1:, :] - cum)             # [B,c,H]
+        upd = jnp.einsum("bjhp,bjn->bhpn", xin * wdec[..., None],
+                         b.astype(jnp.float32))
+        state = jnp.exp(cum[:, -1])[:, :, None, None] * state + upd
+        return state, (y_intra + y_state)
+
+    state0 = jnp.zeros((Bb, H, hd, N), jnp.float32)
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(Bc, 1, 0),
+          jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(dtc, 1, 0))
+    state, ys = jax.lax.scan(chunk_body, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, H, hd)
+    return y, state
+
+
+def mamba2_apply(p: dict, cfg, x: jnp.ndarray,
+                 cache: Optional[SSMCache] = None,
+                 cache_pos: Optional[jnp.ndarray] = None,
+                 ) -> tuple[jnp.ndarray, Optional[SSMCache]]:
+    """x [B, S, d]. Prefill/train when cache None; else one-token decode."""
+    B, S, d = x.shape
+    H, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    d_in, n, conv_dim = _dims(cfg)
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(dt_))
+    xr = jnp.einsum("bsd,de->bse", x, p["wx"].astype(dt_))
+    bc = jnp.einsum("bsd,dn->bsn", x, p["wbc"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(dt_))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])  # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # [H], negative
+
+    xbc = jnp.concatenate([xr, bc], axis=-1)             # [B,S,conv_dim]
+    conv_prev = cache.conv if cache is not None else None
+    xbc, conv_new = _conv1d(xbc, p["conv_w"], conv_prev)
+    xr = constraint(xbc[..., :d_in], "batch", None, "d_inner")
+    B_ = xbc[..., d_in: d_in + n]
+    C_ = xbc[..., d_in + n:]
+    xh = xr.reshape(B, S, H, hd)
+
+    if cache is None:
+        pad = (-S) % cfg.ssm_chunk
+        if pad:  # right-pad to a whole chunk (dt=0 ⇒ identity steps)
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+            C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        y, state = _ssd_chunked(xh, B_, C_, dt, A, min(cfg.ssm_chunk, xh.shape[1]))
+        y = y[:, :S]
+        new_cache = SSMCache(conv_new, state) if cache_pos is not None else None
+    else:
+        assert S == 1
+        la = jnp.exp(dt[:, 0, :] * A[None, :])           # [B,H]
+        xin = (xh[:, 0].astype(jnp.float32)
+               * dt[:, 0, :, None])                      # [B,H,hd]
+        upd = jnp.einsum("bhp,bn->bhpn", xin, B_[:, 0].astype(jnp.float32))
+        state = la[:, :, None, None] * cache.state + upd
+        y = jnp.einsum("bn,bhpn->bhp", C_[:, 0].astype(jnp.float32), state)
+        y = y[:, None]                                   # [B,1,H,hd]
+        new_cache = SSMCache(conv_new, state)
+
+    y = y + xh.astype(jnp.float32)[:, :S] * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)  # gated norm
+    return jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dt_)), new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16) -> tuple[SSMCache, SSMCache]:
+    d_in, n, conv_dim = _dims(cfg)
+    conv = jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype)
+    state = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32)
+    axes = SSMCache(("batch", None, "conv_dim"), ("batch", "ssm_heads", None, None))
+    return SSMCache(conv, state), axes

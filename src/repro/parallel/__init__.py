@@ -1,0 +1,12 @@
+"""Parallelism substrate: logical-axis sharding + gradient compression."""
+from .sharding import (AxisRules, axis_rules, constraint, current_rules,
+                       named_sharding, resolve_spec, tree_specs, DEFAULT_RULES)
+from .collectives import (QuantGrads, quantize_tree, dequantize_tree,
+                          ef_update, init_error_feedback)
+
+__all__ = [
+    "AxisRules", "axis_rules", "constraint", "current_rules",
+    "named_sharding", "resolve_spec", "tree_specs", "DEFAULT_RULES",
+    "QuantGrads", "quantize_tree", "dequantize_tree", "ef_update",
+    "init_error_feedback",
+]

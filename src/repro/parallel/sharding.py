@@ -1,0 +1,158 @@
+"""Logical-axis sharding: named axes on params/activations -> mesh PartitionSpecs.
+
+Every parameter/cache leaf carries a tuple of *logical* axis names (one per
+dim, ``None`` = never sharded). ``AxisRules`` maps logical names to mesh-axis
+candidates and resolves them against actual dim sizes: a mapping that does not
+divide evenly is dropped (JAX rejects non-divisible input shardings), so e.g.
+qwen3's 40 heads fall back to replicated weights + sequence-parallel
+activations, and whisper-tiny resolves to fully replicated — no per-arch
+special cases in model code.
+
+Design notes (1000+ chip posture):
+* ``fsdp`` expands to ``("pod","data")`` when a pod axis exists — ZeRO-style
+  weight sharding scales with the *total* data-parallel degree.
+* ``constraint`` is a no-op outside a mesh context, so the same model code
+  runs single-device smoke tests and 512-chip dry-runs unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AxisRules", "axis_rules", "current_rules", "resolve_spec",
+           "constraint", "named_sharding", "tree_specs", "DEFAULT_RULES"]
+
+# logical axis -> ordered mesh-axis candidates; first that divides wins.
+# ("model",) entries are tensor/expert parallel; "fsdp" is ZeRO weight
+# sharding; "batch" is data parallel; "seq"/"cache_seq" are sequence parallel.
+DEFAULT_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    "batch": (("pod", "data"), ("data",)),
+    "vocab": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "ff": (("model",),),
+    "experts": (("model",),),
+    "d_inner": (("model",),),
+    "ssm_heads": (("model",),),
+    "width": (("model",),),
+    "conv_dim": (("model",),),
+    "embed": (),            # activations d_model: replicated
+    "embed_fsdp": (("pod", "data"), ("data",)),  # weight d_model dim (ZeRO)
+    "seq": (("model",),),   # sequence parallelism (activations)
+    "cache_seq": (("model",),),  # decode KV/latent cache length
+    "head_dim": (),
+    "expert_cap": (),
+}
+
+
+# dims with lower priority numbers claim mesh axes first
+_PRIORITY = {
+    "batch": 0, "vocab": 1, "heads": 1, "kv_heads": 2, "ff": 1, "experts": 1,
+    "d_inner": 1, "ssm_heads": 1, "width": 1, "conv_dim": 1, "expert_cap": 6,
+    "embed_fsdp": 3, "seq": 5, "cache_seq": 5,
+}
+
+
+class AxisRules:
+    """Resolved view of (mesh, rules). ``mesh=None`` => everything replicated."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+
+    def _candidates(self, name: Optional[str]) -> tuple[tuple[str, ...], ...]:
+        if name is None:
+            return ()
+        return self.rules.get(name, ())
+
+    def resolve_dim(self, name: Optional[str], size: int,
+                    taken: set[str]) -> Optional[tuple[str, ...]]:
+        """Pick the first candidate mesh-axis tuple that divides ``size`` and
+        does not reuse an already-taken mesh axis."""
+        for cand in self._candidates(name):
+            axes = tuple(a for a in cand if a in self.axis_sizes)
+            if not axes or any(a in taken for a in axes):
+                continue
+            total = int(np.prod([self.axis_sizes[a] for a in axes]))
+            if total > 1 and size % total == 0:
+                return axes
+        return None
+
+    def spec(self, axes: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+        assert len(axes) == len(shape), (axes, shape)
+        taken: set[str] = set()
+        out: list[Any] = [None] * len(axes)
+        # Resolve in priority order so e.g. "heads" claims the model axis
+        # before "seq" (sequence parallelism only kicks in when the head
+        # count cannot shard — qwen3/minicpm3/starcoder2/whisper).
+        order = sorted(range(len(axes)), key=lambda i: _PRIORITY.get(axes[i], 4))
+        for i in order:
+            got = self.resolve_dim(axes[i], int(shape[i]), taken)
+            if got is not None:
+                taken.update(got)
+                out[i] = got if len(got) > 1 else got[0]
+        while out and out[-1] is None:  # trailing Nones are implicit
+            out.pop()
+        return P(*out)
+
+    def sharding(self, axes: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> AxisRules:
+    return getattr(_STATE, "rules", None) or AxisRules(None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = AxisRules(mesh, rules)
+    try:
+        yield _STATE.rules
+    finally:
+        _STATE.rules = prev
+
+
+def resolve_spec(axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+    return current_rules().spec(axes, shape)
+
+
+def constraint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` by logical axes; identity w/o a mesh."""
+    r = current_rules()
+    if r.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, r.spec(axes, x.shape)))
+
+
+def named_sharding(axes: Sequence[Optional[str]], shape: Sequence[int],
+                   rules: Optional[AxisRules] = None) -> Optional[NamedSharding]:
+    r = rules or current_rules()
+    return r.sharding(axes, shape)
+
+
+def tree_specs(axes_tree: Any, params_tree: Any,
+               rules: Optional[AxisRules] = None) -> Any:
+    """Map a tree of logical-axis tuples + a matching tree of arrays (or
+    ShapeDtypeStructs) to a tree of PartitionSpecs."""
+    r = rules or current_rules()
+    return jax.tree.map(
+        lambda axes, leaf: r.spec(axes, leaf.shape), axes_tree, params_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            a is None or isinstance(a, str) for a in t))

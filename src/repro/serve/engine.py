@@ -1,0 +1,89 @@
+"""Batched serving engine: prefill -> greedy decode over a shared KV budget.
+
+Handles the prefill-cache -> decode-cache handoff for every family:
+KV/latent time axes are padded (or ring-remapped for sliding-window archs)
+into the preallocated decode cache; SSM/LRU states are already final-shaped.
+``serve_step`` (one decode step for the whole batch) is the program the
+decode_* dry-run shapes lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, prefill
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 256           # decode-cache capacity
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+def _ring_place(dst: jnp.ndarray, src: jnp.ndarray, window: int,
+                s0: int) -> jnp.ndarray:
+    """Scatter a [.., B, S0, ...] prefill KV into a [.., B, window, ...] ring
+    at slots p % window for the last ``window`` positions."""
+    S0 = src.shape[2]
+    keep = min(window, S0)
+    pos = jnp.arange(S0 - keep, S0)
+    slots = pos % window
+    return dst.at[:, :, slots].set(
+        src[:, :, S0 - keep:].astype(dst.dtype))
+
+
+class Engine:
+    def __init__(self, cfg, params, scfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self._prefill = jax.jit(lambda p, b: prefill(p, cfg, b))
+        self._decode = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+
+    # ------------------------------------------------------------ handoff
+    def _merge_caches(self, dec_caches: Any, pre_caches: Any, s0: int) -> Any:
+        window = self.cfg.window
+
+        def place(z, c):
+            if z.shape == c.shape:
+                return c.astype(z.dtype)
+            # layer-stacked time axis = axis 2 ([L, B, S, ...])
+            if window and c.shape[2] > z.shape[2]:
+                return _ring_place(z, c, window, s0)
+            sl = tuple(slice(0, s) for s in c.shape)
+            return z.at[sl].set(c.astype(z.dtype))
+
+        return jax.tree.map(place, dec_caches, pre_caches)
+
+    # ------------------------------------------------------------ generate
+    def generate(self, batch: dict, steps: int,
+                 key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """batch["tokens"]: [B, S0] prompt. Returns [B, steps] generations."""
+        tokens = batch["tokens"]
+        B, S0 = tokens.shape
+        pre_caches, logits = self._prefill(self.params, batch)
+        dec_caches, _ = init_cache(self.cfg, B, self.scfg.max_len)
+        caches = self._merge_caches(dec_caches, pre_caches, S0)
+
+        outs = []
+        tok = self._pick(logits, key, 0)
+        for i in range(steps):
+            outs.append(tok)
+            caches, logits = self._decode(self.params, caches, tok,
+                                          jnp.int32(S0 + i))
+            tok = self._pick(logits, key, i + 1)
+        return jnp.stack(outs, axis=1)
+
+    def _pick(self, logits: jnp.ndarray, key: Optional[jax.Array],
+              i: int) -> jnp.ndarray:
+        if self.scfg.greedy or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(
+            k, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)

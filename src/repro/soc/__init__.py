@@ -1,0 +1,11 @@
+"""SoC evaluation substrate — the VLSI-flow stand-in (see DESIGN.md §1)."""
+from .model import soc_metrics, decode_design, area_breakdown, CONST, FEATI
+from .simplified import simplified_metrics
+from .workloads import WORKLOADS, get_workload, from_arch_config
+from .flow import VLSIFlow, SimplifiedFlow
+
+__all__ = [
+    "soc_metrics", "decode_design", "area_breakdown", "CONST", "FEATI",
+    "simplified_metrics", "WORKLOADS", "get_workload", "from_arch_config",
+    "VLSIFlow", "SimplifiedFlow",
+]

@@ -1,0 +1,54 @@
+"""Flow runners: the callable ``idx -> metrics`` interface the tuner expects.
+
+``VLSIFlow``      — the detailed SoC model (``model.py``), the paper's ground
+                    truth stand-in. Counts its invocations (the tuner's budget
+                    accounting and the benchmarks' "flow calls" both read it).
+``SimplifiedFlow``— the SCALE-Sim-like single-kernel analytical model the
+                    paper shows is misleading (Fig. 4(c)).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.space import DesignSpace
+from .model import soc_metrics
+from .simplified import simplified_metrics
+from .workloads import get_workload
+
+__all__ = ["VLSIFlow", "SimplifiedFlow"]
+
+
+class VLSIFlow:
+    def __init__(self, space: DesignSpace, workload: str | np.ndarray = "resnet50",
+                 use_kernel: bool = False):
+        self.space = space
+        self.layers = (get_workload(workload) if isinstance(workload, str)
+                       else np.asarray(workload))
+        self._layers_j = jnp.asarray(self.layers, jnp.float32)
+        self.calls = 0
+        self.evaluated = 0
+        self.use_kernel = use_kernel
+
+    def __call__(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.atleast_2d(np.asarray(idx))
+        self.calls += 1
+        self.evaluated += idx.shape[0]
+        vals = self.space.values(idx)
+        if self.use_kernel:
+            from repro.kernels.systolic_eval import ops as _ops
+
+            return np.asarray(_ops.soc_metrics(jnp.asarray(vals, jnp.float32),
+                                               self._layers_j))
+        return np.asarray(soc_metrics(jnp.asarray(vals, jnp.float32),
+                                      self._layers_j))
+
+
+class SimplifiedFlow(VLSIFlow):
+    def __call__(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.atleast_2d(np.asarray(idx))
+        self.calls += 1
+        self.evaluated += idx.shape[0]
+        vals = self.space.values(idx)
+        return np.asarray(simplified_metrics(jnp.asarray(vals, jnp.float32),
+                                             self._layers_j))

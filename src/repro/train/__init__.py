@@ -1,0 +1,14 @@
+"""Training substrate: optimizer (ZeRO-1), data, checkpoints, loop."""
+from .optimizer import (TrainState, adamw_init, adamw_update, cosine_lr,
+                        LRSchedule, tree_zero1_specs, zero1_spec)
+from .data import DataConfig, make_batch, bigram_entropy
+from .checkpoint import AsyncCheckpointer, latest_step, restore, save
+from .loop import TrainConfig, make_train_step, train
+
+__all__ = [
+    "TrainState", "adamw_init", "adamw_update", "cosine_lr", "LRSchedule",
+    "tree_zero1_specs", "zero1_spec",
+    "DataConfig", "make_batch", "bigram_entropy",
+    "AsyncCheckpointer", "latest_step", "restore", "save",
+    "TrainConfig", "make_train_step", "train",
+]

@@ -1,0 +1,29 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 CPU device by
+design (the 512-device mesh exists only inside dryrun.py subprocesses)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import make_space
+from repro.soc import VLSIFlow
+
+
+@pytest.fixture(scope="session")
+def space():
+    return make_space()
+
+
+@pytest.fixture(scope="session")
+def small_pool(space):
+    key = jax.random.PRNGKey(42)
+    return np.asarray(space.sample(key, 256))
+
+
+@pytest.fixture(scope="session")
+def resnet_flow(space):
+    return VLSIFlow(space, "resnet50")
+
+
+@pytest.fixture(scope="session")
+def pool_metrics(resnet_flow, small_pool):
+    return resnet_flow(small_pool)

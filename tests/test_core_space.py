@@ -1,0 +1,64 @@
+"""DesignSpace (TABLE I) unit + property tests."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_space
+from repro.core.space import TABLE_I, DesignSpace
+
+
+def test_table_i_shape():
+    assert len(TABLE_I) == 26  # 26 parameters in the paper's TABLE I
+    names = [f.name for f in TABLE_I]
+    for expect in ("HostCore", "Dataflow", "SpBank", "DMABus", "TLBSize"):
+        assert expect in names
+
+
+def test_sample_within_candidates(space, small_pool):
+    for i, f in enumerate(space.features):
+        assert small_pool[:, i].min() >= 0
+        assert small_pool[:, i].max() < f.t
+
+
+def test_encode_unit_range(space, small_pool):
+    x = np.asarray(space.encode(small_pool))
+    assert x.shape == small_pool.shape
+    assert x.min() >= 0.0 and x.max() <= 1.0
+
+
+def test_values_roundtrip(space, small_pool):
+    vals = space.values(small_pool)
+    for i, f in enumerate(space.features):
+        assert set(np.unique(vals[:, i])) <= set(float(v) for v in f.values)
+
+
+def test_prune_pins_low_importance(space):
+    v = np.full(space.d, 1.0 / space.d)
+    v[0] = 0.5  # HostCore very important
+    pruned = space.prune(v / v.sum(), v_th=0.04)
+    assert 0 not in pruned.pinned           # important feature survives
+    assert len(pruned.pinned) > 0           # something was pinned
+    idx = pruned.apply_pins(space.sample(jax.random.PRNGKey(0), 16))
+    idx = np.asarray(idx)
+    for i, j in pruned.pinned.items():
+        assert (idx[:, i] == j).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+def test_sample_deterministic(seed, n):
+    space = make_space()
+    a = np.asarray(space.sample(jax.random.PRNGKey(seed), n))
+    b = np.asarray(space.sample(jax.random.PRNGKey(seed), n))
+    assert (a == b).all()
+
+
+def test_pruned_fraction_monotone(space):
+    v = np.full(space.d, 1.0 / space.d)
+    p1 = space.prune(v * 0 + 1, v_th=0.0)   # nothing pinned
+    assert p1.pruned_fraction() == pytest.approx(0.0)
+    v2 = np.zeros(space.d)
+    v2[:5] = 0.2
+    p2 = space.prune(v2, v_th=0.1)          # 21 features pinned
+    assert p2.pruned_fraction() > 0.99

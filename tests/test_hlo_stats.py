@@ -1,0 +1,77 @@
+"""HLO analyzer: trip-count-corrected flops on known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_stats import analyze_hlo
+
+
+def _flops_of(fn, *args):
+    hlo = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze_hlo(hlo)
+
+
+def test_single_matmul():
+    x = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    s = _flops_of(lambda a, b: a @ b, x, w)
+    assert s.dot_flops == 2 * 256 * 512 * 128
+
+
+def test_scan_multiplies_trip_count():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def scanned(a, b):
+        def body(c, _):
+            return c @ b, None
+        out, _ = jax.lax.scan(body, a, None, length=12)
+        return out
+
+    s1 = _flops_of(lambda a, b: a @ b, x, w)
+    s12 = _flops_of(scanned, x, w)
+    # trip-corrected: 12x a single matmul (XLA may add small fusions)
+    assert s12.dot_flops >= 10 * s1.dot_flops
+    assert s12.dot_flops <= 14 * s1.dot_flops
+    assert 12.0 in s12.while_trips or any(
+        t >= 12 for t in s12.while_trips)
+
+
+def test_nested_scan():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def nested(a, b):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ b, None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        out, _ = jax.lax.scan(outer, a, None, length=5)
+        return out
+
+    s = _flops_of(nested, x, w)
+    one = 2 * 64 * 64 * 64
+    assert abs(s.dot_flops - 15 * one) / (15 * one) < 0.2
+
+
+def test_model_flops_within_2x_of_analytic():
+    """Whole-model check: HLO dot flops for a smoke train step lands within
+    2x of the 6*N*D + attention analytic estimate."""
+    from repro.configs import get_config
+    from repro.models import init, loss_fn
+    cfg = get_config("mistral-nemo-12b", smoke=True)
+    params, _ = init(cfg, jax.random.PRNGKey(0))
+    B, S = 4, 32
+    batch = {"tokens": jnp.zeros((B, S + 1), jnp.int32)}
+
+    def step(p, b):
+        loss, _ = loss_fn(p, cfg, b)
+        return jax.grad(lambda pp: loss_fn(pp, cfg, b)[0])(p)
+
+    hlo = jax.jit(step).lower(params, batch).compile().as_text()
+    s = analyze_hlo(hlo)
+    # matmul params exclude embeddings (gather)
+    n_mat = cfg.n_params() - cfg.vocab * cfg.d_model
+    analytic = 6 * n_mat * B * S * (4.0 / 3.0)  # bwd + remat recompute
+    assert 0.4 < s.dot_flops / analytic < 2.5, (s.dot_flops, analytic)

@@ -1,0 +1,106 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret=True)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import ops as fa_ops, ref as fa_ref
+from repro.kernels.pairdist import ops as pd_ops, ref as pd_ref
+from repro.kernels.pareto_count import ops as pc_ops, ref as pc_ref
+from repro.kernels.systolic_eval import ops as se_ops
+from repro.core import make_space
+from repro.soc import get_workload, soc_metrics
+
+
+# ------------------------------------------------------------- pairdist
+@pytest.mark.parametrize("n,m,d", [(8, 8, 4), (100, 50, 26), (128, 128, 26),
+                                   (200, 131, 26), (256, 256, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairdist_sweep(n, m, d, dtype):
+    kx, ky = jax.random.split(jax.random.PRNGKey(n * m + d))
+    x = jax.random.normal(kx, (n, d), dtype)
+    y = jax.random.normal(ky, (m, d), dtype)
+    got = pd_ops.pairwise_sqdist(x, y)
+    want = pd_ref.pairwise_sqdist(x.astype(jnp.float32), y.astype(jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bw", [0.5, 2.0, 10.0])
+def test_pairdist_rbf_fused(bw):
+    x = jax.random.normal(jax.random.PRNGKey(0), (130, 26))
+    got = pd_ops.rbf_kernel(x, x, bw)
+    want = pd_ref.rbf(x, x, bw)
+    # 1e-4: kernel accumulates the cross term in 128-wide padded tiles, the
+    # ref in one dot — f32 ordering differences reach ~3e-5 near exp(0)=1
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert np.allclose(np.diagonal(got), 1.0, atol=1e-4)
+
+
+# ---------------------------------------------------------- pareto_count
+@pytest.mark.parametrize("n,m", [(4, 2), (127, 3), (128, 3), (129, 2),
+                                 (400, 3)])
+def test_pareto_count_sweep(n, m):
+    y = jax.random.normal(jax.random.PRNGKey(n + m), (n, m))
+    got = np.asarray(pc_ops.dominance_counts(y))
+    want = np.asarray(pc_ref.dominance_counts(y))
+    assert (got == want).all()
+
+
+def test_pareto_count_duplicates():
+    y = jnp.ones((150, 3))
+    assert (np.asarray(pc_ops.dominance_counts(y)) == 0).all()
+
+
+# ------------------------------------------------------------ flash_attn
+@pytest.mark.parametrize("s,hd", [(128, 64), (256, 64), (384, 128),
+                                  (256, 80)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, hd, dtype):
+    B, H = 2, 3
+    ks = jax.random.split(jax.random.PRNGKey(s + hd), 3)
+    q = jax.random.normal(ks[0], (B, s, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, s, H, hd), dtype)
+    v = jax.random.normal(ks[2], (B, s, H, hd), dtype)
+    got = fa_ops.flash_attention(q, k, v, causal=True)
+
+    def fold(t):
+        return jnp.moveaxis(t, 2, 1).reshape(B * H, s, t.shape[-1])
+
+    want = fa_ref.attention(fold(q), fold(k), fold(v),
+                            scale=1.0 / math.sqrt(hd), causal=True)
+    want = jnp.moveaxis(want.reshape(B, H, s, hd), 1, 2)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_model_sdpa():
+    """Kernel vs the model's chunked jnp attention path."""
+    from repro.models.attention import _sdpa
+    B, S, H, hd = 2, 256, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    want = _sdpa(q, k, v, 1.0 / math.sqrt(hd), qpos=pos, kpos=pos, causal=True)
+    got = fa_ops.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------- systolic_eval
+@pytest.mark.parametrize("workload", ["resnet50", "mobilenet", "transformer"])
+@pytest.mark.parametrize("n", [5, 128, 300])
+def test_systolic_eval_sweep(workload, n):
+    space = make_space()
+    idx = np.asarray(space.sample(jax.random.PRNGKey(n), n))
+    vals = jnp.asarray(space.values(idx), jnp.float32)
+    layers = jnp.asarray(get_workload(workload), jnp.float32)
+    got = se_ops.soc_metrics(vals, layers)
+    want = soc_metrics(vals, layers)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,78 @@
+"""Pareto machinery: dominance, ADRS, hypervolume — unit + hypothesis."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import adrs, dominance_counts, hypervolume, pareto_front, \
+    pareto_mask
+
+finite = st.floats(-100, 100, allow_nan=False, width=32)
+metric_arrays = hnp.arrays(
+    np.float32,
+    st.tuples(st.integers(2, 40), st.sampled_from([2, 3])),
+    elements=finite)
+
+
+def test_dominance_basic():
+    y = jnp.array([[1.0, 1.0], [2.0, 2.0], [0.5, 3.0], [2.0, 1.0]])
+    c = np.asarray(dominance_counts(y))
+    assert c[0] == 0            # (1,1) undominated
+    assert c[1] == 2            # dominated by (1,1) and (2,1)
+    assert c[2] == 0
+    assert c[3] == 1            # dominated by (1,1) only
+
+
+def test_equal_points_do_not_dominate():
+    y = jnp.array([[1.0, 2.0], [1.0, 2.0]])
+    assert np.asarray(dominance_counts(y)).tolist() == [0, 0]
+
+
+@settings(max_examples=50, deadline=None)
+@given(metric_arrays)
+def test_front_is_nondominated(y):
+    mask = np.asarray(pareto_mask(jnp.asarray(y)))
+    assert mask.any()  # at least one non-dominated point always exists
+    front = y[mask]
+    # no front point dominates another front point
+    c = np.asarray(dominance_counts(jnp.asarray(front)))
+    assert (c == 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(metric_arrays)
+def test_adrs_zero_against_self(y):
+    front = pareto_front(y)
+    assert adrs(front, front) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_adrs_decreases_with_better_coverage(pool_metrics):
+    ref = pareto_front(pool_metrics)
+    half = ref[::2]
+    assert adrs(ref, half) >= adrs(ref, ref)
+
+
+def test_hypervolume_2d_exact():
+    front = np.array([[1.0, 2.0], [2.0, 1.0]])
+    ref = np.array([3.0, 3.0])
+    # area = (3-1)*(3-2) + (3-2)*(2-1) = 2 + 1 = 3
+    assert hypervolume(front, ref) == pytest.approx(3.0)
+
+
+def test_hypervolume_monotone_3d():
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 1, (20, 3))
+    ref = np.array([1.5, 1.5, 1.5])
+    hv1 = hypervolume(pts[:10], ref)
+    hv2 = hypervolume(pts, ref)
+    assert hv2 >= hv1 - 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(metric_arrays)
+def test_kernel_matches_reference_dominance(y):
+    from repro.kernels.pareto_count import ops
+    ref = np.asarray(dominance_counts(jnp.asarray(y)))
+    ker = np.asarray(ops.dominance_counts(jnp.asarray(y)))
+    assert (ref == ker).all()

@@ -1,0 +1,64 @@
+"""Logical-axis resolver: priorities, divisibility fallbacks, specs."""
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import AxisRules
+
+
+def _rules(pod=False):
+    r = AxisRules(None)
+    r.axis_sizes = ({"pod": 2, "data": 16, "model": 16} if pod
+                    else {"data": 16, "model": 16})
+    return r
+
+
+def test_heads_divisible_claims_model():
+    r = _rules()
+    # mistral: 32 heads -> heads sharded, seq replicated
+    assert r.spec(("batch", "seq", "heads", None), (256, 4096, 32, 128)) \
+        == P("data", None, "model")
+
+
+def test_heads_fallback_to_seq_parallel():
+    r = _rules()
+    # qwen3: 40 heads don't divide 16 -> sequence parallelism kicks in
+    assert r.spec(("batch", "seq", "heads", None), (256, 4096, 40, 128)) \
+        == P("data", "model")
+
+
+def test_kv_heads_replicated_when_non_divisible():
+    r = _rules()
+    assert r.spec(("batch", None, "kv_heads", None), (32, 4096, 8, 128)) \
+        == P("data")
+
+
+def test_multi_pod_batch_axes():
+    r = _rules(pod=True)
+    assert r.spec(("batch", None), (256, 10)) == P(("pod", "data"))
+    # batch=1 long-context: batch unshardable
+    assert r.spec(("batch", "cache_seq", None), (1, 524288, 576)) \
+        == P(None, "model")
+
+
+def test_custom_rules_override():
+    r = AxisRules(None, {"cache_seq": (("data", "model"),)})
+    r.axis_sizes = {"data": 16, "model": 16}
+    assert r.spec(("batch", "cache_seq", None), (1, 524288, 576)) \
+        == P(None, ("data", "model"))
+
+
+def test_vocab_sharding_and_fallback():
+    r = _rules()
+    assert r.spec(("vocab", "embed_fsdp"), (151936, 5120)) == P("model", "data")
+    # whisper vocab 51865 is odd -> replicated; embed dim still FSDP-shards
+    assert r.spec(("vocab", "embed_fsdp"), (51865, 384)) == P(None, "data")
+
+
+def test_no_axis_reuse_within_leaf():
+    r = _rules()
+    # both dims want "model": only the higher-priority one gets it
+    assert r.spec(("heads", "ff"), (32, 4096)) in (P("model"), P(None, "model"))
+
+
+def test_no_mesh_means_replicated():
+    r = AxisRules(None)
+    assert r.spec(("batch", "heads"), (8, 32)) == P()

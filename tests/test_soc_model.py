@@ -1,0 +1,105 @@
+"""SoC evaluation model: invariants the exploration relies on (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_space
+from repro.core.space import TABLE_I
+from repro.soc import (SimplifiedFlow, VLSIFlow, area_breakdown, get_workload,
+                       soc_metrics, from_arch_config)
+from repro.configs import ARCH_IDS, get_config
+
+SPACE = make_space()
+FEAT = {f.name: i for i, f in enumerate(TABLE_I)}
+
+design_strategy = st.tuples(*[st.integers(0, f.t - 1) for f in TABLE_I])
+
+
+def _metrics(idx_rows):
+    idx = np.asarray(idx_rows, np.int32)
+    vals = SPACE.values(idx)
+    return np.asarray(soc_metrics(jnp.asarray(vals, jnp.float32),
+                                  jnp.asarray(get_workload("resnet50"),
+                                              jnp.float32)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(design_strategy)
+def test_metrics_finite_positive(d):
+    m = _metrics([list(d)])
+    assert np.isfinite(m).all()
+    assert (m > 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(design_strategy)
+def test_bigger_array_never_slower(d):
+    """Monotonicity: growing the systolic mesh can't increase latency."""
+    d = list(d)
+    d[FEAT["MeshRow"]], d[FEAT["MeshCol"]] = 0, 0
+    small = _metrics([d])
+    d[FEAT["MeshRow"]], d[FEAT["MeshCol"]] = 3, 3
+    big = _metrics([d])
+    assert big[0, 0] <= small[0, 0] * 1.001
+    assert big[0, 2] >= small[0, 2]  # ...but area strictly grows
+
+
+@settings(max_examples=20, deadline=None)
+@given(design_strategy)
+def test_wider_datatype_costs_area(d):
+    d = list(d)
+    d[FEAT["InputType"]] = 0
+    a8 = _metrics([d])[0, 2]
+    d[FEAT["InputType"]] = 2
+    a32 = _metrics([d])[0, 2]
+    assert a32 > a8
+
+
+def test_interactions_visible():
+    """The model must expose cross-component interactions (the paper's core
+    claim): starving the DMA on a bandwidth-bound design changes latency."""
+    d = [1] * 26
+    d[FEAT["MeshRow"]] = d[FEAT["MeshCol"]] = 3  # big array -> memory bound
+    d[FEAT["DMABus"]], d[FEAT["MemReq"]] = 0, 0
+    slow = _metrics([d])[0, 0]
+    d[FEAT["DMABus"]], d[FEAT["MemReq"]] = 2, 2
+    fast = _metrics([d])[0, 0]
+    assert fast < slow
+
+
+def test_simplified_model_diverges(space, small_pool):
+    """Fig. 4(c): the SCALE-Sim-like model must rank designs differently."""
+    full = VLSIFlow(space, "resnet50")(small_pool[:64])
+    simp = SimplifiedFlow(space, "resnet50")(small_pool[:64])
+    lat_corr = np.corrcoef(full[:, 0], simp[:, 0])[0, 1]
+    assert lat_corr < 0.98  # meaningfully different orderings
+    assert (simp[:, 0] <= full[:, 0] * 1.001).all()  # idealized = optimistic
+
+
+def test_area_breakdown_sums(space, small_pool):
+    vals = jnp.asarray(space.values(small_pool[:8]), jnp.float32)
+    parts = area_breakdown(vals)
+    total = sum(parts.values())
+    m = np.asarray(soc_metrics(vals, jnp.asarray(get_workload("resnet50"),
+                                                 jnp.float32)))
+    # breakdown * NoC overhead == reported area
+    assert np.allclose(total * 1.08, m[:, 2], rtol=1e-4)
+
+
+def test_workloads_available():
+    for w in ("resnet50", "mobilenet", "transformer"):
+        layers = get_workload(w)
+        assert layers.ndim == 2 and layers.shape[1] == 5
+        assert (layers[:, :4] >= 1).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_workload_lowering(arch):
+    cfg = get_config(arch)
+    for mode in ("decode", "prefill"):
+        layers = from_arch_config(cfg, mode=mode, seq=128, ctx=128)
+        assert layers.shape[1] == 5
+        assert layers.shape[0] >= cfg.n_layers  # >= one GEMM per layer
+        assert np.isfinite(layers).all()
