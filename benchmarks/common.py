@@ -33,6 +33,7 @@ class Bench:
     ref_front: np.ndarray     # true Pareto front of the pool
     flow_factory: object      # () -> fresh VLSIFlow (for budget counting)
     workload: str
+    simplified: bool = False  # ref/pool came from SimplifiedFlow
 
 
 def make_bench(workload: str = "resnet50", n_pool: int = 2500,
@@ -51,7 +52,7 @@ def make_bench(workload: str = "resnet50", n_pool: int = 2500,
         np.savez(cache, pool=pool, y=y)
     return Bench(space=space, pool=pool, y=y, ref_front=pareto_front(y),
                  flow_factory=lambda: flow_cls(space, workload),
-                 workload=workload)
+                 workload=workload, simplified=simplified)
 
 
 def run_method(name: str, bench: Bench, *, T: int, b: int, n: int,
@@ -65,6 +66,31 @@ def run_method(name: str, bench: Bench, *, T: int, b: int, n: int,
                          use_kernels=use_kernels)
     return run_baseline(name, bench.space, bench.pool, flow, T=T, b=b,
                         key=key, reference_front=bench.ref_front)
+
+
+def run_fleet(benches: "list[Bench]", seeds: int, *, T: int, b: int, n: int,
+              weights=((1.0, 1.0, 1.0),), verbose: bool = False):
+    """All (workload × seed × weighting) scenarios in ONE fleet_tuner call.
+
+    Every ``Bench`` must share the same candidate pool (they do when built by
+    ``make_bench`` with the same ``n_pool``/``seed`` — the pool draw does not
+    depend on the workload). Returns the ``FleetResult``.
+    """
+    from repro.core import FleetScenario, fleet_tuner
+    for bn in benches:
+        if bn.simplified:
+            raise ValueError(
+                "fleet evaluation always uses the full surrogate; a "
+                "simplified bench's reference front would score it "
+                "meaninglessly")
+        if not np.array_equal(bn.pool, benches[0].pool):
+            raise ValueError("fleet scenarios must share one candidate pool")
+    scenarios = [FleetScenario(bn.workload, seed=s, weights=tuple(w))
+                 for bn in benches for s in range(seeds) for w in weights]
+    return fleet_tuner(
+        benches[0].space, benches[0].pool, scenarios, T=T, n=n, b=b,
+        reference_fronts={bn.workload: bn.ref_front for bn in benches},
+        verbose=verbose)
 
 
 def write_csv(name: str, header: list[str], rows: list[list]) -> str:

@@ -2,6 +2,11 @@
 
 Protocol (§IV-B): identical evaluation budget per method (b init + T BO
 rounds), repeated over seeds, mean ADRS against the pool's true front.
+
+The multi-seed SoC-Tuner curves run through the fleet path (one batched
+``fleet_tuner`` call for all seeds, shared evaluation cache) unless
+``--use-kernels`` forces the sequential Pallas-kernel loop; baselines remain
+per-seed sequential runs.
 """
 from __future__ import annotations
 
@@ -10,7 +15,7 @@ import time
 
 import numpy as np
 
-from .common import METHODS, make_bench, run_method, write_csv
+from .common import METHODS, make_bench, run_fleet, run_method, write_csv
 
 
 def main(T: int = 20, b: int = 20, n: int = 30, repeats: int = 3,
@@ -21,10 +26,16 @@ def main(T: int = 20, b: int = 20, n: int = 30, repeats: int = 3,
     for m in methods:
         curves = []
         t0 = time.time()
-        for s in range(repeats):
-            res = run_method(m, bench, T=T, b=b, n=n, seed=s,
-                             use_kernels=use_kernels)
-            curves.append([h["adrs"] for h in res.history])
+        if m == "soc-tuner" and not use_kernels:
+            fr = run_fleet([bench], repeats, T=T, b=b, n=n)
+            curves = [[h["adrs"] for h in r.history] for r in fr.results]
+            if verbose:
+                print(f"  {m}: fleet of {repeats} seeds, {fr.cache.summary()}")
+        else:
+            for s in range(repeats):
+                res = run_method(m, bench, T=T, b=b, n=n, seed=s,
+                                 use_kernels=use_kernels)
+                curves.append([h["adrs"] for h in res.history])
         curves = np.asarray(curves)
         mean = curves.mean(0)
         for r, v in enumerate(mean):

@@ -1,0 +1,89 @@
+"""Fleet sweep — many (workload × seed × weighting) explorations, one process.
+
+The paper's protocol evaluates one workload at a time; real SoC DSE wants an
+edge device co-designed against a *portfolio* of networks. This benchmark
+runs the whole portfolio through ``repro.core.fleet_tuner``: one vmapped GP
+fit + IMOO acquisition per round for every scenario, one shared memoized flow
+cache across the fleet, and fused cross-workload evaluation dispatches.
+
+    PYTHONPATH=src python -m benchmarks.fleet_sweep \
+        --workloads resnet50,mobilenet,transformer --seeds 2 --T 15 --pool 800
+
+Reports per-scenario final ADRS (vs the pool's true per-workload front),
+fleet cache statistics, and the speed-relevant dispatch counts; writes
+``results/benchmarks/fleet_sweep.csv``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from .common import make_bench, run_fleet, write_csv
+
+
+def parse_weights(spec: str) -> tuple[tuple[float, float, float], ...]:
+    """'1,1,1;2,1,1' -> ((1,1,1), (2,1,1)) — one fleet axis per weighting."""
+    out = []
+    for chunk in spec.split(";"):
+        w = tuple(float(x) for x in chunk.split(","))
+        assert len(w) == 3, f"weighting needs 3 values, got {chunk!r}"
+        out.append(w)
+    return tuple(out)
+
+
+def main(workloads=("resnet50", "mobilenet", "transformer"), seeds: int = 2,
+         T: int = 15, b: int = 12, n: int = 20, n_pool: int = 800,
+         weights=((1.0, 1.0, 1.0),), verbose: bool = True):
+    t0 = time.time()
+    benches = [make_bench(w, n_pool=n_pool) for w in workloads]
+    t_ref = time.time() - t0
+
+    t0 = time.time()
+    fr = run_fleet(benches, seeds, T=T, b=b, n=n, weights=weights,
+                   verbose=False)
+    t_fleet = time.time() - t0
+
+    rows = []
+    for sc, res in zip(fr.scenarios, fr.results):
+        final = res.history[-1]
+        rows.append([sc.label, sc.workload, sc.seed,
+                     "x".join(f"{w:g}" for w in sc.weights),
+                     round(final["adrs"], 5), final["evaluations"],
+                     final["pareto_size"]])
+    path = write_csv("fleet_sweep.csv",
+                     ["scenario", "workload", "seed", "weights", "adrs",
+                      "evaluations", "pareto_size"], rows)
+    write_csv("fleet_sweep_cache.csv",
+              ["requests", "hits", "hit_rate", "evaluated", "flow_calls"],
+              [[fr.cache.requests, fr.cache.hits,
+                round(fr.cache.hit_rate, 4), fr.cache.evaluated,
+                fr.cache.flow_calls]])
+    if verbose:
+        print(f"# fleet sweep: {len(fr.scenarios)} scenarios "
+              f"({len(workloads)} workloads x {seeds} seeds x "
+              f"{len(weights)} weightings), pool={n_pool}, T={T}")
+        for r in rows:
+            print(f"  {r[0]:<28s} adrs={r[4]:.4f} evals={r[5]:4d} "
+                  f"front={r[6]:3d}")
+        print(f"  {fr.cache.summary()}")
+        print(f"  wall: {t_fleet:.1f}s fleet ({t_fleet / len(fr.scenarios):.1f}s"
+              f"/scenario) + {t_ref:.1f}s reference fronts; csv: {path}")
+    return fr
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--workloads", default="resnet50,mobilenet,transformer",
+                    help="comma-separated workload names (see repro.soc)")
+    ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--T", type=int, default=15)
+    ap.add_argument("--b", type=int, default=12)
+    ap.add_argument("--n", type=int, default=20)
+    ap.add_argument("--pool", type=int, default=800)
+    ap.add_argument("--weights", default="1,1,1",
+                    help="';'-separated objective weightings, e.g. '1,1,1;2,1,1'")
+    a = ap.parse_args()
+    main(workloads=tuple(a.workloads.split(",")), seeds=a.seeds, T=a.T,
+         b=a.b, n=a.n, n_pool=a.pool, weights=parse_weights(a.weights))

@@ -3,28 +3,61 @@
 - ``space``       TABLE I design space (encode/sample/prune)
 - ``icd``         Algorithm 1 — inter-cluster-distance importance
 - ``sampling``    Algorithm 2 — importance-guided TED initialization
-- ``gp``          GP surrogates (Eqs. 3-4), pure JAX
+- ``gp``          GP surrogates (Eqs. 3-4), pure JAX (+ vmap-batched fleet fit)
 - ``acquisition`` IMOO information-gain acquisition (Eqs. 5-10)
 - ``tuner``       Algorithm 3 — the full exploration loop
+- ``fleet``       batched multi-(workload × seed × weighting) exploration
 - ``pareto``      dominance / Pareto front / ADRS (Eq. 12) / hypervolume
 - ``baselines``   the six comparison methods of §IV
+
+Explore one scenario (Algorithm 3)::
+
+    import jax, numpy as np
+    from repro.core import make_space, pareto_front, soc_tuner
+    from repro.soc import VLSIFlow
+
+    space = make_space()
+    pool = np.asarray(space.sample(jax.random.PRNGKey(0), 500))
+    flow = VLSIFlow(space, "resnet50")
+    res = soc_tuner(space, pool, flow, T=15, n=20, b=12)
+    print(res.pareto_y)              # learned (latency, power, area) front
+    print(res.pareto_idx(pool))      # the designs achieving it
+
+Explore a fleet of scenarios in one call (shared evaluation cache, one
+vmapped GP fit + acquisition per round for ALL scenarios)::
+
+    from repro.core import FleetScenario, fleet_tuner
+    fr = fleet_tuner(space, pool, [FleetScenario("resnet50", seed=0),
+                                   FleetScenario("resnet50", seed=1),
+                                   FleetScenario("transformer", seed=0)],
+                     T=15, n=20, b=12)
+    print(fr.cache.summary())        # cache hit rate across the fleet
+
+See ``docs/api.md`` for the full API tour and ``docs/design_space.md`` /
+``docs/surrogate.md`` for what is being explored and against what evaluator.
 """
 from .space import DesignSpace, Feature, TABLE_I, make_space
 from .icd import icd, icd_from_data
 from .sampling import soc_init, ted_select, transform_to_icd
-from .gp import GPState, fit_gp, gp_predict, gp_joint_samples
-from .acquisition import imoo_scores, mes_information_gain, frontier_maxima
+from .gp import (GPState, fit_gp, fit_gp_batch, pad_training, gp_predict,
+                 gp_joint_samples)
+from .acquisition import (imoo_scores, imoo_scores_batch,
+                          mes_information_gain, frontier_maxima)
 from .pareto import adrs, dominance_counts, hypervolume, pareto_front, pareto_mask
-from .tuner import TunerResult, soc_tuner
+from .tuner import TunerResult, soc_tuner, frontier_subset_rows
+from .fleet import FleetScenario, FleetResult, FlowEvalCache, fleet_tuner
 from .baselines import BASELINES, run_baseline
 
 __all__ = [
     "DesignSpace", "Feature", "TABLE_I", "make_space",
     "icd", "icd_from_data",
     "soc_init", "ted_select", "transform_to_icd",
-    "GPState", "fit_gp", "gp_predict", "gp_joint_samples",
-    "imoo_scores", "mes_information_gain", "frontier_maxima",
+    "GPState", "fit_gp", "fit_gp_batch", "pad_training", "gp_predict",
+    "gp_joint_samples",
+    "imoo_scores", "imoo_scores_batch", "mes_information_gain",
+    "frontier_maxima",
     "adrs", "dominance_counts", "hypervolume", "pareto_front", "pareto_mask",
-    "TunerResult", "soc_tuner",
+    "TunerResult", "soc_tuner", "frontier_subset_rows",
+    "FleetScenario", "FleetResult", "FlowEvalCache", "fleet_tuner",
     "BASELINES", "run_baseline",
 ]

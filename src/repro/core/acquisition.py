@@ -25,7 +25,8 @@ import jax.numpy as jnp
 
 from .gp import GPState, gp_joint_samples, gp_predict
 
-__all__ = ["frontier_maxima", "mes_information_gain", "imoo_scores"]
+__all__ = ["frontier_maxima", "mes_information_gain", "imoo_scores",
+           "imoo_scores_batch"]
 
 
 @functools.partial(jax.jit, static_argnames=("s",))
@@ -45,17 +46,27 @@ def frontier_maxima(state: GPState, cand: jnp.ndarray, key: jax.Array,
 
 @jax.jit
 def mes_information_gain(mean: jnp.ndarray, std: jnp.ndarray,
-                         ystar: jnp.ndarray) -> jnp.ndarray:
-    """Eq. (8)+(9): I(x') [q] from posterior (mean,std) [q,m] and y* [S,m]."""
+                         ystar: jnp.ndarray,
+                         weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Eq. (8)+(9): I(x') [q] from posterior (mean,std) [q,m] and y* [S,m].
+
+    ``weights`` [m] (optional) scalarizes the per-objective information gain
+    ``I(x') = Σ_i w_i·AF_i(x')`` — the fleet runner uses it to bias scenarios
+    toward latency/power/area without touching the GP (target scaling would
+    cancel under standardization). ``None`` ≡ uniform weights."""
     gamma = (ystar[:, None, :] - mean[None, :, :]) / std[None, :, :]  # [S,q,m]
     pdf = jax.scipy.stats.norm.pdf(gamma)
     cdf = jnp.clip(jax.scipy.stats.norm.cdf(gamma), 1e-9, 1.0)
     af = gamma * pdf / (2.0 * cdf) - jnp.log(cdf)  # [S, q, m]
-    return jnp.sum(jnp.mean(af, axis=0), axis=-1)  # Σ_i (1/S) Σ_s — Eq. (7)+(9)
+    per_obj = jnp.mean(af, axis=0)  # (1/S) Σ_s — Eq. (7)
+    if weights is not None:
+        per_obj = per_obj * weights[None, :]
+    return jnp.sum(per_obj, axis=-1)  # Σ_i — Eq. (9)
 
 
 def imoo_scores(state: GPState, cand: jnp.ndarray, key: jax.Array,
-                s: int = 10, frontier_cand: jnp.ndarray | None = None) -> jnp.ndarray:
+                s: int = 10, frontier_cand: jnp.ndarray | None = None,
+                weights: jnp.ndarray | None = None) -> jnp.ndarray:
     """Acquisition score for every candidate row (maximization convention).
 
     ``frontier_cand`` (default: ``cand``) is the subset used for the O(q³)
@@ -65,4 +76,28 @@ def imoo_scores(state: GPState, cand: jnp.ndarray, key: jax.Array,
     fc = cand if frontier_cand is None else frontier_cand
     ystar = frontier_maxima(state, fc, key, s=s)
     mean, std = gp_predict(state, cand)
-    return mes_information_gain(mean, std, ystar)
+    return mes_information_gain(mean, std, ystar, weights)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def imoo_scores_batch(states: GPState, cand: jnp.ndarray, keys: jax.Array,
+                      s: int = 10, frontier_cand: jnp.ndarray | None = None,
+                      weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """IMOO scores for ``S`` scenarios at once -> [S, N].
+
+    ``states`` is a batched ``GPState`` from ``fit_gp_batch``; ``cand``
+    [S,N,d] and ``frontier_cand`` [S,q,d] are per-scenario ICD pools; ``keys``
+    [S,2] per-scenario PRNG keys; ``weights`` [S,m] optional per-scenario
+    objective weightings. One vmapped XLA program covers the whole fleet's
+    round — per-scenario math identical to :func:`imoo_scores`."""
+    fc = cand if frontier_cand is None else frontier_cand
+
+    def one(state, c, f, k, w):
+        ystar = frontier_maxima(state, f, k, s=s)
+        mean, std = gp_predict(state, c)
+        return mes_information_gain(mean, std, ystar, w)
+
+    if weights is None:
+        return jax.vmap(lambda st, c, f, k: one(st, c, f, k, None))(
+            states, cand, fc, keys)
+    return jax.vmap(one)(states, cand, fc, keys, weights)

@@ -1,0 +1,336 @@
+"""Fleet runner — batched multi-scenario SoC exploration.
+
+``soc_tuner`` (Algorithm 3) explores ONE (workload, seed) with one Python
+call; sweeping the paper's protocol — several workloads × several seeds ×
+several objective weightings — repeats the expensive inner round S times per
+BO iteration. The fleet runner turns that outer loop inside out:
+
+* the per-round GP fit and IMOO acquisition are executed for **all scenarios
+  in one vmapped XLA program** (``fit_gp_batch`` / ``imoo_scores_batch``) —
+  every scenario's training set is padded onto a fleet-wide static shape so
+  the jit cache is shared across scenarios AND rounds;
+* flow evaluations go through a **shared memoized cache** keyed by
+  (workload, pool row): two seeds exploring ResNet-50 never pay twice for the
+  same design point, and ICD trials of one scenario seed the GP of another
+  for free;
+* cache misses pending for *different* workloads are fused into a single
+  dispatch of ``soc_metrics_multi`` (the surrogate broadcasts over designs ×
+  layers; the fleet vmaps the workload axis on top).
+
+Per-scenario math is computation-for-computation identical to ``soc_tuner``:
+a fleet of one reproduces the sequential trajectory on the same seed (see
+``tests/test_fleet.py``).
+
+Usage::
+
+    from repro.core import FleetScenario, fleet_tuner, make_space
+    space = make_space()
+    pool = np.asarray(space.sample(jax.random.PRNGKey(0), 1000))
+    scenarios = [FleetScenario("resnet50", seed=0),
+                 FleetScenario("resnet50", seed=1),
+                 FleetScenario("transformer", seed=0,
+                               weights=(2.0, 1.0, 1.0))]   # latency-hungry
+    fr = fleet_tuner(space, pool, scenarios, T=15, n=20, b=12)
+    for sc, res in zip(fr.scenarios, fr.results):
+        print(sc.label, res.pareto_y)
+    print(fr.cache.summary())
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .acquisition import imoo_scores_batch
+from .gp import PAD_BUCKET, fit_gp_batch, pad_training
+from .icd import icd_from_data
+from .pareto import pareto_mask
+from .sampling import soc_init
+from .space import DesignSpace
+from .tuner import (TunerResult, frontier_subset_rows, icd_trial_rows,
+                    merge_trial_evals, round_record)
+
+__all__ = ["FleetScenario", "FleetResult", "FlowEvalCache", "fleet_tuner"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetScenario:
+    """One exploration scenario: a workload, an RNG seed, and an optional
+    per-objective acquisition weighting (latency, power, area)."""
+
+    workload: str
+    seed: int = 0
+    weights: tuple[float, float, float] = (1.0, 1.0, 1.0)
+
+    @property
+    def label(self) -> str:
+        w = ""
+        if tuple(self.weights) != (1.0, 1.0, 1.0):
+            w = ":w" + "x".join(f"{x:g}" for x in self.weights)
+        return f"{self.workload}:s{self.seed}{w}"
+
+
+class FlowEvalCache:
+    """Memoized flow evaluations shared across a fleet.
+
+    Keyed by ``(workload, pool row)``; misses are batched — per flush, one
+    XLA dispatch when a single workload is pending, one fused
+    ``soc_metrics_multi`` dispatch when several are. ``hits``/``misses``
+    count *requests*, ``evaluated`` counts design points actually pushed
+    through the surrogate (== stored entries), ``flow_calls`` counts
+    dispatches.
+    """
+
+    def __init__(self, space: DesignSpace, pool_idx: np.ndarray,
+                 workloads: Sequence[str]):
+        from repro.soc.workloads import get_workload
+
+        self.space = space
+        self.pool_idx = np.asarray(pool_idx)
+        self.layers = {w: np.asarray(get_workload(w), np.float64)
+                       for w in dict.fromkeys(workloads)}
+        self._store: dict[str, dict[int, np.ndarray]] = {
+            w: {} for w in self.layers}
+        self.hits = 0
+        self.misses = 0
+        self.flow_calls = 0
+        self.evaluated = 0
+
+    @property
+    def requests(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.requests, 1)
+
+    def summary(self) -> str:
+        return (f"cache: {self.requests} requests, {self.hits} hits "
+                f"({100.0 * self.hit_rate:.1f}%), {self.evaluated} designs "
+                f"evaluated in {self.flow_calls} flow dispatches")
+
+    # ------------------------------------------------------------------ eval
+    def evaluate_many(self, reqs: list[tuple[str, np.ndarray]]
+                      ) -> list[np.ndarray]:
+        """Resolve ``[(workload, rows), ...]`` -> ``[y [len(rows), 3], ...]``.
+
+        All cache misses across all requests are evaluated in one flush
+        before any result is assembled."""
+        pending: dict[str, list[int]] = {}
+        for wl, rows in reqs:
+            store = self._store[wl]
+            seen = pending.setdefault(wl, [])
+            for r in np.asarray(rows).reshape(-1):
+                r = int(r)
+                if r in store or r in seen:
+                    self.hits += 1
+                else:
+                    seen.append(r)
+                    self.misses += 1
+        self._flush({w: rows for w, rows in pending.items() if rows})
+        return [np.stack([self._store[wl][int(r)]
+                          for r in np.asarray(rows).reshape(-1)])
+                for wl, rows in reqs]
+
+    def evaluate(self, workload: str, rows: np.ndarray) -> np.ndarray:
+        return self.evaluate_many([(workload, rows)])[0]
+
+    def _flush(self, pending: dict[str, list[int]]) -> None:
+        from repro.soc.model import soc_metrics, soc_metrics_multi
+        from repro.soc.workloads import pad_workloads
+
+        if not pending:
+            return
+        self.flow_calls += 1
+        self.evaluated += sum(len(r) for r in pending.values())
+        if len(pending) == 1:
+            # Single-workload flush: the exact batch a sequential ``VLSIFlow``
+            # call would issue — bit-identical metrics for a fleet of one.
+            (wl, rows), = pending.items()
+            vals = self.space.values(self.pool_idx[np.asarray(rows)])
+            y = np.asarray(soc_metrics(jnp.asarray(vals, jnp.float32),
+                                       jnp.asarray(self.layers[wl], jnp.float32)))
+            for r, yr in zip(rows, y):
+                self._store[wl][r] = yr
+            return
+        # Fused path: pad rows to a common count and layers to a common depth,
+        # then one vmapped dispatch covers every pending workload.
+        names = list(pending)
+        rmax = max(len(pending[w]) for w in names)
+        vals = np.stack([
+            self.space.values(self.pool_idx[np.asarray(
+                pending[w] + pending[w][:1] * (rmax - len(pending[w])))])
+            for w in names])
+        layers, mask = pad_workloads([self.layers[w] for w in names])
+        y = np.asarray(soc_metrics_multi(jnp.asarray(vals, jnp.float32),
+                                         jnp.asarray(layers, jnp.float32),
+                                         jnp.asarray(mask, jnp.float32)))
+        for wi, w in enumerate(names):
+            for ri, r in enumerate(pending[w]):
+                self._store[w][r] = y[wi, ri]
+
+
+@dataclasses.dataclass
+class FleetResult:
+    scenarios: list[FleetScenario]
+    results: list[TunerResult]      # per scenario, same layout as soc_tuner's
+    cache: FlowEvalCache
+    wall_s: float
+
+    def final_adrs(self) -> dict[str, float]:
+        """label -> last-round ADRS (scenarios run with a reference front)."""
+        return {sc.label: res.history[-1]["adrs"]
+                for sc, res in zip(self.scenarios, self.results)
+                if "adrs" in res.history[-1]}
+
+
+@dataclasses.dataclass
+class _ScenarioState:
+    """Host-side bookkeeping for one scenario between batched rounds."""
+
+    key: jax.Array
+    v: np.ndarray
+    pruned: DesignSpace
+    pool_icd: jnp.ndarray            # [N, d]
+    evaluated: list[int]
+    y: np.ndarray                    # [k, 3]
+    weights: jnp.ndarray | None
+    history: list[dict]
+
+
+def _log_round(st: _ScenarioState, i: int, label: str,
+               reference_front: np.ndarray | None, verbose: bool) -> None:
+    rec = round_record(st.y, len(st.evaluated), i, reference_front)
+    st.history.append(rec)
+    if verbose:
+        print(f"[fleet] {label:<24s} round {i:3d} evals={rec['evaluations']:4d} "
+              f"front={rec['pareto_size']:3d}"
+              + (f" adrs={rec['adrs']:.4f}" if "adrs" in rec else ""))
+
+
+def fleet_tuner(
+    space: DesignSpace,
+    pool_idx: np.ndarray,
+    scenarios: Sequence[FleetScenario],
+    *,
+    T: int = 40,
+    n: int = 30,
+    mu: float = 0.1,
+    b: int = 20,
+    v_th: float = 0.07,
+    s_frontiers: int = 10,
+    frontier_subset: int = 512,
+    gp_steps: int = 150,
+    reference_fronts: dict[str, np.ndarray] | None = None,
+    reuse_icd_trials: bool = True,
+    verbose: bool = False,
+) -> FleetResult:
+    """Explore every scenario of a fleet over the SAME candidate pool.
+
+    Hyperparameters mirror :func:`repro.core.soc_tuner` and apply to every
+    scenario; ``reference_fronts`` maps workload name -> true Pareto front
+    for per-round ADRS logging. Returns one ``TunerResult`` per scenario plus
+    fleet-level cache statistics.
+    """
+    t0 = time.time()
+    scenarios = list(scenarios)
+    pool_idx = np.asarray(pool_idx)
+    N = pool_idx.shape[0]
+    reference_fronts = reference_fronts or {}
+    cache = FlowEvalCache(space, pool_idx, [sc.workload for sc in scenarios])
+
+    # ---- Alg. 3 lines 1-2 per scenario: ICD trials (one fused flush), then
+    # importance + pruning + TED init. Key schedule matches soc_tuner exactly.
+    states: list[_ScenarioState] = []
+    trial_sets: list[np.ndarray] = []
+    for sc in scenarios:
+        trial_rows, key = icd_trial_rows(jax.random.PRNGKey(sc.seed), N, n)
+        trial_sets.append(trial_rows)
+        states.append(_ScenarioState(
+            key=key, v=np.zeros(space.d), pruned=space,
+            pool_icd=jnp.zeros(()), evaluated=[], y=np.zeros((0, 3)),
+            weights=(None if tuple(sc.weights) == (1.0, 1.0, 1.0)
+                     else jnp.asarray(sc.weights, jnp.float32)),
+            history=[]))
+    trial_ys = cache.evaluate_many(
+        [(sc.workload, rows) for sc, rows in zip(scenarios, trial_sets)])
+
+    init_reqs: list[tuple[str, np.ndarray]] = []
+    for sc, st, trial_rows, trial_y in zip(scenarios, states, trial_sets,
+                                           trial_ys):
+        st.v = icd_from_data(space, pool_idx[trial_rows], trial_y)
+        init_rows, st.pruned, pool_icd = soc_init(
+            space, pool_idx, st.v, v_th=v_th, b=b, mu=mu)
+        st.pool_icd = jnp.asarray(pool_icd, jnp.float32)
+        st.evaluated = list(dict.fromkeys(int(r) for r in init_rows))
+        init_reqs.append((sc.workload, np.asarray(st.evaluated)))
+    init_ys = cache.evaluate_many(init_reqs)
+
+    for sc, st, trial_rows, trial_y, init_y in zip(
+            scenarios, states, trial_sets, trial_ys, init_ys):
+        st.evaluated, st.y = merge_trial_evals(
+            st.evaluated, init_y, trial_rows, trial_y, reuse_icd_trials)
+        _log_round(st, 0, sc.label, reference_fronts.get(sc.workload), verbose)
+
+    pool_icd_stack = jnp.stack([st.pool_icd for st in states])  # [S, N, d]
+    any_weights = any(st.weights is not None for st in states)
+    bucket = PAD_BUCKET  # must match fit_gp's padding for fleet-of-one parity
+
+    # ---- Alg. 3 lines 5-10: the BO loop, batched across scenarios.
+    for it in range(T):
+        xs, ys, masks, fcs, keys_acq = [], [], [], [], []
+        n_max = max(len(st.evaluated) for st in states)
+        padded_n = n_max + ((-n_max) % bucket)
+        for st in states:
+            st.key, k_fit, k_acq, k_sub = jax.random.split(st.key, 4)
+            del k_fit  # reserved slot — keeps the schedule aligned w/ tuner
+            rows = np.asarray(st.evaluated)
+            # Negate: paper metrics are minimized, MES maximizes.
+            xp, yp, mask = pad_training(
+                st.pool_icd[rows], jnp.asarray(-st.y, jnp.float32), padded_n)
+            xs.append(xp), ys.append(yp), masks.append(mask)
+            sub = frontier_subset_rows(k_sub, N, frontier_subset)
+            fcs.append(st.pool_icd if sub is None else st.pool_icd[sub])
+            keys_acq.append(k_acq)
+
+        gp_states = fit_gp_batch(jnp.stack(xs), jnp.stack(ys),
+                                 jnp.stack(masks), steps=gp_steps)
+        weights = (jnp.stack([
+            st.weights if st.weights is not None else jnp.ones((3,))
+            for st in states]) if any_weights else None)
+        scores = np.asarray(imoo_scores_batch(
+            gp_states, pool_icd_stack, jnp.stack(keys_acq), s=s_frontiers,
+            frontier_cand=jnp.stack(fcs), weights=weights))  # [S, N]
+
+        # Line 7-8 per scenario: pick the argmax, evaluate all picks in ONE
+        # fused flush (cross-scenario batching + cache dedup).
+        picks: list[int] = []
+        for si, st in enumerate(states):
+            s_row = scores[si].copy()
+            s_row[np.asarray(st.evaluated)] = -np.inf  # never re-evaluate
+            picks.append(int(np.argmax(s_row)))
+        pick_ys = cache.evaluate_many(
+            [(sc.workload, np.asarray([p]))
+             for sc, p in zip(scenarios, picks)])
+        for sc, st, p, y_new in zip(scenarios, states, picks, pick_ys):
+            st.evaluated.append(p)
+            st.y = np.concatenate([st.y, y_new], axis=0)
+            _log_round(st, it + 1, sc.label,
+                       reference_fronts.get(sc.workload), verbose)
+
+    # ---- package per-scenario results in soc_tuner's own layout.
+    wall = time.time() - t0
+    results = []
+    for st in states:
+        rows = np.asarray(st.evaluated)
+        front = np.asarray(pareto_mask(jnp.asarray(st.y.astype(np.float64))))
+        results.append(TunerResult(
+            space=st.pruned, v=np.asarray(st.v), evaluated_rows=rows, y=st.y,
+            pareto_rows=rows[front], pareto_y=st.y[front], history=st.history,
+            wall_s=wall))
+    return FleetResult(scenarios=scenarios, results=results, cache=cache,
+                       wall_s=wall)

@@ -17,9 +17,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["GPParams", "GPState", "fit_gp", "gp_predict", "gp_joint_samples"]
+__all__ = ["GPParams", "GPState", "fit_gp", "fit_gp_batch", "pad_training",
+           "gp_predict", "gp_joint_samples"]
 
 JITTER = 1e-5
+# jit-cache padding granularity for growing-n training sets; the fleet runner
+# pads every scenario to a multiple of this so it MUST stay in sync with the
+# sequential path — change it here, nowhere else.
+PAD_BUCKET = 8
 
 
 class GPParams(NamedTuple):
@@ -118,13 +123,15 @@ def _posterior_cache(params: GPParams, x, y, mask):
         params.log_ls, params.log_var, params.log_noise, y)
 
 
-def fit_gp(x: jnp.ndarray, y: jnp.ndarray, steps: int = 200,
-           params: GPParams | None = None, bucket: int = 8) -> GPState:
-    """Fit m independent GPs on (x [n,d], y [n,m]); y standardized internally.
+def pad_training(x: jnp.ndarray, y: jnp.ndarray, bucket: int = PAD_BUCKET
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pad (x [n,d], y [n,m]) to the next multiple of ``bucket`` with inert
+    rows and return ``(x_pad, y_pad, mask)`` where ``mask`` is 1.0 on padded
+    rows. Padded rows copy the last real row (shifted far away in x) and are
+    silenced in the GP by a huge per-point noise — see ``_nll_one``.
 
-    Training sets are padded to multiples of ``bucket`` with inert rows
-    (masked by a huge per-point noise) so the BO loop's growing-n refits hit
-    the jit cache (O(log T) compiles instead of O(T))."""
+    The fleet runner calls this with ``bucket`` set to the fleet-wide padded
+    length so every scenario's training set lands on the same static shape."""
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     n = x.shape[0]
@@ -133,18 +140,82 @@ def fit_gp(x: jnp.ndarray, y: jnp.ndarray, steps: int = 200,
     if pad:
         x = jnp.concatenate([x, jnp.tile(x[-1:], (pad, 1)) + 10.0], axis=0)
         y = jnp.concatenate([y, jnp.tile(y[-1:], (pad, 1))], axis=0)
+    return x, y, mask
+
+
+def _default_params(m: int, d: int) -> GPParams:
+    return GPParams(
+        log_ls=jnp.zeros((m, d)) - 0.5,
+        log_var=jnp.zeros((m,)),
+        log_noise=jnp.zeros((m,)) - 4.0,
+    )
+
+
+def _standardize(y: jnp.ndarray, mask: jnp.ndarray
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-objective standardization over REAL rows only (mask=1 on padding).
+
+    Computing the moments under the mask makes the amount of padding inert:
+    a fleet scenario padded to the fleet-wide max gets the same GP targets as
+    the same data padded to its own bucket — without this, duplicated pad
+    rows would bias the moments and couple scenarios through their sizes."""
+    w = (1.0 - mask)[:, None]
+    cnt = jnp.maximum(jnp.sum(w), 1.0)
+    y_mean = jnp.sum(y * w, axis=0) / cnt
+    y_std = jnp.sqrt(jnp.sum((y - y_mean) ** 2 * w, axis=0) / cnt) + 1e-9
+    return (y - y_mean) / y_std, y_mean, y_std
+
+
+def fit_gp(x: jnp.ndarray, y: jnp.ndarray, steps: int = 200,
+           params: GPParams | None = None, bucket: int = PAD_BUCKET) -> GPState:
+    """Fit m independent GPs on (x [n,d], y [n,m]); y standardized internally.
+
+    Training sets are padded to multiples of ``bucket`` with inert rows
+    (masked by a huge per-point noise) so the BO loop's growing-n refits hit
+    the jit cache (O(log T) compiles instead of O(T))."""
+    x, y, mask = pad_training(x, y, bucket)
     m, d = y.shape[1], x.shape[1]
-    y_mean, y_std = y.mean(0), y.std(0) + 1e-9
-    yn = (y - y_mean) / y_std
+    yn, y_mean, y_std = _standardize(y, mask)
     if params is None:
-        params = GPParams(
-            log_ls=jnp.zeros((m, d)) - 0.5,
-            log_var=jnp.zeros((m,)),
-            log_noise=jnp.zeros((m,)) - 4.0,
-        )
+        params = _default_params(m, d)
     params = _fit(params, x, yn, mask, steps=steps)
     chol, alpha = _posterior_cache(params, x, yn, mask)
     return GPState(params, x, yn, y_mean, y_std, chol, alpha)
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _fit_batch(params: GPParams, x, y, mask, steps: int):
+    def one(p, xi, yi, mi):
+        yn, y_mean, y_std = _standardize(yi, mi)
+        p = _fit(p, xi, yn, mi, steps=steps)
+        chol, alpha = _posterior_cache(p, xi, yn, mi)
+        return GPState(p, xi, yn, y_mean, y_std, chol, alpha)
+
+    return jax.vmap(one)(params, x, y, mask)
+
+
+def fit_gp_batch(x: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray,
+                 steps: int = 200, params: GPParams | None = None) -> GPState:
+    """Fit ``S`` independent multi-objective GPs in one vmapped XLA program.
+
+    ``x`` [S,n,d], ``y`` [S,n,m], ``mask`` [S,n] (1.0 on inert padded rows —
+    build each scenario's slice with :func:`pad_training`). Returns a
+    ``GPState`` whose every field carries a leading scenario axis; feed it to
+    the batched acquisition (``imoo_scores_batch``) or index scenario ``i``
+    out with ``jax.tree.map(lambda a: a[i], state)``.
+
+    Each scenario's fit is computation-for-computation identical to
+    :func:`fit_gp` (same padding rule, mask-aware standardization, Adam
+    schedule and hyperpriors) — a fleet of one reproduces the sequential
+    trajectory."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    S, _, m = y.shape
+    d = x.shape[-1]
+    if params is None:
+        params = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (S,) + a.shape), _default_params(m, d))
+    return _fit_batch(params, x, y, jnp.asarray(mask, jnp.float32), steps=steps)
 
 
 @jax.jit

@@ -37,13 +37,16 @@ def transform_to_icd(space: DesignSpace, idx: jnp.ndarray, v: np.ndarray) -> jnp
     return space.encode(idx) * jnp.asarray(v)[None, :]
 
 
-def median_bandwidth(x: jnp.ndarray) -> float:
-    """Median pairwise distance heuristic for the TED kernel bandwidth."""
-    d2 = pairwise_sqdist(x, x)
-    n = x.shape[0]
+def _median_bandwidth_from_sqdist(d2: jnp.ndarray) -> float:
+    n = d2.shape[0]
     off = d2[jnp.triu_indices(n, 1)] if n > 1 else d2.reshape(-1)
     med = jnp.sqrt(jnp.maximum(jnp.median(off), 1e-12))
     return float(med)
+
+
+def median_bandwidth(x: jnp.ndarray) -> float:
+    """Median pairwise distance heuristic for the TED kernel bandwidth."""
+    return _median_bandwidth_from_sqdist(pairwise_sqdist(x, x))
 
 
 def pairwise_sqdist(a: jnp.ndarray, b: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
@@ -86,9 +89,9 @@ def ted_select(x: jnp.ndarray, b: int, mu: float = 0.1,
                bandwidth: float | None = None,
                use_kernel: bool = False) -> np.ndarray:
     """Select ``b`` maximally informative rows of ``x`` [N, d] (TED)."""
-    if bandwidth is None:
-        bandwidth = median_bandwidth(x)
     d2 = pairwise_sqdist(x, x, use_kernel=use_kernel)
+    if bandwidth is None:
+        bandwidth = _median_bandwidth_from_sqdist(d2)  # reuse, don't recompute
     K = jnp.exp(-d2 / (2.0 * bandwidth**2 + 1e-12))
     return np.asarray(_ted_loop(K, b, float(mu)))
 

@@ -22,9 +22,60 @@ from .pareto import adrs, pareto_mask
 from .sampling import soc_init
 from .space import DesignSpace
 
-__all__ = ["TunerResult", "soc_tuner"]
+__all__ = ["TunerResult", "soc_tuner", "frontier_subset_rows"]
 
 FlowFn = Callable[[np.ndarray], np.ndarray]
+
+
+def icd_trial_rows(key: jax.Array, n_pool: int, n: int
+                   ) -> tuple[np.ndarray, jax.Array]:
+    """Alg. 3 line 1 setup: draw the ``n`` ICD trial pool-rows and return
+    them with the advanced key. Shared with the fleet runner so both paths
+    consume the PRNG stream identically."""
+    k_icd, _k_init, key = jax.random.split(key, 3)
+    rows = np.asarray(jax.random.choice(
+        k_icd, n_pool, shape=(min(n, n_pool),), replace=False))
+    return rows, key
+
+
+def merge_trial_evals(evaluated: "list[int]", y_init: np.ndarray,
+                      trial_rows: np.ndarray, trial_y: np.ndarray,
+                      reuse_icd_trials: bool) -> tuple["list[int]", np.ndarray]:
+    """Alg. 3 line 4 bookkeeping: seed the GP with the TED-init evaluations
+    plus (optionally) the ICD trial evaluations not already covered. Shared
+    with the fleet runner — the evaluation order defines the trajectory."""
+    y_list = [np.asarray(y_init)]
+    if reuse_icd_trials:
+        fresh = [int(r) for r in trial_rows if int(r) not in set(evaluated)]
+        keep = [i for i, r in enumerate(trial_rows) if int(r) in set(fresh)]
+        evaluated = evaluated + fresh
+        y_list.append(np.asarray(trial_y)[keep])
+    return evaluated, np.concatenate(y_list, axis=0)
+
+
+def round_record(y: np.ndarray, n_evaluated: int, round_i: int,
+                 reference_front: np.ndarray | None) -> dict:
+    """One history entry for round ``round_i``.
+
+    Shared with the fleet runner so sequential and fleet histories always
+    carry the same keys (fig7 reads them interchangeably)."""
+    front = _front(y)
+    rec = {"round": round_i, "evaluations": n_evaluated,
+           "pareto_size": int(front.sum())}
+    if reference_front is not None:
+        rec["adrs"] = adrs(reference_front, y[front])
+    return rec
+
+
+def frontier_subset_rows(key: jax.Array, n_pool: int,
+                         frontier_subset: int) -> np.ndarray | None:
+    """Rows used for the O(q³) joint frontier sampling, or ``None`` for the
+    whole pool. Shared by the sequential loop and the fleet runner so a
+    fleet-of-one draws the exact same subset as ``soc_tuner``."""
+    if n_pool > frontier_subset:
+        return np.asarray(jax.random.choice(
+            key, n_pool, shape=(frontier_subset,), replace=False))
+    return None
 
 
 @dataclasses.dataclass
@@ -65,12 +116,16 @@ def soc_tuner(
     reference_front: np.ndarray | None = None,
     reuse_icd_trials: bool = True,
     use_kernels: bool = False,
+    weights: np.ndarray | None = None,
     verbose: bool = False,
 ) -> TunerResult:
     """Run SoC-Tuner over ``pool_idx`` [N, d] candidate designs.
 
     Follows Algorithm 3 line by line; ``reference_front`` (the real Pareto
     front of the pool, if known) enables per-round ADRS logging for Fig. 7(a).
+    ``weights`` [m] (optional) biases the acquisition's per-objective
+    information gain (Eq. 9 scalarization) — exploration focus, not a change
+    to the Pareto bookkeeping.
     """
     t0 = time.time()
     key = jax.random.PRNGKey(0) if key is None else key
@@ -80,9 +135,7 @@ def soc_tuner(
     # Line 1: v = ICD(X, n). Trials are drawn from the pool so their metrics
     # can seed the GP (the paper's flow budget accounting does the same: the
     # n importance trials are real evaluations).
-    k_icd, k_init, key = jax.random.split(key, 3)
-    trial_rows = np.asarray(
-        jax.random.choice(k_icd, N, shape=(min(n, N),), replace=False))
+    trial_rows, key = icd_trial_rows(key, N, n)
     trial_y = np.asarray(flow(pool_idx[trial_rows]))
     v = icd_from_data(space, pool_idx[trial_rows], trial_y)
 
@@ -93,23 +146,14 @@ def soc_tuner(
 
     # Line 4: y <- VLSIFlow(Z)
     evaluated: list[int] = list(dict.fromkeys(int(r) for r in init_rows))
-    y_list: list[np.ndarray] = [np.asarray(flow(pool_idx[np.asarray(evaluated)]))]
-    if reuse_icd_trials:
-        fresh = [int(r) for r in trial_rows if int(r) not in set(evaluated)]
-        evaluated = evaluated + fresh
-        keep = [i for i, r in enumerate(trial_rows) if int(r) in set(fresh)]
-        y_list.append(trial_y[keep])
-    y = np.concatenate(y_list, axis=0)
+    y_init = np.asarray(flow(pool_idx[np.asarray(evaluated)]))
+    evaluated, y = merge_trial_evals(evaluated, y_init, trial_rows, trial_y,
+                                     reuse_icd_trials)
 
     history: list[dict] = []
-    params = None
 
     def log_round(i: int):
-        front = _front(y)
-        rec = {"round": i, "evaluations": len(evaluated),
-               "pareto_size": int(front.sum())}
-        if reference_front is not None:
-            rec["adrs"] = adrs(reference_front, y[front])
+        rec = round_record(y, len(evaluated), i, reference_front)
         history.append(rec)
         if verbose:
             print(f"[soc-tuner] round {i:3d} evals={rec['evaluations']:4d} "
@@ -127,14 +171,12 @@ def soc_tuner(
         state = fit_gp(x_train, jnp.asarray(-y, jnp.float32), steps=gp_steps)
 
         # Frontier sampling over a subset (O(q³) Cholesky), scoring over all.
-        if N > frontier_subset:
-            sub = np.asarray(jax.random.choice(
-                k_sub, N, shape=(frontier_subset,), replace=False))
-            frontier_cand = pool_icd[sub]
-        else:
-            frontier_cand = pool_icd
+        sub = frontier_subset_rows(k_sub, N, frontier_subset)
+        frontier_cand = pool_icd if sub is None else pool_icd[sub]
+        w = None if weights is None else jnp.asarray(weights, jnp.float32)
         scores = np.array(imoo_scores(
-            state, pool_icd, k_acq, s=s_frontiers, frontier_cand=frontier_cand))
+            state, pool_icd, k_acq, s=s_frontiers, frontier_cand=frontier_cand,
+            weights=w))
         scores[rows] = -np.inf  # never re-evaluate
         nxt = int(np.argmax(scores))  # Line 7 (Eq. 10/11, maximize — see notes)
 

@@ -1,11 +1,14 @@
 """SoC evaluation substrate — the VLSI-flow stand-in (see DESIGN.md §1)."""
-from .model import soc_metrics, decode_design, area_breakdown, CONST, FEATI
+from .model import (soc_metrics, soc_metrics_multi, decode_design,
+                    area_breakdown, CONST, FEATI)
 from .simplified import simplified_metrics
-from .workloads import WORKLOADS, get_workload, from_arch_config
+from .workloads import WORKLOADS, get_workload, from_arch_config, pad_workloads
 from .flow import VLSIFlow, SimplifiedFlow
 
 __all__ = [
-    "soc_metrics", "decode_design", "area_breakdown", "CONST", "FEATI",
+    "soc_metrics", "soc_metrics_multi", "decode_design", "area_breakdown",
+    "CONST", "FEATI",
     "simplified_metrics", "WORKLOADS", "get_workload", "from_arch_config",
+    "pad_workloads",
     "VLSIFlow", "SimplifiedFlow",
 ]

@@ -36,7 +36,8 @@ import numpy as np
 
 from repro.core.space import TABLE_I
 
-__all__ = ["soc_metrics", "decode_design", "FEATI", "CONST"]
+__all__ = ["soc_metrics", "soc_metrics_multi", "decode_design", "FEATI",
+           "CONST"]
 
 # Feature name -> column index in the design-value matrix.
 FEATI = {f.name: i for i, f in enumerate(TABLE_I)}
@@ -166,10 +167,33 @@ def soc_metrics(vals: jnp.ndarray, layers: jnp.ndarray) -> jnp.ndarray:
                          jnp.asarray(layers, jnp.float32))
 
 
-def _metrics_tile(vals: jnp.ndarray, layers: jnp.ndarray) -> jnp.ndarray:
+@jax.jit
+def soc_metrics_multi(vals: jnp.ndarray, layers: jnp.ndarray,
+                      layer_mask: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate ``W`` workloads against ``W`` design batches in ONE program.
+
+    ``vals``       [W, n, 26]   per-workload design-value batches
+    ``layers``     [W, Lmax, 5] layer lists padded to a common length (use
+                                ``repro.soc.workloads.pad_workloads``)
+    ``layer_mask`` [W, Lmax]    1.0 on real layers, 0.0 on padding
+    Returns [W, n, 3]. This is the fleet runner's cross-scenario fused path:
+    the surrogate broadcasts over designs × layers, so vmapping the workload
+    axis on top yields a single XLA program for the whole fleet's pending
+    evaluations instead of one dispatch per workload."""
+    return jax.vmap(_metrics_tile)(jnp.asarray(vals, jnp.float32),
+                                   jnp.asarray(layers, jnp.float32),
+                                   jnp.asarray(layer_mask, jnp.float32))
+
+
+def _metrics_tile(vals: jnp.ndarray, layers: jnp.ndarray,
+                  layer_mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """Un-jitted evaluation body — shared verbatim with the Pallas
     ``systolic_eval`` kernel (one design tile per grid step), so kernel and
-    oracle cannot drift apart."""
+    oracle cannot drift apart.
+
+    ``layer_mask`` [L] (optional) zeroes out padded layer rows so workloads of
+    different depth can be stacked on a common Lmax (``soc_metrics_multi``);
+    ``None`` keeps the exact original single-workload computation."""
     d = decode_design(vals)
     n = vals.shape[0]
 
@@ -178,10 +202,18 @@ def _metrics_tile(vals: jnp.ndarray, layers: jnp.ndarray) -> jnp.ndarray:
     dd = {k: v[:, None] for k, v in d.items()}
     c = _layer_cost(dd, M[None, :], K[None, :], N[None, :],
                     reps[None, :], kind[None, :])
+    if layer_mask is None:
+        n_layers = layers.shape[0]
+    else:
+        # Padded rows carry reps=0 so their traffic/MAC terms are already 0;
+        # the mask silences the per-layer launch constants below and keeps
+        # the mean-working-set denominator honest.
+        c = {k: v * layer_mask[None, :] for k, v in c.items()}
+        n_layers = jnp.maximum(jnp.sum(layer_mask), 1.0)
 
     # ----- memory bandwidth (bytes / cycle), per design -----
     working = jnp.sum(c["dram"], axis=1)  # total DRAM traffic per design
-    l2_hit = jnp.clip(3.0 * d["l2_bytes"] / (working / layers.shape[0] + 1.0),
+    l2_hit = jnp.clip(3.0 * d["l2_bytes"] / (working / n_layers + 1.0),
                       0.0, 0.85) * (1.0 + 0.05 * jnp.log2(d["l2_way"] / 4.0))
     mem_lat = l2_hit * CONST["l2_hit_lat"] + (1.0 - l2_hit) * CONST["dram_lat"]
     eff = d["dmabytes"] / (d["dmabytes"] + CONST["dma_fixed_overhead"])
@@ -199,6 +231,8 @@ def _metrics_tile(vals: jnp.ndarray, layers: jnp.ndarray) -> jnp.ndarray:
                         jnp.minimum(d["exq"], d["exr"]))[:, None]
     cmds = 4.0 * c["n_tiles"] + CONST["layer_launch_cmds"]
     host_cycles = cmds * issue * (1.0 + 2.0 / q_eff)
+    if layer_mask is not None:  # no launch commands for padded layers
+        host_cycles = host_cycles * layer_mask[None, :]
 
     # ----- overlap: double-buffered spad/acc overlaps DMA with compute -----
     three = jnp.stack([c["compute"], dma_cycles, host_cycles], axis=-1)
@@ -207,6 +241,8 @@ def _metrics_tile(vals: jnp.ndarray, layers: jnp.ndarray) -> jnp.ndarray:
     buf = jnp.clip((d["spad_banks"][:, None] - 4.0) / 12.0, 0.0, 1.0) * 0.8 \
         + jnp.clip((d["acc_banks"][:, None] - 1.0) / 7.0, 0.0, 1.0) * 0.2
     layer_cycles = hi + (1.0 - buf) * 0.5 * rest + 400.0 * issue
+    if layer_mask is not None:
+        layer_cycles = layer_cycles * layer_mask[None, :]
 
     cycles = jnp.sum(layer_cycles, axis=1)
     latency_ms = cycles / CONST["freq_hz"] * 1e3

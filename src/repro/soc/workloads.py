@@ -17,7 +17,7 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = ["WORKLOADS", "get_workload", "resnet50", "mobilenet", "transformer",
-           "from_arch_config"]
+           "from_arch_config", "pad_workloads"]
 
 
 def _l(M, K, N, reps=1, kind=0):
@@ -183,6 +183,27 @@ def from_arch_config(cfg, mode: str = "decode", seq: int = 256,
     return np.asarray(L, np.float64)
 
 
+# ---------------------------------------------------------- fleet batching
+def pad_workloads(layer_lists: "list[np.ndarray]"
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Stack heterogeneous workloads [L_w, 5] onto a common layer axis.
+
+    Returns ``(layers [W, Lmax, 5], mask [W, Lmax])`` for
+    ``repro.soc.model.soc_metrics_multi``. Padded rows are the benign GEMM
+    (M,K,N,reps,kind) = (1,1,1,0,0): ``reps = 0`` zeroes every traffic/MAC
+    term without 0/0 hazards, and the mask removes the per-layer launch
+    constants.
+    """
+    lmax = max(int(np.asarray(l).shape[0]) for l in layer_lists)
+    layers = np.tile(np.asarray([1.0, 1.0, 1.0, 0.0, 0.0]), (len(layer_lists), lmax, 1))
+    mask = np.zeros((len(layer_lists), lmax))
+    for w, l in enumerate(layer_lists):
+        l = np.asarray(l, np.float64)
+        layers[w, : l.shape[0]] = l
+        mask[w, : l.shape[0]] = 1.0
+    return layers, mask
+
+
 # ------------------------------------------------------------------- registry
 WORKLOADS = {
     "resnet50": resnet50,
@@ -197,6 +218,10 @@ def get_workload(name: str, mode: str = "decode") -> np.ndarray:
     # LM arch by config id, e.g. "qwen3-14b" or "qwen3-14b:prefill"
     if ":" in name:
         name, mode = name.split(":", 1)
-    from repro.configs import get_config
+    from repro.configs import ARCH_IDS, get_config
 
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown workload {name!r}; DNN workloads: "
+                       f"{tuple(WORKLOADS)}; LM archs (':decode'/':prefill'): "
+                       f"{ARCH_IDS}")
     return from_arch_config(get_config(name), mode=mode)

@@ -35,16 +35,19 @@ def test_ted_selects_unique_diverse(space, small_pool):
     x = space.encode(jnp.asarray(small_pool))
     rows = ted_select(x, b=20)
     assert len(set(int(r) for r in rows)) == 20
-    # TED picks are more spread than the first-20 baseline
     sel = np.asarray(x)[rows]
-    base = np.asarray(x)[:20]
 
     def mean_nn_dist(a):
         d = np.linalg.norm(a[:, None] - a[None, :], axis=-1)
         np.fill_diagonal(d, np.inf)
         return d.min(1).mean()
 
-    assert mean_nn_dist(sel) > mean_nn_dist(base)
+    # TED picks are more spread than a random 20-subset ON AVERAGE (one
+    # arbitrary subset is a coin flip — compare against the expectation)
+    rng = np.random.default_rng(0)
+    base = np.mean([mean_nn_dist(np.asarray(x)[rng.choice(len(x), 20, False)])
+                    for _ in range(32)])
+    assert mean_nn_dist(sel) > base
 
 
 def test_icd_transform_scales_dims(space, small_pool):

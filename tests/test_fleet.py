@@ -1,0 +1,107 @@
+"""Fleet runner: cache accounting, batched-round equivalence, multi-workload
+sweep, and the fused multi-workload evaluator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FleetScenario, FlowEvalCache, fleet_tuner,
+                        pareto_front, soc_tuner)
+from repro.soc import (VLSIFlow, get_workload, pad_workloads, soc_metrics,
+                       soc_metrics_multi)
+
+
+def test_fleet_of_one_matches_sequential(space, small_pool):
+    """vmap-batched rounds reproduce the sequential Alg. 3 trajectory
+    (same seed => same evaluated rows, metrics, and Pareto front)."""
+    flow = VLSIFlow(space, "resnet50")
+    ref = pareto_front(VLSIFlow(space, "resnet50")(small_pool))
+    seq = soc_tuner(space, small_pool, flow, T=5, n=12, b=8, gp_steps=40,
+                    reference_front=ref, key=jax.random.PRNGKey(3))
+    fr = fleet_tuner(space, small_pool, [FleetScenario("resnet50", seed=3)],
+                     T=5, n=12, b=8, gp_steps=40,
+                     reference_fronts={"resnet50": ref})
+    flt = fr.results[0]
+    np.testing.assert_array_equal(seq.evaluated_rows, flt.evaluated_rows)
+    np.testing.assert_allclose(seq.y, flt.y, rtol=1e-6)
+    np.testing.assert_allclose(seq.pareto_y, flt.pareto_y, rtol=1e-6)
+    assert [h["adrs"] for h in seq.history] == \
+        pytest.approx([h["adrs"] for h in flt.history])
+
+
+def test_cache_hit_accounting(space, small_pool):
+    cache = FlowEvalCache(space, small_pool, ["resnet50", "transformer"])
+    rows = np.arange(10)
+    y1 = cache.evaluate("resnet50", rows)
+    assert cache.hits == 0 and cache.misses == 10 and cache.evaluated == 10
+    # full re-request: all hits, nothing re-evaluated, identical values
+    y2 = cache.evaluate("resnet50", rows)
+    assert cache.hits == 10 and cache.misses == 10 and cache.evaluated == 10
+    np.testing.assert_array_equal(y1, y2)
+    # same rows, different workload: metrics differ, cache key separates them
+    y3 = cache.evaluate("transformer", rows)
+    assert cache.misses == 20 and not np.allclose(y1, y3)
+    # mixed request with intra-flush duplicates: one miss per unique
+    # (workload, row) — resnet row 5 and the duplicate row 11 are hits
+    calls_before = cache.flow_calls
+    cache.evaluate_many([("resnet50", np.asarray([5, 11, 11])),
+                         ("transformer", np.asarray([11]))])
+    assert cache.misses == 22
+    assert cache.flow_calls == calls_before + 1  # one fused dispatch
+    assert cache.requests == cache.hits + cache.misses
+    # cached values match a plain flow evaluation
+    flow_y = VLSIFlow(space, "resnet50")(small_pool[rows])
+    np.testing.assert_allclose(y1, flow_y, rtol=1e-6)
+
+
+def test_fleet_shares_evaluations_across_seeds(space, small_pool):
+    """Two seeds on one workload share the cache: total designs evaluated is
+    strictly less than 2x the sequential budget."""
+    fr = fleet_tuner(space, small_pool,
+                     [FleetScenario("resnet50", seed=0),
+                      FleetScenario("resnet50", seed=1)],
+                     T=3, n=10, b=6, gp_steps=30)
+    per_scenario_budget = sum(len(r.evaluated_rows) for r in fr.results)
+    assert fr.cache.evaluated <= per_scenario_budget
+    assert fr.cache.requests == fr.cache.hits + fr.cache.misses
+    assert fr.cache.misses == fr.cache.evaluated
+
+
+def test_three_workload_smoke_sweep(space, small_pool):
+    scen = [FleetScenario(w, seed=s)
+            for w in ("resnet50", "mobilenet", "transformer")
+            for s in range(2)]
+    refs = {w: pareto_front(VLSIFlow(space, w)(small_pool))
+            for w in ("resnet50", "mobilenet", "transformer")}
+    fr = fleet_tuner(space, small_pool, scen, T=3, n=10, b=6, gp_steps=30,
+                     reference_fronts=refs)
+    assert len(fr.results) == 6
+    for res in fr.results:
+        assert len(res.history) == 4
+        assert np.isfinite(res.y).all()
+        assert np.isfinite(res.history[-1]["adrs"])
+        assert res.pareto_y.shape[1] == 3
+    assert len(fr.final_adrs()) == 6
+    # weighted scenario biases acquisition but keeps Pareto bookkeeping sound
+    frw = fleet_tuner(space, small_pool,
+                      [FleetScenario("resnet50", seed=0,
+                                     weights=(3.0, 1.0, 1.0))],
+                      T=2, n=10, b=6, gp_steps=30)
+    assert np.isfinite(frw.results[0].pareto_y).all()
+
+
+def test_soc_metrics_multi_matches_single():
+    """The fused multi-workload dispatch equals per-workload evaluation."""
+    from repro.core import make_space
+    space = make_space()
+    pool = np.asarray(space.sample(jax.random.PRNGKey(7), 32))
+    vals = jnp.asarray(space.values(pool), jnp.float32)
+    names = ["resnet50", "transformer", "mobilenet"]
+    lls = [get_workload(nm) for nm in names]
+    layers, mask = pad_workloads(lls)
+    fused = np.asarray(soc_metrics_multi(
+        jnp.stack([vals] * len(names)), jnp.asarray(layers, jnp.float32),
+        jnp.asarray(mask, jnp.float32)))
+    for i, nm in enumerate(names):
+        single = np.asarray(soc_metrics(vals, jnp.asarray(lls[i], jnp.float32)))
+        np.testing.assert_allclose(fused[i], single, rtol=1e-5)

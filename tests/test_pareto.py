@@ -2,6 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the 'test' extra: "
+    "pip install -e .[test]")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 
