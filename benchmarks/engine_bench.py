@@ -1,0 +1,105 @@
+"""Microbenchmark: incremental BOEngine vs the from-scratch per-round path.
+
+Runs ``soc_tuner`` twice on the same pool/seed — once with
+``incremental=False`` (the historical round: cold 150-step Adam fit, full
+O(n³) Cholesky, host-side masking/argmax) and once with ``incremental=True``
+(warm-started fits, rank-k Cholesky block updates, cached pool covariances,
+device-side selection) — and reports per-round wall time, dispatch counts,
+refactor/update mix, final ADRS, and the cross-ADRS between the two learned
+Pareto fronts. Results land in ``BENCH_engine.json``::
+
+    PYTHONPATH=src python -m benchmarks.engine_bench --n-pool 1024 --T 40
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from .common import OUT_DIR, make_bench
+from repro.core import adrs, soc_tuner
+
+
+def _run(bench, *, T, n, b, gp_steps, seed, incremental, warm_steps,
+         drift_tol):
+    flow = bench.flow_factory()
+    t0 = time.time()
+    res = soc_tuner(bench.space, bench.pool, flow, T=T, n=n, b=b,
+                    gp_steps=gp_steps, key=jax.random.PRNGKey(seed),
+                    reference_front=bench.ref_front, incremental=incremental,
+                    warm_steps=warm_steps, drift_tol=drift_tol)
+    wall = time.time() - t0
+    # round 0 is setup (ICD + TED init); rounds 1..2 pay jit compiles
+    walls = np.asarray([h["wall_s"] for h in res.history[1:]])
+    return res, {
+        "wall_s": wall,
+        "round_wall_mean_s": float(walls.mean()),
+        "round_wall_median_s": float(np.median(walls)),
+        "round_wall_steady_s": float(np.median(walls[len(walls) // 2:])),
+        "final_adrs": float(res.history[-1]["adrs"]),
+        "evaluations": int(len(res.evaluated_rows)),
+        **res.engine_stats,
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--workload", default="resnet50")
+    p.add_argument("--n-pool", type=int, default=1024)
+    p.add_argument("--T", type=int, default=40)
+    p.add_argument("--n", type=int, default=30)
+    p.add_argument("--b", type=int, default=20)
+    p.add_argument("--gp-steps", type=int, default=150)
+    p.add_argument("--warm-steps", type=int, default=None)
+    p.add_argument("--drift-tol", type=float, default=1.0)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default=os.path.join(OUT_DIR, "BENCH_engine.json"))
+    a = p.parse_args()
+
+    bench = make_bench(a.workload, n_pool=a.n_pool, seed=a.seed)
+    kw = dict(T=a.T, n=a.n, b=a.b, gp_steps=a.gp_steps, seed=a.seed,
+              warm_steps=a.warm_steps, drift_tol=a.drift_tol)
+    print(f"[engine-bench] exact path: T={a.T} n_pool={a.n_pool} ...")
+    res_x, exact = _run(bench, incremental=False, **kw)
+    print(f"[engine-bench]   wall {exact['wall_s']:.1f}s  "
+          f"median round {1e3 * exact['round_wall_median_s']:.0f}ms  "
+          f"adrs {exact['final_adrs']:.4f}")
+    print("[engine-bench] incremental path ...")
+    res_i, incr = _run(bench, incremental=True, **kw)
+    print(f"[engine-bench]   wall {incr['wall_s']:.1f}s  "
+          f"median round {1e3 * incr['round_wall_median_s']:.0f}ms  "
+          f"adrs {incr['final_adrs']:.4f}  "
+          f"({incr['refactors']} refactors / {incr['block_updates']} updates)")
+
+    out = {
+        "config": {"workload": a.workload, "n_pool": a.n_pool, "T": a.T,
+                   "n": a.n, "b": a.b, "gp_steps": a.gp_steps,
+                   "warm_steps": a.warm_steps, "drift_tol": a.drift_tol,
+                   "seed": a.seed, "backend": jax.default_backend()},
+        "exact": exact,
+        "incremental": incr,
+        "speedup_wall": exact["wall_s"] / incr["wall_s"],
+        "speedup_round_median": (exact["round_wall_median_s"]
+                                 / incr["round_wall_median_s"]),
+        # symmetric front agreement: each front scored against the other as
+        # reference (0 == identical fronts)
+        "front_cross_adrs": {
+            "exact_ref_vs_incremental": float(adrs(res_x.pareto_y,
+                                                   res_i.pareto_y)),
+            "incremental_ref_vs_exact": float(adrs(res_i.pareto_y,
+                                                   res_x.pareto_y)),
+        },
+    }
+    os.makedirs(os.path.dirname(a.out), exist_ok=True)
+    with open(a.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[engine-bench] speedup {out['speedup_wall']:.2f}x wall, "
+          f"{out['speedup_round_median']:.2f}x median round -> {a.out}")
+
+
+if __name__ == "__main__":
+    main()

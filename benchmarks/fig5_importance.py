@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.core import icd, make_space
 from repro.soc import VLSIFlow
-from .common import make_bench, write_csv
+from .common import write_csv
 
 
 def candidate_removal_fraction(space, pruned) -> float:

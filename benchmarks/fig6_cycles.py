@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.soc import VLSIFlow

@@ -18,8 +18,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
-
 from .common import make_bench, run_fleet, write_csv
 
 

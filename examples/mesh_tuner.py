@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fit_gp, imoo_scores, pareto_front, pareto_mask
+from repro.core import fit_gp, imoo_scores, pareto_mask
 
 # ---------------------------------------------------------- design space
 KNOBS = {

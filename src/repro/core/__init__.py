@@ -5,6 +5,9 @@
 - ``sampling``    Algorithm 2 — importance-guided TED initialization
 - ``gp``          GP surrogates (Eqs. 3-4), pure JAX (+ vmap-batched fleet fit)
 - ``acquisition`` IMOO information-gain acquisition (Eqs. 5-10)
+- ``engine``      device-resident incremental BO engine (warm-started GPs,
+                  rank-k Cholesky updates, cached pool covariances,
+                  device-side selection) — the Alg. 3 hot path
 - ``tuner``       Algorithm 3 — the full exploration loop
 - ``fleet``       batched multi-(workload × seed × weighting) exploration
 - ``pareto``      dominance / Pareto front / ADRS (Eq. 12) / hypervolume
@@ -43,6 +46,7 @@ from .gp import (GPState, fit_gp, fit_gp_batch, pad_training, gp_predict,
                  gp_joint_samples)
 from .acquisition import (imoo_scores, imoo_scores_batch,
                           mes_information_gain, frontier_maxima)
+from .engine import BOEngine, BatchedBOEngine, EngineStats
 from .pareto import adrs, dominance_counts, hypervolume, pareto_front, pareto_mask
 from .tuner import TunerResult, soc_tuner, frontier_subset_rows
 from .fleet import FleetScenario, FleetResult, FlowEvalCache, fleet_tuner
@@ -56,6 +60,7 @@ __all__ = [
     "gp_joint_samples",
     "imoo_scores", "imoo_scores_batch", "mes_information_gain",
     "frontier_maxima",
+    "BOEngine", "BatchedBOEngine", "EngineStats",
     "adrs", "dominance_counts", "hypervolume", "pareto_front", "pareto_mask",
     "TunerResult", "soc_tuner", "frontier_subset_rows",
     "FleetScenario", "FleetResult", "FlowEvalCache", "fleet_tuner",

@@ -18,7 +18,6 @@ the same evaluation budget as SoC-Tuner: b init + T rounds.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Callable
 

@@ -45,8 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .acquisition import imoo_scores_batch
-from .gp import PAD_BUCKET, fit_gp_batch, pad_training
+from .engine import BatchedBOEngine
 from .icd import icd_from_data
 from .pareto import pareto_mask
 from .sampling import soc_init
@@ -227,6 +226,10 @@ def fleet_tuner(
     gp_steps: int = 150,
     reference_fronts: dict[str, np.ndarray] | None = None,
     reuse_icd_trials: bool = True,
+    incremental: bool = False,
+    warm_start: bool | None = None,
+    warm_steps: int | None = None,
+    drift_tol: float = 1.0,
     verbose: bool = False,
 ) -> FleetResult:
     """Explore every scenario of a fleet over the SAME candidate pool.
@@ -235,6 +238,15 @@ def fleet_tuner(
     scenario; ``reference_fronts`` maps workload name -> true Pareto front
     for per-round ADRS logging. Returns one ``TunerResult`` per scenario plus
     fleet-level cache statistics.
+
+    The batched per-round surrogate work runs on one
+    :class:`repro.core.engine.BatchedBOEngine` (engine state carries a
+    leading scenario axis). ``incremental=False`` (the fidelity default)
+    reproduces the historical batched rounds exactly — a fleet of one still
+    matches sequential ``soc_tuner`` bit-for-bit; ``incremental=True``
+    enables warm-started fits, rank-k Cholesky block updates, cached pool
+    covariances and device-side selection across the whole fleet, with the
+    refactor-vs-update decision taken fleet-wide.
     """
     t0 = time.time()
     scenarios = list(scenarios)
@@ -278,44 +290,36 @@ def fleet_tuner(
 
     pool_icd_stack = jnp.stack([st.pool_icd for st in states])  # [S, N, d]
     any_weights = any(st.weights is not None for st in states)
-    bucket = PAD_BUCKET  # must match fit_gp's padding for fleet-of-one parity
+    weights = (jnp.stack([
+        st.weights if st.weights is not None else jnp.ones((3,))
+        for st in states]) if any_weights else None)
 
-    # ---- Alg. 3 lines 5-10: the BO loop, batched across scenarios.
+    # ---- Alg. 3 lines 5-10: the BO loop, batched across scenarios on one
+    # persistent engine (the engine negates targets and owns the
+    # never-re-evaluate mask + per-scenario argmax).
+    engine = BatchedBOEngine(pool_icd_stack, incremental=incremental,
+                             warm_start=warm_start, gp_steps=gp_steps,
+                             warm_steps=warm_steps, drift_tol=drift_tol,
+                             s_frontiers=s_frontiers, weights=weights)
+    engine.observe([st.evaluated for st in states], [st.y for st in states])
     for it in range(T):
-        xs, ys, masks, fcs, keys_acq = [], [], [], [], []
-        n_max = max(len(st.evaluated) for st in states)
-        padded_n = n_max + ((-n_max) % bucket)
+        subs, keys_acq = [], []
         for st in states:
             st.key, k_fit, k_acq, k_sub = jax.random.split(st.key, 4)
             del k_fit  # reserved slot — keeps the schedule aligned w/ tuner
-            rows = np.asarray(st.evaluated)
-            # Negate: paper metrics are minimized, MES maximizes.
-            xp, yp, mask = pad_training(
-                st.pool_icd[rows], jnp.asarray(-st.y, jnp.float32), padded_n)
-            xs.append(xp), ys.append(yp), masks.append(mask)
-            sub = frontier_subset_rows(k_sub, N, frontier_subset)
-            fcs.append(st.pool_icd if sub is None else st.pool_icd[sub])
+            subs.append(frontier_subset_rows(k_sub, N, frontier_subset))
             keys_acq.append(k_acq)
 
-        gp_states = fit_gp_batch(jnp.stack(xs), jnp.stack(ys),
-                                 jnp.stack(masks), steps=gp_steps)
-        weights = (jnp.stack([
-            st.weights if st.weights is not None else jnp.ones((3,))
-            for st in states]) if any_weights else None)
-        scores = np.asarray(imoo_scores_batch(
-            gp_states, pool_icd_stack, jnp.stack(keys_acq), s=s_frontiers,
-            frontier_cand=jnp.stack(fcs), weights=weights))  # [S, N]
-
-        # Line 7-8 per scenario: pick the argmax, evaluate all picks in ONE
-        # fused flush (cross-scenario batching + cache dedup).
-        picks: list[int] = []
-        for si, st in enumerate(states):
-            s_row = scores[si].copy()
-            s_row[np.asarray(st.evaluated)] = -np.inf  # never re-evaluate
-            picks.append(int(np.argmax(s_row)))
+        # Line 7-8 per scenario: one batched engine round picks every
+        # scenario's argmax; evaluate all picks in ONE fused flush
+        # (cross-scenario batching + cache dedup).
+        picks = [int(p) for p in engine.select(
+            jnp.stack(keys_acq),
+            sub_rows=None if subs[0] is None else np.stack(subs))]
         pick_ys = cache.evaluate_many(
             [(sc.workload, np.asarray([p]))
              for sc, p in zip(scenarios, picks)])
+        engine.observe([[p] for p in picks], pick_ys)
         for sc, st, p, y_new in zip(scenarios, states, picks, pick_ys):
             st.evaluated.append(p)
             st.y = np.concatenate([st.y, y_new], axis=0)
@@ -331,6 +335,6 @@ def fleet_tuner(
         results.append(TunerResult(
             space=st.pruned, v=np.asarray(st.v), evaluated_rows=rows, y=st.y,
             pareto_rows=rows[front], pareto_y=st.y[front], history=st.history,
-            wall_s=wall))
+            wall_s=wall, engine_stats=engine.stats.as_dict()))
     return FleetResult(scenarios=scenarios, results=results, cache=cache,
                        wall_s=wall)

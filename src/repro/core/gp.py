@@ -15,7 +15,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+from repro.kernels import backend as _backend
 
 __all__ = ["GPParams", "GPState", "fit_gp", "fit_gp_batch", "pad_training",
            "gp_predict", "gp_joint_samples"]
@@ -43,17 +44,21 @@ class GPState(NamedTuple):
     alpha: jnp.ndarray  # [m, n]  (K+σ²I)⁻¹ y
 
 
-def _sqdist(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    aa = jnp.sum(a * a, -1)[:, None]
-    bb = jnp.sum(b * b, -1)[None, :]
-    return jnp.maximum(aa + bb - 2.0 * (a @ b.T), 0.0)
+def _kernel(params_i, a: jnp.ndarray, b: jnp.ndarray,
+            differentiable: bool = True) -> jnp.ndarray:
+    """ARD RBF kernel for one objective.
 
-
-def _kernel(params_i, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """ARD RBF kernel for one objective."""
+    Routed through the unified pairdist backend (``kernels.backend``). The
+    ``auto`` dispatch resolves to XLA unless ``REPRO_PAIRDIST_BACKEND``
+    upgrades it (fidelity default: bit-identical to the historical inline
+    ``_sqdist`` on every platform; export ``platform`` to use the Pallas
+    kernel on TPU for inference-only callers). The NLL gradient path keeps
+    ``differentiable=True``, which pins the XLA form unconditionally — the
+    Pallas kernel has no VJP."""
     log_ls, log_var = params_i
     ls = jnp.exp(log_ls)
-    d2 = _sqdist(a / ls[None, :], b / ls[None, :])
+    d2 = _backend.pairdist_auto(a / ls[None, :], b / ls[None, :],
+                                differentiable=differentiable)
     return jnp.exp(log_var) * jnp.exp(-0.5 * d2)
 
 
@@ -113,7 +118,8 @@ def _fit(params: GPParams, x, y, mask, steps: int = 200,
 def _posterior_cache(params: GPParams, x, y, mask):
     def one(log_ls, log_var, log_noise, yi):
         n = x.shape[0]
-        K = _kernel((log_ls, log_var), x, x) + (jnp.exp(log_noise) + JITTER) * jnp.eye(n)
+        K = (_kernel((log_ls, log_var), x, x, differentiable=False)
+             + (jnp.exp(log_noise) + JITTER) * jnp.eye(n))
         K = K + jnp.diag(1e6 * mask)
         L = jnp.linalg.cholesky(K)
         alpha = jax.scipy.linalg.cho_solve((L, True), yi)
@@ -131,7 +137,11 @@ def pad_training(x: jnp.ndarray, y: jnp.ndarray, bucket: int = PAD_BUCKET
     silenced in the GP by a huge per-point noise — see ``_nll_one``.
 
     The fleet runner calls this with ``bucket`` set to the fleet-wide padded
-    length so every scenario's training set lands on the same static shape."""
+    length so every scenario's training set lands on the same static shape.
+    The incremental engine re-derives the same convention on device
+    (``BOEngine._padded_batch`` + in-dispatch +10 shift); if you change the
+    pad-row choice or the shift, change it there too — the parity is pinned
+    by ``tests/test_engine.py::test_engine_padding_matches_pad_training``."""
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     n = x.shape[0]
@@ -223,7 +233,8 @@ def gp_predict(state: GPState, xq: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarra
     """Posterior mean/std at query points, de-standardized. Returns ([q,m],[q,m])."""
 
     def one(log_ls, log_var, L, alpha):
-        Ks = _kernel((log_ls, log_var), state.x, xq)  # [n, q]
+        Ks = _kernel((log_ls, log_var), state.x, xq,
+                     differentiable=False)  # [n, q]
         mean = Ks.T @ alpha
         Vs = jax.scipy.linalg.solve_triangular(L, Ks, lower=True)
         var = jnp.exp(log_var) - jnp.sum(Vs * Vs, axis=0)
@@ -246,8 +257,9 @@ def gp_joint_samples(state: GPState, xq: jnp.ndarray, key: jax.Array,
 
     def one(log_ls, log_var, L, alpha, k):
         q = xq.shape[0]
-        Ks = _kernel((log_ls, log_var), state.x, xq)  # [n, q]
-        Kqq = _kernel((log_ls, log_var), xq, xq)
+        Ks = _kernel((log_ls, log_var), state.x, xq,
+                     differentiable=False)  # [n, q]
+        Kqq = _kernel((log_ls, log_var), xq, xq, differentiable=False)
         mean = Ks.T @ alpha
         Vs = jax.scipy.linalg.solve_triangular(L, Ks, lower=True)
         cov = Kqq - Vs.T @ Vs

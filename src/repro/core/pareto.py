@@ -5,7 +5,6 @@ area). Internal BO code negates where it needs "bigger is better".
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -50,15 +50,16 @@ def median_bandwidth(x: jnp.ndarray) -> float:
 
 
 def pairwise_sqdist(a: jnp.ndarray, b: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
-    """‖a_i − b_j‖² via the MXU-friendly ‖a‖²+‖b‖²−2ab form."""
-    if use_kernel:
-        from repro.kernels.pairdist import ops as _ops
+    """‖a_i − b_j‖² via the unified pairdist backend (``kernels.backend``).
 
-        return _ops.pairwise_sqdist(a, b)
-    aa = jnp.sum(a * a, axis=-1)
-    bb = jnp.sum(b * b, axis=-1)
-    ab = a @ b.T
-    return jnp.maximum(aa[:, None] + bb[None, :] - 2.0 * ab, 0.0)
+    Default dispatch is ``auto`` — XLA on every platform (bit-identical to
+    the historical inline form) unless ``REPRO_PAIRDIST_BACKEND`` upgrades
+    it to ``platform`` (Pallas on TPU); ``use_kernel=True`` forces the
+    Pallas path (interpret-mode off-TPU) for kernel-parity sweeps."""
+    from repro.kernels import backend as _backend
+
+    return _backend.pairdist_auto(a, b,
+                                  backend="pallas" if use_kernel else "auto")
 
 
 @functools.partial(jax.jit, static_argnames=("b",))

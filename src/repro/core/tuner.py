@@ -9,14 +9,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Sequence
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .acquisition import imoo_scores
-from .gp import fit_gp
+from .engine import BOEngine
 from .icd import icd_from_data
 from .pareto import adrs, pareto_mask
 from .sampling import soc_init
@@ -46,24 +45,34 @@ def merge_trial_evals(evaluated: "list[int]", y_init: np.ndarray,
     with the fleet runner — the evaluation order defines the trajectory."""
     y_list = [np.asarray(y_init)]
     if reuse_icd_trials:
-        fresh = [int(r) for r in trial_rows if int(r) not in set(evaluated)]
-        keep = [i for i, r in enumerate(trial_rows) if int(r) in set(fresh)]
+        seen = set(evaluated)  # built ONCE, not per element
+        fresh, keep = [], []
+        for i, r in enumerate(trial_rows):
+            r = int(r)
+            if r not in seen:
+                seen.add(r)
+                fresh.append(r)
+                keep.append(i)
         evaluated = evaluated + fresh
         y_list.append(np.asarray(trial_y)[keep])
     return evaluated, np.concatenate(y_list, axis=0)
 
 
 def round_record(y: np.ndarray, n_evaluated: int, round_i: int,
-                 reference_front: np.ndarray | None) -> dict:
+                 reference_front: np.ndarray | None,
+                 wall_s: float | None = None) -> dict:
     """One history entry for round ``round_i``.
 
     Shared with the fleet runner so sequential and fleet histories always
-    carry the same keys (fig7 reads them interchangeably)."""
+    carry the same keys (fig7 reads them interchangeably). ``wall_s``
+    (optional) records the round's wall time — ``engine_bench`` reads it."""
     front = _front(y)
     rec = {"round": round_i, "evaluations": n_evaluated,
            "pareto_size": int(front.sum())}
     if reference_front is not None:
         rec["adrs"] = adrs(reference_front, y[front])
+    if wall_s is not None:
+        rec["wall_s"] = wall_s
     return rec
 
 
@@ -88,6 +97,7 @@ class TunerResult:
     pareto_y: np.ndarray              # their metrics (the learned Y*)
     history: list[dict]               # per-round log (for ADRS curves)
     wall_s: float
+    engine_stats: dict | None = None  # BOEngine counters (refactors, ...)
 
     def pareto_idx(self, pool_idx: np.ndarray) -> np.ndarray:
         """Design-point index vectors X* restored to the original space
@@ -117,6 +127,10 @@ def soc_tuner(
     reuse_icd_trials: bool = True,
     use_kernels: bool = False,
     weights: np.ndarray | None = None,
+    incremental: bool = False,
+    warm_start: bool | None = None,
+    warm_steps: int | None = None,
+    drift_tol: float = 1.0,
     verbose: bool = False,
 ) -> TunerResult:
     """Run SoC-Tuner over ``pool_idx`` [N, d] candidate designs.
@@ -126,6 +140,17 @@ def soc_tuner(
     ``weights`` [m] (optional) biases the acquisition's per-objective
     information gain (Eq. 9 scalarization) — exploration focus, not a change
     to the Pareto bookkeeping.
+
+    The per-round surrogate work runs on a persistent :class:`BOEngine`.
+    ``incremental=False`` (the fidelity default) executes the historical
+    from-scratch round and reproduces the seed trajectory bit-for-bit;
+    ``incremental=True`` enables warm-started fits, rank-k Cholesky updates,
+    cached pool covariances and device-side selection — same math to
+    numerical tolerance, measurably faster per round (see
+    ``benchmarks/engine_bench.py``). ``warm_start`` (default: follow
+    ``incremental``) plumbs the previous round's ``GPParams`` into ``fit_gp``
+    even on the from-scratch path; ``warm_steps``/``drift_tol`` tune the
+    incremental engine's fit schedule and refactorization policy.
     """
     t0 = time.time()
     key = jax.random.PRNGKey(0) if key is None else key
@@ -151,9 +176,14 @@ def soc_tuner(
                                      reuse_icd_trials)
 
     history: list[dict] = []
+    t_round = time.time()
 
     def log_round(i: int):
-        rec = round_record(y, len(evaluated), i, reference_front)
+        nonlocal t_round
+        now = time.time()
+        rec = round_record(y, len(evaluated), i, reference_front,
+                           wall_s=now - t_round)
+        t_round = now
         history.append(rec)
         if verbose:
             print(f"[soc-tuner] round {i:3d} evals={rec['evaluations']:4d} "
@@ -162,28 +192,28 @@ def soc_tuner(
 
     log_round(0)
 
-    # Lines 5-10: BO loop.
+    # Lines 5-10: BO loop, run on a persistent device-resident engine. The
+    # engine internally negates targets (paper metrics are minimized, MES
+    # maximizes) and owns the never-re-evaluate mask + argmax (Line 7).
+    w = None if weights is None else jnp.asarray(weights, jnp.float32)
+    engine = BOEngine(pool_icd, incremental=incremental,
+                      warm_start=warm_start, gp_steps=gp_steps,
+                      warm_steps=warm_steps, drift_tol=drift_tol,
+                      s_frontiers=s_frontiers, weights=w)
+    engine.observe(evaluated, y)
     for it in range(T):
         key, k_fit, k_acq, k_sub = jax.random.split(key, 4)
-        rows = np.asarray(evaluated)
-        x_train = pool_icd[rows]
-        # Negate: paper metrics are minimized, MES maximizes.
-        state = fit_gp(x_train, jnp.asarray(-y, jnp.float32), steps=gp_steps)
+        del k_fit  # reserved slot — keeps the key schedule seed-stable
 
         # Frontier sampling over a subset (O(q³) Cholesky), scoring over all.
         sub = frontier_subset_rows(k_sub, N, frontier_subset)
-        frontier_cand = pool_icd if sub is None else pool_icd[sub]
-        w = None if weights is None else jnp.asarray(weights, jnp.float32)
-        scores = np.array(imoo_scores(
-            state, pool_icd, k_acq, s=s_frontiers, frontier_cand=frontier_cand,
-            weights=w))
-        scores[rows] = -np.inf  # never re-evaluate
-        nxt = int(np.argmax(scores))  # Line 7 (Eq. 10/11, maximize — see notes)
+        nxt = engine.select(k_acq, sub_rows=sub)
 
         # Line 8: evaluate and append.
         y_new = np.asarray(flow(pool_idx[nxt][None, :]))
         evaluated.append(nxt)
         y = np.concatenate([y, y_new], axis=0)
+        engine.observe([nxt], y_new)
         log_round(it + 1)
 
     front = _front(y)
@@ -191,4 +221,4 @@ def soc_tuner(
     return TunerResult(
         space=pruned, v=np.asarray(v), evaluated_rows=rows, y=y,
         pareto_rows=rows[front], pareto_y=y[front], history=history,
-        wall_s=time.time() - t0)
+        wall_s=time.time() - t0, engine_stats=engine.stats.as_dict())

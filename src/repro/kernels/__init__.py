@@ -1,5 +1,8 @@
 """Pallas TPU kernels (validated with interpret=True off-TPU).
 
+- ``backend``       unified dispatch (XLA fidelity default; Pallas-on-TPU via
+                    ``REPRO_PAIRDIST_BACKEND=platform`` or forced) with
+                    pad-to-tile wrappers — every pairdist consumer routes here
 - ``pairdist``      tiled ||xi-xj||^2 with fused RBF (TED + GP kernel matrices)
 - ``pareto_count``  tiled Pareto dominance counting
 - ``systolic_eval`` batched SoC cost-model evaluation (the "VLSI flow" on TPU)
@@ -7,4 +10,5 @@
 """
 from . import common  # noqa: F401
 
-__all__ = ["common", "pairdist", "pareto_count", "systolic_eval", "flash_attn"]
+__all__ = ["common", "backend", "pairdist", "pareto_count", "systolic_eval",
+           "flash_attn"]

@@ -1,0 +1,107 @@
+"""Unified kernel backend: one dispatch point for pairwise-distance work.
+
+Every consumer of pairwise squared distances / RBF kernel matrices — the GP
+surrogate's ARD kernel (``core.gp``), TED initialization (``core.sampling``)
+and, through the GP, the IMOO acquisition — routes through
+:func:`pairdist_auto` instead of picking an implementation inline. Dispatch:
+
+* ``"auto"``     — the ``REPRO_PAIRDIST_BACKEND`` environment variable if
+  set (``xla`` / ``pallas`` / ``platform``), else ``"xla"``. XLA is the
+  *fidelity default* on every platform: it is bit-identical to the
+  historical inline implementations (``gp._sqdist`` /
+  ``sampling.pairwise_sqdist``), so unchanged flags ⇒ unchanged
+  trajectories — on TPU too. Export ``REPRO_PAIRDIST_BACKEND=platform`` to
+  upgrade every ``auto`` call site at once.
+* ``"platform"`` — the Pallas kernel on TPU for tile-worthy shapes, plain
+  XLA everywhere else (off-TPU the Pallas path only exists in interpret
+  mode, which is a correctness tool, not a fast path);
+* ``"pallas"``   — force the Pallas kernel (interpret-mode off-TPU), behind
+  the pad-to-tile / slice-back wrapper so callers never see the raw
+  kernel's tile-multiple shape requirements;
+* ``"xla"``      — the ``‖a‖²+‖b‖²−2ab`` form. Also the only legal choice
+  under autodiff: the Pallas kernel has no VJP, so differentiated callers
+  (the GP's NLL gradient) pass ``differentiable=True``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .common import pad_to, use_interpret
+from .pairdist.kernel import LANE, TILE_I, TILE_J, pairdist as _raw_pairdist
+
+__all__ = ["pairdist_auto", "resolve_backend", "sqdist_xla", "rbf_xla"]
+
+_ENV_VAR = "REPRO_PAIRDIST_BACKEND"
+_BACKENDS = ("auto", "platform", "pallas", "xla")
+
+
+def resolve_backend(backend: str = "auto", n: int | None = None,
+                    m: int | None = None) -> str:
+    """Resolve ``"auto"``/``"platform"`` to a concrete backend for an
+    [n,·]×[m,·] problem (see the module docstring for the dispatch table)."""
+    if backend == "auto":
+        backend = os.environ.get(_ENV_VAR, "xla")  # fidelity default
+    if backend not in _BACKENDS:
+        raise ValueError(
+            f"unknown pairdist backend {backend!r}; expected one of {_BACKENDS}")
+    if backend in ("pallas", "xla"):
+        return backend
+    if jax.default_backend() != "tpu":
+        return "xla"
+    # Below one output tile the pad-to-128 overhead dominates any VMEM win.
+    if n is not None and m is not None and (n < TILE_I or m < TILE_J):
+        return "xla"
+    return "pallas"
+
+
+def sqdist_xla(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """‖a_i − b_j‖² via the MXU-friendly ‖a‖²+‖b‖²−2ab form (pure XLA)."""
+    aa = jnp.sum(a * a, axis=-1)
+    bb = jnp.sum(b * b, axis=-1)
+    return jnp.maximum(aa[:, None] + bb[None, :] - 2.0 * (a @ b.T), 0.0)
+
+
+def rbf_xla(a: jnp.ndarray, b: jnp.ndarray, bandwidth: float) -> jnp.ndarray:
+    d2 = sqdist_xla(a, b)
+    return jnp.exp(-d2 / (2.0 * bandwidth * bandwidth + 1e-12))
+
+
+@functools.partial(jax.jit, static_argnames=("bandwidth",))
+def _pallas_padded(x: jnp.ndarray, y: jnp.ndarray,
+                   bandwidth: float | None) -> jnp.ndarray:
+    """Pad-and-slice wrapper: the ONLY place that knows the tile rules.
+
+    Zero-padding the feature axis leaves distances unchanged; padded rows in
+    N/M produce garbage distances that are sliced off before returning.
+    """
+    N, M = x.shape[0], y.shape[0]
+    xp = pad_to(pad_to(x.astype(jnp.float32), LANE, axis=1), TILE_I, axis=0)
+    yp = pad_to(pad_to(y.astype(jnp.float32), LANE, axis=1), TILE_J, axis=0)
+    out = _raw_pairdist(xp, yp, bandwidth=bandwidth, interpret=use_interpret())
+    return out[:N, :M]
+
+
+def pairdist_auto(x: jnp.ndarray, y: jnp.ndarray, *,
+                  bandwidth: float | None = None, backend: str = "auto",
+                  differentiable: bool = False) -> jnp.ndarray:
+    """Pairwise squared distance ``[N, M]`` (or fused RBF kernel when
+    ``bandwidth`` is given) with automatic backend dispatch.
+
+    ``differentiable=True`` pins the XLA path — pass it from any code that
+    will be transformed by ``jax.grad`` (the Pallas kernel has no VJP).
+    Shapes need no tile alignment on any path: the Pallas route pads to tile
+    multiples and slices the result back.
+    """
+    if differentiable:
+        be = "xla"
+    else:
+        be = resolve_backend(backend, x.shape[0], y.shape[0])
+    if be == "xla":
+        if bandwidth is None:
+            return sqdist_xla(x, y)
+        return rbf_xla(x, y, bandwidth)
+    return _pallas_padded(x, y, None if bandwidth is None else float(bandwidth))

@@ -19,6 +19,7 @@ from jax.experimental import pallas as pl
 
 TILE_I = 128
 TILE_J = 128
+LANE = 128  # f32 lane width: the feature axis must be a multiple of this
 
 
 def _body(xi_ref, xj_ref, out_ref, *, inv2s2: float, fuse_rbf: bool):
@@ -35,9 +36,30 @@ def _body(xi_ref, xj_ref, out_ref, *, inv2s2: float, fuse_rbf: bool):
 def pairdist(x: jnp.ndarray, y: jnp.ndarray, *, bandwidth: float | None = None,
              interpret: bool = False) -> jnp.ndarray:
     """x [N, D], y [M, D] (D a lane multiple; N, M tile multiples).
-    Returns exp(-d²/2σ²) when ``bandwidth`` is given, else d²."""
+    Returns exp(-d²/2σ²) when ``bandwidth`` is given, else d².
+
+    This is the RAW kernel: shapes must already be tile-aligned. Callers
+    should go through ``repro.kernels.backend.pairdist_auto`` (or this
+    package's ``ops`` wrapper), which pads arbitrary shapes to tile multiples
+    and slices the result back.
+    """
     N, D = x.shape
     M = y.shape[0]
+    if y.shape[1] != D:
+        raise ValueError(
+            f"pairdist: feature dims disagree (x has D={D}, y has D={y.shape[1]})")
+    if N % TILE_I:
+        raise ValueError(
+            f"pairdist: N={N} (rows of x) is not a multiple of TILE_I={TILE_I}; "
+            "pad via kernels.backend.pairdist_auto")
+    if M % TILE_J:
+        raise ValueError(
+            f"pairdist: M={M} (rows of y) is not a multiple of TILE_J={TILE_J}; "
+            "pad via kernels.backend.pairdist_auto")
+    if D % LANE:
+        raise ValueError(
+            f"pairdist: D={D} (feature dim) is not a multiple of the {LANE}-wide "
+            "lane; pad via kernels.backend.pairdist_auto")
     fuse = bandwidth is not None
     inv2s2 = 1.0 / (2.0 * bandwidth * bandwidth + 1e-12) if fuse else 0.0
     grid = (N // TILE_I, M // TILE_J)

@@ -1,29 +1,22 @@
-"""jit wrapper: pad to tile multiples, run the kernel, slice back."""
+"""Public pairdist ops: thin forwarding onto the unified backend layer.
+
+The pad-to-tile / slice-back plumbing lives in ``repro.kernels.backend``
+(shared by every pairdist consumer); these wrappers force the Pallas path so
+the kernel itself is what gets exercised (interpret-mode off-TPU).
+"""
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import pad_to, use_interpret
-from .kernel import TILE_I, TILE_J, pairdist as _kernel
+from repro.kernels import backend as _backend
 
 __all__ = ["pairwise_sqdist", "rbf_kernel"]
 
 
-@functools.partial(jax.jit, static_argnames=("bandwidth",))
-def _run(x, y, bandwidth):
-    N, M = x.shape[0], y.shape[0]
-    xp = pad_to(pad_to(x.astype(jnp.float32), 128, axis=1), TILE_I, axis=0)
-    yp = pad_to(pad_to(y.astype(jnp.float32), 128, axis=1), TILE_J, axis=0)
-    out = _kernel(xp, yp, bandwidth=bandwidth, interpret=use_interpret())
-    return out[:N, :M]
-
-
 def pairwise_sqdist(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-    return _run(x, y, None)
+    return _backend.pairdist_auto(x, y, backend="pallas")
 
 
 def rbf_kernel(x: jnp.ndarray, y: jnp.ndarray, bandwidth: float) -> jnp.ndarray:
-    return _run(x, y, float(bandwidth))
+    return _backend.pairdist_auto(x, y, bandwidth=float(bandwidth),
+                                  backend="pallas")

@@ -13,11 +13,11 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs import SHAPES, ArchConfig, ShapeSpec, get_config
-from repro.models import decode_step, init, init_cache, loss_fn, prefill
-from repro.parallel.sharding import AxisRules, axis_rules, current_rules
+from repro.models import decode_step, init, init_cache, prefill
+from repro.parallel.sharding import AxisRules
 from repro.train import TrainConfig, TrainState, make_train_step
 from repro.train.optimizer import tree_zero1_specs
 

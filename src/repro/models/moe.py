@@ -12,7 +12,6 @@ prob, scaled by E) is returned to the trainer.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -28,7 +28,6 @@ Pallas-tiled variant of the hot loop.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

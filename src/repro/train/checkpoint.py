@@ -15,7 +15,7 @@ import os
 import shutil
 import tempfile
 import threading
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np

@@ -15,7 +15,6 @@ the bigram entropy — which the example driver asserts.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import (fit_gp, gp_predict, gp_joint_samples, icd_from_data,
                         imoo_scores, mes_information_gain, soc_init,
-                        ted_select, transform_to_icd, make_space)
+                        ted_select, transform_to_icd)
 from repro.core.acquisition import frontier_maxima
 
 

@@ -9,7 +9,7 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.core import make_space
-from repro.core.space import TABLE_I, DesignSpace
+from repro.core.space import TABLE_I
 
 
 def test_table_i_shape():

@@ -1,7 +1,6 @@
 """HLO analyzer: trip-count-corrected flops on known programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_stats import analyze_hlo
 

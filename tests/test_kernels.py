@@ -38,6 +38,71 @@ def test_pairdist_rbf_fused(bw):
     assert np.allclose(np.diagonal(got), 1.0, atol=1e-4)
 
 
+# ----------------------------------------------------- pairdist backend
+@pytest.mark.parametrize("n,m,d", [(1, 1, 1), (7, 3, 5), (100, 50, 26),
+                                   (130, 257, 26), (128, 128, 128)])
+def test_pairdist_auto_matches_xla_ref_unaligned(n, m, d):
+    """(c) the backend's padded Pallas path agrees with the XLA reference on
+    shapes that are NOT tile multiples (and on exact multiples)."""
+    from repro.kernels import backend
+
+    kx, ky = jax.random.split(jax.random.PRNGKey(3 * n + m + d))
+    x = jax.random.normal(kx, (n, d))
+    y = jax.random.normal(ky, (m, d))
+    want = pd_ref.pairwise_sqdist(x, y)
+    got = backend.pairdist_auto(x, y, backend="pallas")
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    # the auto/XLA route is the reference formula itself
+    np.testing.assert_allclose(backend.pairdist_auto(x, y, backend="xla"),
+                               want, rtol=0, atol=0)
+    # fused RBF parity on the same unaligned shapes
+    np.testing.assert_allclose(
+        backend.pairdist_auto(x, y, bandwidth=1.7, backend="pallas"),
+        pd_ref.rbf(x, y, 1.7), rtol=1e-4, atol=1e-4)
+
+
+def test_pairdist_raw_kernel_rejects_unpadded_shapes():
+    """The raw kernel names the offending dimension instead of mis-tiling."""
+    from repro.kernels.pairdist.kernel import pairdist
+
+    ok = jnp.zeros((128, 128))
+    with pytest.raises(ValueError, match="N=100"):
+        pairdist(jnp.zeros((100, 128)), ok)
+    with pytest.raises(ValueError, match="M=130"):
+        pairdist(ok, jnp.zeros((130, 128)))
+    with pytest.raises(ValueError, match="D=26"):
+        pairdist(jnp.zeros((128, 26)), jnp.zeros((128, 26)))
+    with pytest.raises(ValueError, match="feature dims"):
+        pairdist(ok, jnp.zeros((128, 256)))
+
+
+def test_pairdist_auto_resolve_and_grad(monkeypatch):
+    """auto resolves to XLA unless the env upgrades it (fidelity default —
+    on TPU too); differentiable=True stays XLA and is grad-safe end to end."""
+    from repro.kernels import backend
+
+    monkeypatch.delenv("REPRO_PAIRDIST_BACKEND", raising=False)
+    assert backend.resolve_backend("auto", 4096, 4096) == "xla"
+    monkeypatch.setenv("REPRO_PAIRDIST_BACKEND", "pallas")
+    assert backend.resolve_backend("auto", 4096, 4096) == "pallas"
+    monkeypatch.setenv("REPRO_PAIRDIST_BACKEND", "platform")
+    if jax.default_backend() != "tpu":
+        assert backend.resolve_backend("auto", 4096, 4096) == "xla"
+    monkeypatch.delenv("REPRO_PAIRDIST_BACKEND")
+    if jax.default_backend() != "tpu":
+        assert backend.resolve_backend("platform", 4096, 4096) == "xla"
+    assert backend.resolve_backend("xla") == "xla"
+    assert backend.resolve_backend("pallas", 4, 4) == "pallas"
+    with pytest.raises(ValueError, match="unknown pairdist backend"):
+        backend.resolve_backend("cuda")
+
+    def loss(x):
+        return jnp.sum(backend.pairdist_auto(x, x, differentiable=True))
+
+    g = jax.grad(loss)(jax.random.normal(jax.random.PRNGKey(0), (9, 5)))
+    assert np.isfinite(np.asarray(g)).all()
+
+
 # ---------------------------------------------------------- pareto_count
 @pytest.mark.parametrize("n,m", [(4, 2), (127, 3), (128, 3), (129, 2),
                                  (400, 3)])

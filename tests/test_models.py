@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, get_config, SHAPES, runnable_cells, \
+from repro.configs import ARCH_IDS, get_config, runnable_cells, \
     cell_skip_reason
 from repro.models import (decode_step, init, init_cache, loss_fn, prefill,
                           xent_chunks)

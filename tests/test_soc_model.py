@@ -1,5 +1,4 @@
 """SoC evaluation model: invariants the exploration relies on (hypothesis)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

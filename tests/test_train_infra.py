@@ -1,7 +1,6 @@
 """Training infra: data determinism, checkpoint/restore/elastic, resume,
 gradient compression, ZeRO specs, serving engine."""
 import dataclasses
-import os
 import tempfile
 
 import jax
@@ -15,7 +14,7 @@ from repro.parallel.collectives import ef_update, init_error_feedback, \
     quantize_tree, dequantize_tree
 from repro.parallel.sharding import AxisRules
 from repro.serve import Engine, ServeConfig
-from repro.train import (DataConfig, LRSchedule, TrainConfig, adamw_init,
+from repro.train import (DataConfig, LRSchedule, TrainConfig,
                          bigram_entropy, latest_step, make_batch, restore,
                          save, train, zero1_spec)
 from repro.train.checkpoint import AsyncCheckpointer
