@@ -29,20 +29,32 @@ METHODS = ("soc-tuner", "microal", "regression", "xgb", "rf", "svr", "random")
 class Bench:
     space: object
     pool: np.ndarray          # [N, d] candidate index vectors
-    y: np.ndarray             # [N, 3] flow metrics for the whole pool
-    ref_front: np.ndarray     # true Pareto front of the pool
+    y: np.ndarray | None      # [N, 3] flow metrics for the whole pool
+    ref_front: np.ndarray | None  # true Pareto front of the pool
     flow_factory: object      # () -> fresh VLSIFlow (for budget counting)
     workload: str
     simplified: bool = False  # ref/pool came from SimplifiedFlow
 
 
 def make_bench(workload: str = "resnet50", n_pool: int = 2500,
-               seed: int = 0, simplified: bool = False) -> Bench:
+               seed: int = 0, simplified: bool = False,
+               with_ref: bool = True) -> Bench:
+    """Build a benchmark pool (+ true Pareto front when ``with_ref``).
+
+    ``with_ref=False`` skips evaluating the whole pool and the O(N²)
+    dominance pass — required for the 10⁵–10⁶ pool-scaling benchmarks, where
+    the reference front is neither affordable nor needed (they measure
+    latency/memory, not ADRS)."""
     os.makedirs(CACHE_DIR, exist_ok=True)
     space = make_space()
+    flow_cls = SimplifiedFlow if simplified else VLSIFlow
+    if not with_ref:
+        pool = np.asarray(space.sample(jax.random.PRNGKey(seed), n_pool))
+        return Bench(space=space, pool=pool, y=None, ref_front=None,
+                     flow_factory=lambda: flow_cls(space, workload),
+                     workload=workload, simplified=simplified)
     tag = f"{workload}_{n_pool}_{seed}{'_simp' if simplified else ''}"
     cache = os.path.join(CACHE_DIR, tag + ".npz")
-    flow_cls = SimplifiedFlow if simplified else VLSIFlow
     if os.path.exists(cache):
         z = np.load(cache)
         pool, y = z["pool"], z["y"]
@@ -69,12 +81,15 @@ def run_method(name: str, bench: Bench, *, T: int, b: int, n: int,
 
 
 def run_fleet(benches: "list[Bench]", seeds: int, *, T: int, b: int, n: int,
-              weights=((1.0, 1.0, 1.0),), verbose: bool = False):
+              weights=((1.0, 1.0, 1.0),), verbose: bool = False,
+              **fleet_kw):
     """All (workload × seed × weighting) scenarios in ONE fleet_tuner call.
 
     Every ``Bench`` must share the same candidate pool (they do when built by
     ``make_bench`` with the same ``n_pool``/``seed`` — the pool draw does not
-    depend on the workload). Returns the ``FleetResult``.
+    depend on the workload). Extra ``fleet_kw`` (``incremental``, ``mesh``,
+    ``pool_chunk``, ...) pass straight to :func:`repro.core.fleet_tuner`.
+    Returns the ``FleetResult``.
     """
     from repro.core import FleetScenario, fleet_tuner
     for bn in benches:
@@ -90,7 +105,7 @@ def run_fleet(benches: "list[Bench]", seeds: int, *, T: int, b: int, n: int,
     return fleet_tuner(
         benches[0].space, benches[0].pool, scenarios, T=T, n=n, b=b,
         reference_fronts={bn.workload: bn.ref_front for bn in benches},
-        verbose=verbose)
+        verbose=verbose, **fleet_kw)
 
 
 def write_csv(name: str, header: list[str], rows: list[list]) -> str:

@@ -1,20 +1,39 @@
-"""Microbenchmark: incremental BOEngine vs the from-scratch per-round path.
+"""Microbenchmark: incremental BOEngine vs the from-scratch per-round path,
+plus the large-pool scaling sweep.
 
-Runs ``soc_tuner`` twice on the same pool/seed — once with
-``incremental=False`` (the historical round: cold 150-step Adam fit, full
-O(n³) Cholesky, host-side masking/argmax) and once with ``incremental=True``
-(warm-started fits, rank-k Cholesky block updates, cached pool covariances,
-device-side selection) — and reports per-round wall time, dispatch counts,
-refactor/update mix, final ADRS, and the cross-ADRS between the two learned
-Pareto fronts. Results land in ``BENCH_engine.json``::
+**Engine comparison** (small/medium pools): runs ``soc_tuner`` twice on the
+same pool/seed — once with ``incremental=False`` (the historical round: cold
+150-step Adam fit, full O(n³) Cholesky, host-side masking/argmax) and once
+with ``incremental=True`` (warm-started fits, rank-k Cholesky block updates,
+cached pool covariances, device-side selection) — and reports per-round wall
+time, dispatch counts, refactor/update mix, final ADRS, and the cross-ADRS
+between the two learned Pareto fronts. Results land in ``BENCH_engine.json``::
 
     PYTHONPATH=src python -m benchmarks.engine_bench --n-pool 1024 --T 40
+
+**Pool scaling** (the 10⁵–10⁶ regime, see docs/scaling.md): a single large
+``--n-pool`` — or a ``--pool-sweep`` list — runs the chunked incremental
+engine only (no reference front: the pool's O(N²) dominance pass and full
+evaluation are neither affordable nor needed) and emits per-round latency +
+peak RSS per pool size into ``BENCH_pool.json``. Sweep points run in
+subprocesses so each size reports its own honest peak memory::
+
+    PYTHONPATH=src python -m benchmarks.engine_bench --n-pool 100000
+    PYTHONPATH=src python -m benchmarks.engine_bench \\
+        --pool-sweep 2500,10000,40000,100000
+
+Pool mode engages automatically at ``--n-pool`` >= 20000 (force it lower
+with ``--pool-bench``).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import resource
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -23,27 +42,126 @@ import numpy as np
 from .common import OUT_DIR, make_bench
 from repro.core import adrs, soc_tuner
 
+#: --n-pool at or above this switches to pool-scaling mode by itself.
+POOL_MODE_MIN = 20_000
+
 
 def _run(bench, *, T, n, b, gp_steps, seed, incremental, warm_steps,
-         drift_tol):
+         drift_tol, pool_chunk=None):
     flow = bench.flow_factory()
     t0 = time.time()
     res = soc_tuner(bench.space, bench.pool, flow, T=T, n=n, b=b,
                     gp_steps=gp_steps, key=jax.random.PRNGKey(seed),
                     reference_front=bench.ref_front, incremental=incremental,
-                    warm_steps=warm_steps, drift_tol=drift_tol)
+                    warm_steps=warm_steps, drift_tol=drift_tol,
+                    pool_chunk=pool_chunk)
     wall = time.time() - t0
     # round 0 is setup (ICD + TED init); rounds 1..2 pay jit compiles
     walls = np.asarray([h["wall_s"] for h in res.history[1:]])
-    return res, {
+    out = {
         "wall_s": wall,
         "round_wall_mean_s": float(walls.mean()),
         "round_wall_median_s": float(np.median(walls)),
         "round_wall_steady_s": float(np.median(walls[len(walls) // 2:])),
-        "final_adrs": float(res.history[-1]["adrs"]),
         "evaluations": int(len(res.evaluated_rows)),
         **res.engine_stats,
     }
+    if bench.ref_front is not None:
+        out["final_adrs"] = float(res.history[-1]["adrs"])
+    return res, out
+
+
+def _peak_rss_mb() -> float:
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    # ru_maxrss is kilobytes on Linux but bytes on macOS
+    return peak / (1 << 20) if sys.platform == "darwin" else peak / 1024.0
+
+
+def pool_point(a) -> dict:
+    """One pool-scaling measurement in THIS process (chunked incremental
+    engine, no reference front)."""
+    chunk = a.pool_chunk
+    if chunk not in (None, "auto"):
+        chunk = int(chunk)
+    bench = make_bench(a.workload, n_pool=a.n_pool, seed=a.seed,
+                       with_ref=False)
+    _, rec = _run(bench, T=a.T, n=a.n, b=a.b, gp_steps=a.gp_steps,
+                  seed=a.seed, incremental=True, warm_steps=a.warm_steps,
+                  drift_tol=a.drift_tol, pool_chunk=chunk)
+    # points are self-describing: a later single-point run may merge into an
+    # existing sweep file, so each point carries its own full configuration
+    rec.update(n_pool=a.n_pool, pool_chunk=a.pool_chunk,
+               workload=a.workload, T=a.T, n=a.n, b=a.b,
+               gp_steps=a.gp_steps, warm_steps=a.warm_steps,
+               drift_tol=a.drift_tol, seed=a.seed,
+               peak_rss_mb=_peak_rss_mb(), backend=jax.default_backend())
+    return rec
+
+
+def _run_pool_subprocess(a, n_pool: int) -> dict:
+    """Run one sweep point isolated so its peak RSS is its own."""
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        tmp = f.name
+    cmd = [sys.executable, "-m", "benchmarks.engine_bench",
+           "--n-pool", str(n_pool), "--pool-bench", "--point-out", tmp,
+           "--workload", a.workload, "--T", str(a.T), "--n", str(a.n),
+           "--b", str(a.b), "--gp-steps", str(a.gp_steps),
+           "--drift-tol", str(a.drift_tol), "--seed", str(a.seed),
+           # a.pool_chunk is already normalized ("none" -> None); re-encode
+           # it in CLI vocabulary for the child
+           "--pool-chunk",
+           "none" if a.pool_chunk is None else str(a.pool_chunk)]
+    if a.warm_steps is not None:
+        cmd += ["--warm-steps", str(a.warm_steps)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    subprocess.run(cmd, check=True, env=env)
+    with open(tmp) as f:
+        rec = json.load(f)
+    os.unlink(tmp)
+    return rec
+
+
+def _pool_main(a) -> None:
+    if a.pool_sweep:
+        sizes = [int(x) for x in a.pool_sweep.split(",")]
+        points = []
+        for n_pool in sizes:
+            print(f"[engine-bench] pool point n_pool={n_pool} ...")
+            rec = _run_pool_subprocess(a, n_pool)
+            points.append(rec)
+            print(f"[engine-bench]   median round "
+                  f"{1e3 * rec['round_wall_median_s']:.0f}ms  "
+                  f"peak rss {rec['peak_rss_mb']:.0f}MB")
+    else:
+        rec = pool_point(a)
+        if a.point_out:  # sweep-subprocess mode: emit the point and stop
+            with open(a.point_out, "w") as f:
+                json.dump(rec, f)
+            return
+        # merge into an existing sweep file instead of clobbering it
+        points = []
+        if os.path.exists(a.pool_out):
+            try:
+                with open(a.pool_out) as f:
+                    points = [p for p in json.load(f).get("points", [])
+                              if p.get("n_pool") != a.n_pool]
+            except (json.JSONDecodeError, OSError):
+                points = []
+        points = sorted(points + [rec], key=lambda p: p["n_pool"])
+        print(f"[engine-bench] n_pool={a.n_pool}  median round "
+              f"{1e3 * rec['round_wall_median_s']:.0f}ms  "
+              f"peak rss {rec['peak_rss_mb']:.0f}MB  "
+              f"({rec['refactors']} refactors / {rec['block_updates']} "
+              f"updates)")
+    # no top-level config block: points merged across runs carry their own
+    out = {"points": points}
+    os.makedirs(os.path.dirname(a.pool_out), exist_ok=True)
+    with open(a.pool_out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[engine-bench] {len(points)} pool point(s) -> {a.pool_out}")
 
 
 def main() -> None:
@@ -58,7 +176,25 @@ def main() -> None:
     p.add_argument("--drift-tol", type=float, default=1.0)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default=os.path.join(OUT_DIR, "BENCH_engine.json"))
+    p.add_argument("--pool-bench", action="store_true",
+                   help="force pool-scaling mode (auto at --n-pool >= "
+                        f"{POOL_MODE_MIN})")
+    p.add_argument("--pool-sweep", default=None,
+                   help="comma-separated pool sizes, e.g. 2500,10000,100000 "
+                        "(each runs in a subprocess for honest peak RSS)")
+    p.add_argument("--pool-chunk", default="auto",
+                   help="engine pool_chunk in pool mode: 'auto', 'none', or "
+                        "an int")
+    p.add_argument("--pool-out",
+                   default=os.path.join(OUT_DIR, "BENCH_pool.json"))
+    p.add_argument("--point-out", default=None, help=argparse.SUPPRESS)
     a = p.parse_args()
+    if a.pool_chunk == "none":
+        a.pool_chunk = None
+
+    if a.pool_sweep or a.pool_bench or a.n_pool >= POOL_MODE_MIN:
+        _pool_main(a)
+        return
 
     bench = make_bench(a.workload, n_pool=a.n_pool, seed=a.seed)
     kw = dict(T=a.T, n=a.n, b=a.b, gp_steps=a.gp_steps, seed=a.seed,

@@ -6,10 +6,12 @@
 - ``gp``          GP surrogates (Eqs. 3-4), pure JAX (+ vmap-batched fleet fit)
 - ``acquisition`` IMOO information-gain acquisition (Eqs. 5-10)
 - ``engine``      device-resident incremental BO engine (warm-started GPs,
-                  rank-k Cholesky updates, cached pool covariances,
-                  device-side selection) — the Alg. 3 hot path
+                  rank-k Cholesky updates, chunk-streamed pool covariances
+                  for 10⁵–10⁶-candidate pools, device-side selection) — the
+                  Alg. 3 hot path; see docs/scaling.md
 - ``tuner``       Algorithm 3 — the full exploration loop
-- ``fleet``       batched multi-(workload × seed × weighting) exploration
+- ``fleet``       batched multi-(workload × seed × weighting) exploration,
+                  optionally shard_map-sharded over a device mesh
 - ``pareto``      dominance / Pareto front / ADRS (Eq. 12) / hypervolume
 - ``baselines``   the six comparison methods of §IV
 

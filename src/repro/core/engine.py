@@ -15,10 +15,19 @@ across rounds instead:
   instead of refactorizing; a full factorization happens only on bucket
   growth or when the warm-fitted hyperparameters drift past ``drift_tol``
   from the ones the factorization was built with;
-* **cached pool covariances** — ``V = L⁻¹·K(train_pad, pool)`` is held on
-  device and only its trailing rows are recomputed per update, so posterior
-  mean/std over the whole pool is one [P,N] matmul, not an O(P²N) triangular
-  solve; the pool's ICD geometry is uploaded once per run;
+* **chunked pool streaming** — the pool axis lives in column chunks: the
+  cached ``V = L⁻¹·K(train_pad, pool)`` is stored ``[nc, m, P, C]`` and every
+  O(N) stage (trailing-row V updates, posterior moments, masking, argmax)
+  runs as a ``lax.scan`` over chunks with an online running-argmax carry, so
+  no [P, N] kernel product, [N] score vector, or [S_frontier, N, m] MES
+  broadcast is ever materialized whole. ``pool_chunk=None`` is one chunk
+  covering the pool (the monolithic regime); any other chunking is
+  *numerically pinned* to it — posterior moments use fixed-order sequential
+  accumulation (``lax.fori_loop``) instead of width-dependent GEMV
+  reductions, so every chunk size produces bit-identical scores and selects
+  the identical candidate (``tests/test_pool_scaling.py``). This is what
+  lets ``n_pool`` grow from the paper's 2 500 toward 10⁵–10⁶ (see
+  ``docs/scaling.md`` for the memory model);
 * **device-side selection** — the never-re-evaluate mask is scattered as
   ``-inf`` and the argmax taken inside the jitted program, so a round is a
   single XLA dispatch whose only host transfer is the chosen row index.
@@ -40,6 +49,11 @@ host-side masking/argmax) call-for-call, reproducing the seed ``soc_tuner``
 trajectory bit-for-bit. :class:`BatchedBOEngine` is the same engine with a
 leading scenario axis — the fleet runner's backend — whose exact path
 likewise reproduces today's ``fit_gp_batch``/``imoo_scores_batch`` rounds.
+``BatchedBOEngine(..., mesh=...)`` additionally shards the scenario axis over
+a device mesh with ``shard_map`` (scenarios are embarrassingly parallel —
+one scenario group per device, no collectives inside a round); the per-round
+host sync collapses to the fleet-wide drift maximum plus one gather of the
+[S] picks.
 """
 from __future__ import annotations
 
@@ -50,6 +64,10 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
+
+from repro.kernels.backend import auto_chunk
 
 from .acquisition import imoo_scores, imoo_scores_batch, mes_information_gain
 from .gp import (JITTER, PAD_BUCKET, GPParams, _default_params, _fit, _kernel,
@@ -73,12 +91,18 @@ class EngineStats:
 
 
 class EngineState(NamedTuple):
-    """Device-resident carry between rounds (a pytree)."""
+    """Device-resident carry between rounds (a pytree).
+
+    The pool axis is chunked: ``V`` holds ``nc`` column chunks of ``C``
+    candidates each (``nc·C = N_pad ≥ N``; one chunk of C = N when
+    ``pool_chunk=None``). The batched engine carries a leading [S] axis on
+    every leaf.
+    """
 
     params: GPParams      # warm-evolving fit hyperparameters
     params_ref: GPParams  # hyperparameters of the current factorization
     L: jnp.ndarray        # [m, P, P] Cholesky of K(params_ref) + noise
-    V: jnp.ndarray        # [m, P, N] L⁻¹ · K(train_pad, pool)
+    V: jnp.ndarray        # [nc, m, P, C] L⁻¹ · K(train_pad, pool chunk)
 
 
 def _drift(params: GPParams, params_ref: GPParams) -> jnp.ndarray:
@@ -89,24 +113,22 @@ def _drift(params: GPParams, params_ref: GPParams) -> jnp.ndarray:
                     jnp.max(jnp.abs(params.log_noise - params_ref.log_noise))))
 
 
-def _factor_one(log_ls, log_var, log_noise, x, mask, pool):
-    """Full factorization for one objective: L and V = L⁻¹ K(x, pool)."""
+# ------------------------------------------------------------ factorization
+def _chol_one(log_ls, log_var, log_noise, x, mask):
+    """Full train-Cholesky for one objective (no pool work)."""
     P = x.shape[0]
     K = _kernel((log_ls, log_var), x, x, differentiable=False)
     K = K + (jnp.exp(log_noise) + JITTER) * jnp.eye(P) + jnp.diag(1e6 * mask)
-    L = jnp.linalg.cholesky(K)
-    Ks = _kernel((log_ls, log_var), x, pool, differentiable=False)  # [P, N]
-    V = jax.scipy.linalg.solve_triangular(L, Ks, lower=True)
-    return L, V
+    return jnp.linalg.cholesky(K)
 
 
-def _refactor(params: GPParams, x, mask, pool):
-    return jax.vmap(_factor_one, in_axes=(0, 0, 0, None, None, None))(
-        params.log_ls, params.log_var, params.log_noise, x, mask, pool)
+def _chol_refactor(params: GPParams, x, mask):
+    return jax.vmap(_chol_one, in_axes=(0, 0, 0, None, None))(
+        params.log_ls, params.log_var, params.log_noise, x, mask)
 
 
-def _block_update(params_ref: GPParams, L, V, x, mask, pool, s0: int):
-    """Rank-k extension: recompute rows [s0, P) of L and V only.
+def _chol_block(params_ref: GPParams, L, x, mask, s0: int):
+    """Rank-k extension of L: recompute rows [s0, P) only.
 
     Valid whenever rows [0, s0) of ``x`` are unchanged since the last
     factorization (real rows form a prefix and only appended rows + trailing
@@ -116,7 +138,7 @@ def _block_update(params_ref: GPParams, L, V, x, mask, pool, s0: int):
     full refactorization would produce, at O(P²·k) instead of O(P³).
     """
 
-    def one(log_ls, log_var, log_noise, Li, Vi):
+    def one(log_ls, log_var, log_noise, Li):
         xa, xb = x[:s0], x[s0:]
         B = x.shape[0] - s0
         K12 = _kernel((log_ls, log_var), xa, xb, differentiable=False)
@@ -126,122 +148,226 @@ def _block_update(params_ref: GPParams, L, V, x, mask, pool, s0: int):
         L11 = Li[:s0, :s0]
         L21 = jax.scipy.linalg.solve_triangular(L11, K12, lower=True).T
         L22 = jnp.linalg.cholesky(K22 - L21 @ L21.T)
-        Li = Li.at[s0:, :s0].set(L21).at[s0:, s0:].set(L22)
-        Ksb = _kernel((log_ls, log_var), xb, pool, differentiable=False)
-        Vb = jax.scipy.linalg.solve_triangular(
-            L22, Ksb - L21 @ Vi[:s0], lower=True)
-        Vi = Vi.at[s0:].set(Vb)
-        return Li, Vi
+        return Li.at[s0:, :s0].set(L21).at[s0:, s0:].set(L22)
 
     return jax.vmap(one)(params_ref.log_ls, params_ref.log_var,
-                         params_ref.log_noise, L, V)
+                         params_ref.log_noise, L)
 
 
-def _posterior_select(params_ref: GPParams, L, V, yn, y_mean, y_std, pool,
-                      sub_rows, eval_mask, key, s: int, weights):
-    """Whole-pool IMOO scores from the cached factorization; returns argmax.
+def _v_chunk_refactor(params_ref: GPParams, L, x, pc):
+    """Fresh V for one pool chunk ``pc`` [C, d]: L⁻¹·K(x, pc) per objective."""
 
-    Per-objective math mirrors ``gp_predict`` + ``gp_joint_samples`` +
-    ``mes_information_gain`` exactly, but posterior moments come from the
-    cached ``V`` (one [P,N] matmul) instead of a fresh O(P²N) triangular
-    solve, the frontier columns are sliced out of ``V``, and the
-    never-re-evaluate mask + argmax stay on device.
+    def one(log_ls, log_var, Li):
+        Ks = _kernel((log_ls, log_var), x, pc, differentiable=False)  # [P, C]
+        return jax.scipy.linalg.solve_triangular(Li, Ks, lower=True)
+
+    return jax.vmap(one)(params_ref.log_ls, params_ref.log_var, L)
+
+
+def _v_chunk_block(params_ref: GPParams, L, Vc, x, pc, s0: int):
+    """Rank-k extension of one V chunk: recompute rows [s0, P) only."""
+
+    def one(log_ls, log_var, Li, Vi):
+        Ksb = _kernel((log_ls, log_var), x[s0:], pc,
+                      differentiable=False)                       # [B, C]
+        L21, L22 = Li[s0:, :s0], Li[s0:, s0:]
+        Vb = jax.scipy.linalg.solve_triangular(
+            L22, Ksb - L21 @ Vi[:s0], lower=True)
+        return Vi.at[s0:].set(Vb)
+
+    return jax.vmap(one)(params_ref.log_ls, params_ref.log_var, L, Vc)
+
+
+# ----------------------------------------------------------------- scoring
+def _col_moments(log_var, beta_i, Vi):
+    """Posterior mean/std for every column of one objective's V chunk.
+
+    Sequential fixed-order accumulation (``fori_loop`` over the P train
+    rows), NOT a GEMV: XLA's matmul reductions change last-ulp results with
+    the output width, while this form makes the moments — and therefore the
+    scores and the argmax — independent of the chunk size. The chunked-vs-
+    monolithic bit-parity of the whole engine rests on this function
+    (pinned by ``tests/test_pool_scaling.py``).
     """
-    m = yn.shape[1]
-    q = sub_rows.shape[0]
 
-    def one(log_ls, log_var, Li, Vi, yni, k):
-        beta = jax.scipy.linalg.solve_triangular(Li, yni, lower=True)  # [P]
-        mean = Vi.T @ beta                                             # [N]
-        var = jnp.exp(log_var) - jnp.sum(Vi * Vi, axis=0)
-        std = jnp.sqrt(jnp.maximum(var, 1e-10))
-        xq = pool[sub_rows]
-        Vs = Vi[:, sub_rows]                                           # [P, q]
+    def body(p, acc):
+        mu, ss = acc
+        return mu + beta_i[p] * Vi[p], ss + Vi[p] * Vi[p]
+
+    mu, ss = jax.lax.fori_loop(
+        1, Vi.shape[0], body, (beta_i[0] * Vi[0], Vi[0] * Vi[0]))
+    var = jnp.exp(log_var) - ss
+    return mu, jnp.sqrt(jnp.maximum(var, 1e-10))
+
+
+def _train_beta(L, yn):
+    """[m, P] whitened targets β = L⁻¹·y per objective."""
+    return jax.vmap(
+        lambda Li, yi: jax.scipy.linalg.solve_triangular(Li, yi, lower=True)
+    )(L, yn.T)
+
+
+def _frontier_ystar(params_ref: GPParams, L, beta, x, xq, y_mean, y_std, key,
+                    s: int):
+    """[s, m] sampled Pareto-frontier maxima over the ``xq`` [q, d] subset.
+
+    Mirrors ``gp_joint_samples`` + ``frontier_maxima``: the O(q³) joint draw
+    runs on the frontier subset only, so it is independent of the pool size
+    and of the chunking.
+    """
+    m = beta.shape[0]
+    q = xq.shape[0]
+
+    def one(log_ls, log_var, Li, bi, k):
+        Ks = _kernel((log_ls, log_var), x, xq, differentiable=False)  # [P, q]
+        Vs = jax.scipy.linalg.solve_triangular(Li, Ks, lower=True)
+        mean_q, _ = _col_moments(log_var, bi, Vs)
         Kqq = _kernel((log_ls, log_var), xq, xq, differentiable=False)
         cov = Kqq - Vs.T @ Vs
         jit_ = 1e-4 * jnp.exp(log_var) + 1e-6
         Lq = jnp.linalg.cholesky(cov + jit_ * jnp.eye(q))
         eps = jax.random.normal(k, (q, s))
-        samp = mean[sub_rows][:, None] + Lq @ eps                      # [q, s]
-        return mean, std, samp
+        return mean_q[:, None] + Lq @ eps                             # [q, s]
 
     keys = jax.random.split(key, m)
-    mean, std, samp = jax.vmap(one, in_axes=(0, 0, 0, 0, 1, 0))(
-        params_ref.log_ls, params_ref.log_var, L, V, yn, keys)
-    mean_d = mean.T * y_std + y_mean            # [N, m], de-standardized
-    std_d = std.T * y_std
+    samp = jax.vmap(one)(params_ref.log_ls, params_ref.log_var, L, beta, keys)
     samp = jnp.transpose(samp, (2, 1, 0)) * y_std + y_mean  # [s, q, m]
-    ystar = jnp.max(samp, axis=1)               # [s, m] frontier maxima
+    return jnp.max(samp, axis=1)                            # [s, m]
+
+
+def _score_chunk(params_ref: GPParams, beta, Vc, y_mean, y_std, ystar,
+                 evalm_c, weights):
+    """Masked IMOO scores for one V chunk ``[m, P, C]`` -> ``[C]``."""
+    mean, std = jax.vmap(_col_moments)(params_ref.log_var, beta, Vc)
+    mean_d = mean.T * y_std + y_mean            # [C, m], de-standardized
+    std_d = std.T * y_std
     scores = mes_information_gain(mean_d, std_d, ystar, weights)
-    scores = jnp.where(eval_mask, -jnp.inf, scores)
-    return jnp.argmax(scores)
+    return jnp.where(evalm_c, -jnp.inf, scores)
+
+
+def _select_chunks(params_ref: GPParams, L, V, x, yn, y_mean, y_std, pool_c,
+                   base, sub_rows, evalm_c, key, weights, *, s: int):
+    """Whole-pool argmax from the chunked V cache (one scenario).
+
+    Scans the chunks with an online running-max carry; cross-chunk ties keep
+    the earlier chunk (strict ``>``) and in-chunk ``argmax`` keeps the first
+    column, reproducing monolithic first-index-wins tie semantics exactly.
+    """
+    nc, C, d = pool_c.shape
+    xq = pool_c.reshape(nc * C, d)[sub_rows]
+    beta = _train_beta(L, yn)
+    ystar = _frontier_ystar(params_ref, L, beta, x, xq, y_mean, y_std, key, s)
+
+    def step(carry, inp):
+        best_val, best_idx = carry
+        Vc, em, b0 = inp
+        scores = _score_chunk(params_ref, beta, Vc, y_mean, y_std, ystar, em,
+                              weights)
+        v = jnp.max(scores)
+        i = jnp.argmax(scores).astype(jnp.int32)
+        take = v > best_val
+        return (jnp.where(take, v, best_val),
+                jnp.where(take, b0 + i, best_idx)), None
+
+    init = (jnp.asarray(-jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32))
+    (_, nxt), _ = jax.lax.scan(step, init, (V, evalm_c, base))
+    return nxt
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "s", "s0"))
-def _round_seq(state: EngineState, rows_pad, y_pad, mask, pool, eval_mask,
-               sub_rows, key, force_refactor, drift_tol, weights, *,
+def _round_seq(state: EngineState, rows_pad, y_pad, mask, pool_c, evalm_c,
+               base, sub_rows, key, force_refactor, drift_tol, weights, *,
                steps: int, s: int, s0: int):
     """One full BO round as a single XLA dispatch: warm fit → drift check →
-    block-update-or-refactor (``lax.cond``) → device-side score + argmax."""
-    x = pool[rows_pad] + 10.0 * mask[:, None]   # pad_training's x convention
+    block-update-or-refactor (``lax.cond``) → chunk-scanned score + argmax."""
+    nc, C, d = pool_c.shape
+    pool_flat = pool_c.reshape(nc * C, d)
+    x = pool_flat[rows_pad] + 10.0 * mask[:, None]  # pad_training's x rule
     yn, y_mean, y_std = _standardize(y_pad, mask)
     params = _fit(state.params, x, yn, mask, steps=steps)
     drift = _drift(params, state.params_ref)
     if s0 <= 0:  # statically known: nothing reusable — always refactor
         do_ref = jnp.asarray(True)
-        L, V = _refactor(params, x, mask, pool)
     else:
         do_ref = jnp.logical_or(force_refactor, drift > drift_tol)
-        L, V = jax.lax.cond(
-            do_ref,
-            lambda: _refactor(params, x, mask, pool),
-            lambda: _block_update(state.params_ref, state.L, state.V, x, mask,
-                                  pool, s0))
+    # On refactor the factorization adopts the fresh fit; resolve params_ref
+    # first so both L/V branches below factor under the same snapshot.
     params_ref = jax.tree.map(lambda a, b: jnp.where(do_ref, a, b),
                               params, state.params_ref)
-    nxt = _posterior_select(params_ref, L, V, yn, y_mean, y_std, pool,
-                            sub_rows, eval_mask, key, s, weights)
+    if s0 <= 0:
+        L = _chol_refactor(params_ref, x, mask)
+    else:
+        L = jax.lax.cond(
+            do_ref,
+            lambda: _chol_refactor(params_ref, x, mask),
+            lambda: _chol_block(params_ref, state.L, x, mask, s0))
+
+    def vstep(_, inp):
+        Vc_old, pc = inp
+        if s0 <= 0:
+            return None, _v_chunk_refactor(params_ref, L, x, pc)
+        return None, jax.lax.cond(
+            do_ref,
+            lambda: _v_chunk_refactor(params_ref, L, x, pc),
+            lambda: _v_chunk_block(params_ref, L, Vc_old, x, pc, s0))
+
+    _, V = jax.lax.scan(vstep, None, (state.V, pool_c))
+    nxt = _select_chunks(params_ref, L, V, x, yn, y_mean, y_std, pool_c, base,
+                         sub_rows, evalm_c, key, weights, s=s)
     return EngineState(params, params_ref, L, V), nxt, do_ref, drift
 
 
 # --------------------------------------------------------------- fleet batch
-@functools.partial(jax.jit, static_argnames=("steps",))
-def _phase1_batch(params, params_ref, pool, rows_pad, y_pad, mask, *,
-                  steps: int):
+def _phase1_batch_impl(params, params_ref, pool_flat, rows_pad, y_pad, mask,
+                       *, steps: int):
     """Batched warm fit + drift; x/yn stay device-resident for phase 2."""
 
-    def one(p, pref, pool_i, rp, yp, mi):
-        x = pool_i[rp] + 10.0 * mi[:, None]
+    def one(p, pref, pf, rp, yp, mi):
+        x = pf[rp] + 10.0 * mi[:, None]
         yn, y_mean, y_std = _standardize(yp, mi)
         p2 = _fit(p, x, yn, mi, steps=steps)
         return p2, _drift(p2, pref), x, yn, y_mean, y_std
 
-    return jax.vmap(one)(params, params_ref, pool, rows_pad, y_pad, mask)
+    return jax.vmap(one)(params, params_ref, pool_flat, rows_pad, y_pad, mask)
 
 
-@functools.partial(jax.jit, static_argnames=("s",))
-def _refactor_select_batch(params, x, mask, pool, yn, y_mean, y_std, sub_rows,
-                           eval_mask, keys, weights, *, s: int):
-    def one(p, xi, mi, pool_i, yni, ym, ys, sr, em, k, w):
-        L, V = _refactor(p, xi, mi, pool_i)
-        nxt = _posterior_select(p, L, V, yni, ym, ys, pool_i, sr, em, k, s, w)
+def _refactor_select_batch_impl(params, x, mask, pool_c, base, yn, y_mean,
+                                y_std, sub_rows, evalm_c, keys, weights, *,
+                                s: int):
+    def one(p, xi, mi, pci, bi, yni, ym, ys, sr, em, k, w):
+        L = _chol_refactor(p, xi, mi)
+        _, V = jax.lax.scan(
+            lambda _, pc: (None, _v_chunk_refactor(p, L, xi, pc)), None, pci)
+        nxt = _select_chunks(p, L, V, xi, yni, ym, ys, pci, bi, sr, em, k, w,
+                             s=s)
         return L, V, nxt
 
-    return jax.vmap(one)(params, x, mask, pool, yn, y_mean, y_std, sub_rows,
-                         eval_mask, keys, weights)
+    return jax.vmap(one)(params, x, mask, pool_c, base, yn, y_mean, y_std,
+                         sub_rows, evalm_c, keys, weights)
 
 
-@functools.partial(jax.jit, static_argnames=("s", "s0"))
-def _update_select_batch(params_ref, L, V, x, mask, pool, yn, y_mean, y_std,
-                         sub_rows, eval_mask, keys, weights, *,
-                         s: int, s0: int):
-    def one(p, Li, Vi, xi, mi, pool_i, yni, ym, ys, sr, em, k, w):
-        Ln, Vn = _block_update(p, Li, Vi, xi, mi, pool_i, s0)
-        nxt = _posterior_select(p, Ln, Vn, yni, ym, ys, pool_i, sr, em, k, s, w)
+def _update_select_batch_impl(params_ref, L, V, x, mask, pool_c, base, yn,
+                              y_mean, y_std, sub_rows, evalm_c, keys, weights,
+                              *, s: int, s0: int):
+    def one(p, Li, Vi, xi, mi, pci, bi, yni, ym, ys, sr, em, k, w):
+        Ln = _chol_block(p, Li, xi, mi, s0)
+        _, Vn = jax.lax.scan(
+            lambda _, inp: (None, _v_chunk_block(p, Ln, inp[0], xi, inp[1],
+                                                 s0)),
+            None, (Vi, pci))
+        nxt = _select_chunks(p, Ln, Vn, xi, yni, ym, ys, pci, bi, sr, em, k,
+                             w, s=s)
         return Ln, Vn, nxt
 
-    return jax.vmap(one)(params_ref, L, V, x, mask, pool, yn, y_mean, y_std,
-                         sub_rows, eval_mask, keys, weights)
+    return jax.vmap(one)(params_ref, L, V, x, mask, pool_c, base, yn, y_mean,
+                         y_std, sub_rows, evalm_c, keys, weights)
+
+
+_phase1_batch = jax.jit(_phase1_batch_impl, static_argnames=("steps",))
+_refactor_select_batch = jax.jit(_refactor_select_batch_impl,
+                                 static_argnames=("s",))
+_update_select_batch = jax.jit(_update_select_batch_impl,
+                               static_argnames=("s", "s0"))
 
 
 class _EngineBase:
@@ -271,6 +397,60 @@ class _EngineBase:
         cold = first or not self.warm_start
         return cold, self.gp_steps if cold else self.warm_steps
 
+    def _resolve_chunk(self, pool_chunk, n: int) -> int:
+        """``pool_chunk`` -> concrete column-chunk size C ∈ [1, n].
+
+        ``None`` ⇒ one chunk of the whole pool (the monolithic regime);
+        ``"auto"`` ⇒ :func:`repro.kernels.backend.auto_chunk`'s memory-budget
+        heuristic. Any choice selects bit-identical candidates — chunking
+        changes the execution schedule, never the math.
+        """
+        if pool_chunk is None:
+            return n
+        if not self.incremental:
+            raise ValueError(
+                "pool_chunk requires incremental=True: the exact historical "
+                "path scores the pool monolithically by definition")
+        if pool_chunk == "auto":
+            return auto_chunk(n)
+        c = int(pool_chunk)
+        if c < 1:
+            raise ValueError(f"pool_chunk must be >= 1, got {pool_chunk}")
+        return min(c, n)
+
+    def _setup_chunks(self, pool_chunk) -> None:
+        """Build the chunk grid over ``self.pool`` ([N, d], or [S, N, d] for
+        the batched engine): resolves ``pool_chunk``, pads the pool to
+        ``nc·C`` with copies of row 0 (pad columns are always masked — see
+        ``_evalm_chunks``) and stores the chunked view + per-chunk global
+        column offsets. One implementation for both engines so the pad/grid
+        conventions can never diverge."""
+        n = self.pool.shape[-2]
+        self._C = self._resolve_chunk(pool_chunk, n)
+        self._nc = -(-n // self._C)
+        self._N_pad = self._nc * self._C
+        pad = self._N_pad - n
+        pool = self.pool
+        if pad:
+            reps = (1,) * (pool.ndim - 2) + (pad, 1)
+            pool = jnp.concatenate(
+                [pool, jnp.tile(pool[..., :1, :], reps)], axis=-2)
+        self._pool_c = pool.reshape(
+            pool.shape[:-2] + (self._nc, self._C, pool.shape[-1]))
+        base = jnp.arange(self._nc, dtype=jnp.int32) * self._C
+        self._base = (base if pool.ndim == 2
+                      else jnp.tile(base, (pool.shape[0], 1)))
+
+    def _evalm_chunks(self) -> jnp.ndarray:
+        """Chunked never-re-evaluate mask ([nc, C], or [S, nc, C] batched);
+        pad columns are always masked."""
+        em = self._eval_mask
+        pad = self._N_pad - em.shape[-1]
+        if pad:
+            em = jnp.concatenate(
+                [em, jnp.ones(em.shape[:-1] + (pad,), bool)], axis=-1)
+        return em.reshape(em.shape[:-1] + (self._nc, self._C))
+
 
 # ============================================================== sequential
 class BOEngine(_EngineBase):
@@ -288,6 +468,13 @@ class BOEngine(_EngineBase):
     ``fit_gp`` + ``imoo_scores`` + host argmax) and reproduces the seed
     ``soc_tuner`` trajectory bit-for-bit; see the module docstring for what
     the incremental path changes and the update/refactor policy.
+
+    ``pool_chunk`` (``None`` | int | ``"auto"``) streams every O(N) pool
+    stage in column chunks of that many candidates — same selections at any
+    chunk size, peak pool-stage memory O(m·P·C) instead of O(m·P·N) — which
+    is what makes 10⁵–10⁶-candidate pools practical (``docs/scaling.md``).
+    At that scale always pass ``sub_rows`` to :meth:`select`: the default
+    frontier subset is the whole pool, and the joint frontier draw is O(q³).
     """
 
     #: jitted program launches of one exact-path round (fit, posterior cache,
@@ -298,13 +485,14 @@ class BOEngine(_EngineBase):
                  warm_start: bool | None = None, gp_steps: int = 150,
                  warm_steps: int | None = None, drift_tol: float = 1.0,
                  bucket: int = PAD_BUCKET, s_frontiers: int = 10,
-                 weights=None):
+                 weights=None, pool_chunk: int | str | None = None):
         self.pool = jnp.asarray(pool_icd, jnp.float32)      # [N, d], once
         self.N, self.d = self.pool.shape
         self._configure(incremental=incremental, warm_start=warm_start,
                         gp_steps=gp_steps, warm_steps=warm_steps,
                         drift_tol=drift_tol, bucket=bucket,
                         s_frontiers=s_frontiers, weights=weights)
+        self._setup_chunks(pool_chunk)
 
         self._rows: list[int] = []
         self._y: np.ndarray | None = None       # [k, m] raw minimized metrics
@@ -386,9 +574,9 @@ class BOEngine(_EngineBase):
         state = self._alloc_state(params0, P, first or grew)
 
         state, nxt, did_ref, drift = _round_seq(
-            state, rows_pad, y_pad, mask, self.pool, self._eval_mask,
-            jnp.asarray(sub), key, bool(first or grew), self.drift_tol,
-            weights, steps=steps, s=self.s_frontiers, s0=s0)
+            state, rows_pad, y_pad, mask, self._pool_c, self._evalm_chunks(),
+            self._base, jnp.asarray(sub), key, bool(first or grew),
+            self.drift_tol, weights, steps=steps, s=self.s_frontiers, s0=s0)
 
         self._state = state
         self._P = P
@@ -424,7 +612,7 @@ class BOEngine(_EngineBase):
             return self._state._replace(params=params0)
         m = self.m
         L = jnp.zeros((m, P, P), jnp.float32)
-        V = jnp.zeros((m, P, self.N), jnp.float32)
+        V = jnp.zeros((self._nc, m, P, self._C), jnp.float32)
         ref = params0 if self._state is None else self._state.params_ref
         return EngineState(params0, ref, L, V)
 
@@ -435,9 +623,9 @@ class BOEngine(_EngineBase):
         if self._state is None or self._last_batch is None:
             raise RuntimeError("no incremental state yet")
         rows_pad, y_pad, mask = self._last_batch
-        x = self.pool[rows_pad] + 10.0 * jnp.asarray(mask)[:, None]
-        L_full, _ = _refactor(self._state.params_ref, x,
-                              jnp.asarray(mask), self.pool)
+        pool_flat = self._pool_c.reshape(self._N_pad, self.d)
+        x = pool_flat[rows_pad] + 10.0 * jnp.asarray(mask)[:, None]
+        L_full = _chol_refactor(self._state.params_ref, x, jnp.asarray(mask))
         return float(jnp.max(jnp.abs(self._state.L - L_full)))
 
 
@@ -450,6 +638,15 @@ class BatchedBOEngine(_EngineBase):
     so the incremental path costs two dispatches per round (fit+drift, then
     update-or-refactor+select) instead of one.
 
+    ``pool_chunk`` streams the pool axis exactly as in :class:`BOEngine`
+    (every scenario shares the chunk grid). ``mesh`` shards the scenario
+    axis over devices with ``shard_map``: scenarios are embarrassingly
+    parallel, so each device runs its scenario group's vmapped round with no
+    collectives and the per-round host sync is the fleet-wide drift maximum
+    plus one gather of the [S] picks. ``S`` must divide evenly over the mesh
+    axis (``mesh_axis``, default: the mesh's first axis); sharding requires
+    ``incremental=True``.
+
     The exact path (``incremental=False``) reproduces the historical fleet
     rounds call-for-call: ``pad_training`` → ``fit_gp_batch`` →
     ``imoo_scores_batch`` → host-side masking and per-scenario argmax.
@@ -461,7 +658,8 @@ class BatchedBOEngine(_EngineBase):
                  warm_start: bool | None = None, gp_steps: int = 150,
                  warm_steps: int | None = None, drift_tol: float = 1.0,
                  bucket: int = PAD_BUCKET, s_frontiers: int = 10,
-                 weights=None):
+                 weights=None, pool_chunk: int | str | None = None,
+                 mesh=None, mesh_axis: str | None = None):
         self.pool = jnp.asarray(pool_icd, jnp.float32)      # [S, N, d], once
         self.S, self.N, self.d = self.pool.shape
         # weights: [S, m] per-scenario acquisition weights or None (None must
@@ -470,6 +668,23 @@ class BatchedBOEngine(_EngineBase):
                         gp_steps=gp_steps, warm_steps=warm_steps,
                         drift_tol=drift_tol, bucket=bucket,
                         s_frontiers=s_frontiers, weights=weights)
+        self._setup_chunks(pool_chunk)
+
+        self.mesh = mesh
+        self.mesh_axis = None
+        self._shard_cache: dict = {}
+        if mesh is not None:
+            if not self.incremental:
+                raise ValueError(
+                    "mesh sharding requires incremental=True: the exact "
+                    "historical path is host-driven per round")
+            self.mesh_axis = mesh_axis or mesh.axis_names[0]
+            ndev = dict(zip(mesh.axis_names,
+                            mesh.devices.shape))[self.mesh_axis]
+            if self.S % ndev:
+                raise ValueError(
+                    f"fleet size S={self.S} must divide evenly over the "
+                    f"{ndev} devices of mesh axis {self.mesh_axis!r}")
 
         self._rows: list[list[int]] = [[] for _ in range(self.S)]
         self._ys: list[np.ndarray | None] = [None] * self.S
@@ -484,6 +699,23 @@ class BatchedBOEngine(_EngineBase):
         if self._ys[0] is None:
             raise RuntimeError("engine has no observations yet")
         return self._ys[0].shape[1]
+
+    def _dispatch(self, name: str, impl, jitted, statics: dict, *args):
+        """Run a batched round stage — plainly jitted, or wrapped in
+        ``shard_map`` over the scenario axis when a mesh is configured.
+        Every argument and result carries a leading [S] dim, so a single
+        ``PartitionSpec(mesh_axis)`` prefix shards the whole call."""
+        if self.mesh is None:
+            return jitted(*args, **statics)
+        key = (name, tuple(sorted(statics.items())))
+        fn = self._shard_cache.get(key)
+        if fn is None:
+            spec = PartitionSpec(self.mesh_axis)
+            fn = jax.jit(shard_map(
+                functools.partial(impl, **statics), mesh=self.mesh,
+                in_specs=spec, out_specs=spec, check_rep=False))
+            self._shard_cache[key] = fn
+        return fn(*args)
 
     # ------------------------------------------------------------- observe
     def observe(self, rows_per_scenario: Sequence, ys_per_scenario: Sequence
@@ -570,27 +802,32 @@ class BatchedBOEngine(_EngineBase):
             _default_params(self.m, self.d)) if cold else self._state.params)
         state = self._alloc_state(params0, P, first or grew)
 
-        params, drift, x, yn, y_mean, y_std = _phase1_batch(
-            state.params, state.params_ref, self.pool,
-            jnp.asarray(rows_pad), jnp.asarray(y_pad), jnp.asarray(mask),
-            steps=steps)
+        pool_flat = self._pool_c.reshape(self.S, self._N_pad, self.d)
+        params, drift, x, yn, y_mean, y_std = self._dispatch(
+            "phase1", _phase1_batch_impl, _phase1_batch,
+            {"steps": steps}, state.params, state.params_ref, pool_flat,
+            jnp.asarray(rows_pad), jnp.asarray(y_pad), jnp.asarray(mask))
         max_drift = float(jnp.max(drift))
         s0 = 0 if (first or grew) else \
             (self._n_at_last_select // self.bucket) * self.bucket
         do_ref = first or grew or s0 <= 0 or max_drift > self.drift_tol
         if do_ref:
-            L, V, picks = _refactor_select_batch(
-                params, x, jnp.asarray(mask), self.pool, yn, y_mean, y_std,
-                jnp.asarray(sub), self._eval_mask, jnp.asarray(keys), weights,
-                s=self.s_frontiers)
+            L, V, picks = self._dispatch(
+                "refactor_select", _refactor_select_batch_impl,
+                _refactor_select_batch, {"s": self.s_frontiers},
+                params, x, jnp.asarray(mask), self._pool_c, self._base, yn,
+                y_mean, y_std, jnp.asarray(sub), self._evalm_chunks(),
+                jnp.asarray(keys), weights)
             params_ref = params
             self.stats.refactors += 1
         else:
-            L, V, picks = _update_select_batch(
+            L, V, picks = self._dispatch(
+                "update_select", _update_select_batch_impl,
+                _update_select_batch, {"s": self.s_frontiers, "s0": s0},
                 state.params_ref, state.L, state.V, x, jnp.asarray(mask),
-                self.pool, yn, y_mean, y_std, jnp.asarray(sub),
-                self._eval_mask, jnp.asarray(keys), weights,
-                s=self.s_frontiers, s0=s0)
+                self._pool_c, self._base, yn, y_mean, y_std,
+                jnp.asarray(sub), self._evalm_chunks(), jnp.asarray(keys),
+                weights)
             params_ref = state.params_ref
             self.stats.block_updates += 1
 
@@ -607,6 +844,6 @@ class BatchedBOEngine(_EngineBase):
             return self._state._replace(params=params0)
         m = self.m
         L = jnp.zeros((self.S, m, P, P), jnp.float32)
-        V = jnp.zeros((self.S, m, P, self.N), jnp.float32)
+        V = jnp.zeros((self.S, self._nc, m, P, self._C), jnp.float32)
         ref = params0 if self._state is None else self._state.params_ref
         return EngineState(params0, ref, L, V)

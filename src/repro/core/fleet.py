@@ -230,6 +230,9 @@ def fleet_tuner(
     warm_start: bool | None = None,
     warm_steps: int | None = None,
     drift_tol: float = 1.0,
+    pool_chunk: int | str | None = None,
+    mesh=None,
+    mesh_axis: str | None = None,
     verbose: bool = False,
 ) -> FleetResult:
     """Explore every scenario of a fleet over the SAME candidate pool.
@@ -247,6 +250,14 @@ def fleet_tuner(
     enables warm-started fits, rank-k Cholesky block updates, cached pool
     covariances and device-side selection across the whole fleet, with the
     refactor-vs-update decision taken fleet-wide.
+
+    ``pool_chunk`` (int | ``"auto"``) streams the engine's O(N) pool state
+    in column chunks (huge-pool regime — identical selections at any chunk
+    size); ``mesh`` (a ``jax.sharding.Mesh``) shards the scenario axis over
+    devices with ``shard_map`` — one scenario group per device, the
+    per-round host sync fused into the fleet-wide drift max plus one gather
+    of the [S] picks. Both require ``incremental=True``; ``S`` must divide
+    evenly over the mesh axis. See ``docs/scaling.md``.
     """
     t0 = time.time()
     scenarios = list(scenarios)
@@ -300,7 +311,9 @@ def fleet_tuner(
     engine = BatchedBOEngine(pool_icd_stack, incremental=incremental,
                              warm_start=warm_start, gp_steps=gp_steps,
                              warm_steps=warm_steps, drift_tol=drift_tol,
-                             s_frontiers=s_frontiers, weights=weights)
+                             s_frontiers=s_frontiers, weights=weights,
+                             pool_chunk=pool_chunk, mesh=mesh,
+                             mesh_axis=mesh_axis)
     engine.observe([st.evaluated for st in states], [st.y for st in states])
     for it in range(T):
         subs, keys_acq = [], []

@@ -15,6 +15,7 @@ median-heuristic bandwidth. Recorded in DESIGN.md §1 fidelity notes.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +23,16 @@ import numpy as np
 
 from .space import DesignSpace
 
-__all__ = ["soc_init", "ted_select", "transform_to_icd", "median_bandwidth"]
+__all__ = ["soc_init", "ted_select", "transform_to_icd", "median_bandwidth",
+           "TED_MAX_POOL"]
+
+#: Default TED candidate cap. The greedy TED loop is O(b·N²) time and O(N²)
+#: memory (the deflated kernel matrix), which is fine at the paper's 2500-pool
+#: scale but impossible at the 10⁵–10⁶ pools the chunked BO engine supports
+#: (see docs/scaling.md). Above the cap, ``ted_select`` runs on an
+#: even-stride subsample and maps the selection back; pools at or below the
+#: cap take the historical path bit-for-bit.
+TED_MAX_POOL = 4096
 
 
 def transform_to_icd(space: DesignSpace, idx: jnp.ndarray, v: np.ndarray) -> jnp.ndarray:
@@ -88,9 +98,35 @@ def _ted_loop(K: jnp.ndarray, b: int, mu: float) -> jnp.ndarray:
 
 def ted_select(x: jnp.ndarray, b: int, mu: float = 0.1,
                bandwidth: float | None = None,
-               use_kernel: bool = False) -> np.ndarray:
-    """Select ``b`` maximally informative rows of ``x`` [N, d] (TED)."""
-    d2 = pairwise_sqdist(x, x, use_kernel=use_kernel)
+               use_kernel: bool = False,
+               max_pool: int | None = TED_MAX_POOL) -> np.ndarray:
+    """Select ``b`` maximally informative rows of ``x`` [N, d] (TED).
+
+    ``max_pool`` caps the O(N²) greedy loop: above it, selection runs on an
+    even-stride subsample of ``max_pool`` rows (deterministic — no RNG
+    plumbing, and an even stride of a uniformly drawn pool is itself
+    uniform) and the chosen indices are mapped back to the full pool.
+    ``max_pool=None`` opts out; the kernel build then streams through
+    ``pairdist_chunked`` so at least the pairwise temporaries stay bounded
+    (the [N, N] kernel matrix itself is unavoidable for the downdate loop).
+    """
+    N = x.shape[0]
+    if max_pool is not None and N > max_pool:
+        warnings.warn(
+            f"ted_select: pool of {N} exceeds max_pool={max_pool}; TED init "
+            "runs on an even-stride subsample (selection differs from the "
+            "uncapped O(N²) run — pass max_pool=None to opt out)",
+            stacklevel=2)
+        sel = (np.arange(max_pool, dtype=np.int64) * N) // max_pool
+        rows = ted_select(x[jnp.asarray(sel)], b, mu, bandwidth=bandwidth,
+                          use_kernel=use_kernel, max_pool=None)
+        return np.asarray(sel[rows])
+    if N > TED_MAX_POOL and not use_kernel:
+        from repro.kernels import backend as _backend
+
+        d2 = _backend.pairdist_chunked(x, x, chunk=TED_MAX_POOL)
+    else:
+        d2 = pairwise_sqdist(x, x, use_kernel=use_kernel)
     if bandwidth is None:
         bandwidth = _median_bandwidth_from_sqdist(d2)  # reuse, don't recompute
     K = jnp.exp(-d2 / (2.0 * bandwidth**2 + 1e-12))
@@ -99,15 +135,20 @@ def ted_select(x: jnp.ndarray, b: int, mu: float = 0.1,
 
 def soc_init(space: DesignSpace, pool_idx: np.ndarray, v: np.ndarray,
              v_th: float, b: int, mu: float = 0.1,
-             use_kernel: bool = False) -> tuple[np.ndarray, DesignSpace, jnp.ndarray]:
+             use_kernel: bool = False,
+             ted_pool: int | None = TED_MAX_POOL
+             ) -> tuple[np.ndarray, DesignSpace, jnp.ndarray]:
     """Full Algorithm 2 over a candidate pool.
 
     Returns ``(init_rows, pruned_space, pool_icd)`` where ``init_rows`` indexes
     into ``pool_idx`` and ``pool_icd`` is the whole pool mapped to ICD space
-    (reused by the tuner as the GP feature matrix).
+    (reused by the tuner as the GP feature matrix). ``ted_pool`` caps the
+    O(N²) TED selection on huge pools (see :func:`ted_select`); the ICD
+    transform itself is elementwise and scales to 10⁶ rows unchanged.
     """
     pruned = space.prune(np.asarray(v), v_th)  # line 1
     pool_pruned = pruned.apply_pins(jnp.asarray(pool_idx))
     pool_icd = transform_to_icd(space, pool_pruned, v)  # line 2
-    rows = ted_select(pool_icd, b=b, mu=mu, use_kernel=use_kernel)  # lines 3-8
+    rows = ted_select(pool_icd, b=b, mu=mu, use_kernel=use_kernel,
+                      max_pool=ted_pool)  # lines 3-8
     return rows, pruned, pool_icd

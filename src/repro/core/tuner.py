@@ -131,6 +131,7 @@ def soc_tuner(
     warm_start: bool | None = None,
     warm_steps: int | None = None,
     drift_tol: float = 1.0,
+    pool_chunk: int | str | None = None,
     verbose: bool = False,
 ) -> TunerResult:
     """Run SoC-Tuner over ``pool_idx`` [N, d] candidate designs.
@@ -151,6 +152,10 @@ def soc_tuner(
     ``incremental``) plumbs the previous round's ``GPParams`` into ``fit_gp``
     even on the from-scratch path; ``warm_steps``/``drift_tol`` tune the
     incremental engine's fit schedule and refactorization policy.
+    ``pool_chunk`` (int | ``"auto"``; requires ``incremental=True``) streams
+    the engine's O(N) pool state in column chunks so ``n_pool`` can grow to
+    10⁵–10⁶ candidates — identical selections at any chunk size; see
+    ``docs/scaling.md``.
     """
     t0 = time.time()
     key = jax.random.PRNGKey(0) if key is None else key
@@ -199,7 +204,8 @@ def soc_tuner(
     engine = BOEngine(pool_icd, incremental=incremental,
                       warm_start=warm_start, gp_steps=gp_steps,
                       warm_steps=warm_steps, drift_tol=drift_tol,
-                      s_frontiers=s_frontiers, weights=w)
+                      s_frontiers=s_frontiers, weights=w,
+                      pool_chunk=pool_chunk)
     engine.observe(evaluated, y)
     for it in range(T):
         key, k_fit, k_acq, k_sub = jax.random.split(key, 4)

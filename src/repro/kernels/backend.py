@@ -33,10 +33,16 @@ import jax.numpy as jnp
 from .common import pad_to, use_interpret
 from .pairdist.kernel import LANE, TILE_I, TILE_J, pairdist as _raw_pairdist
 
-__all__ = ["pairdist_auto", "resolve_backend", "sqdist_xla", "rbf_xla"]
+__all__ = ["pairdist_auto", "pairdist_chunked", "auto_chunk",
+           "resolve_backend", "sqdist_xla", "rbf_xla"]
 
 _ENV_VAR = "REPRO_PAIRDIST_BACKEND"
 _BACKENDS = ("auto", "platform", "pallas", "xla")
+
+#: default streaming budget for :func:`auto_chunk` (MB of f32 working set
+#: per column block) — small enough to stay cache-resident on a CPU host,
+#: large enough that per-chunk dispatch overhead is negligible.
+DEFAULT_CHUNK_BUDGET_MB = 64
 
 
 def resolve_backend(backend: str = "auto", n: int | None = None,
@@ -105,3 +111,45 @@ def pairdist_auto(x: jnp.ndarray, y: jnp.ndarray, *,
             return sqdist_xla(x, y)
         return rbf_xla(x, y, bandwidth)
     return _pallas_padded(x, y, None if bandwidth is None else float(bandwidth))
+
+
+def auto_chunk(n: int, *, bytes_per_col: int = 4 * 3 * 256,
+               budget_mb: int = DEFAULT_CHUNK_BUDGET_MB,
+               floor: int = 2048) -> int:
+    """Column-chunk size for streaming an O(n)-wide pool axis under a memory
+    budget.
+
+    ``bytes_per_col`` is the caller's per-candidate working set — the default
+    models one column of the BO engine's V cache (``m = 3`` objectives ×
+    ``P = 256`` padded training rows × f32). The result is clamped to
+    ``[min(floor, n), n]`` so tiny pools stay single-chunk and huge pools
+    never drop below a dispatch-amortizing block size.
+    """
+    if n < 1:
+        raise ValueError(f"auto_chunk: n must be >= 1, got {n}")
+    c = (budget_mb << 20) // max(bytes_per_col, 1)
+    return int(min(n, max(floor, c)))
+
+
+def pairdist_chunked(x: jnp.ndarray, y: jnp.ndarray, *, chunk: int,
+                     bandwidth: float | None = None, backend: str = "auto",
+                     differentiable: bool = False) -> jnp.ndarray:
+    """:func:`pairdist_auto` assembled from ``[N, chunk]`` column blocks.
+
+    Same values as the monolithic call — column blocks of the XLA form are
+    bitwise-stable under chunking (pinned by ``tests/test_pool_scaling.py``)
+    — but the pairwise temporaries are bounded by one block, so callers that
+    need the full matrix of a very wide ``y`` (e.g. the TED kernel build on
+    an uncapped pool) don't materialize intermediate [N, M] products all at
+    once.
+    """
+    if chunk < 1:
+        raise ValueError(f"pairdist_chunked: chunk must be >= 1, got {chunk}")
+    m = y.shape[0]
+    if chunk >= m:
+        return pairdist_auto(x, y, bandwidth=bandwidth, backend=backend,
+                             differentiable=differentiable)
+    blocks = [pairdist_auto(x, y[j:j + chunk], bandwidth=bandwidth,
+                            backend=backend, differentiable=differentiable)
+              for j in range(0, m, chunk)]
+    return jnp.concatenate(blocks, axis=1)

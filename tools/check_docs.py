@@ -1,0 +1,137 @@
+"""Docs health check (the CI docs job).
+
+1. **Intra-repo links**: every relative markdown link in ``README.md`` and
+   ``docs/*.md`` must point at a file that exists (anchors are stripped;
+   ``http(s)://`` / ``mailto:`` links are skipped).
+2. **Usage examples**: the RST ``::`` literal blocks in
+   ``src/repro/core/__init__.py``'s docstring (and, as a syntax-only pass,
+   fenced ``python`` blocks in the markdown docs) must compile, and every
+   ``from repro.core import ...`` / ``from repro.soc import ...`` name they
+   reference must actually exist — doctest-style drift detection without
+   paying for a full BO run. ``--exec`` additionally executes the core
+   ``__init__`` examples end to end.
+
+Run from the repo root::
+
+    PYTHONPATH=src python tools/check_docs.py [--exec]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import importlib
+import re
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+MD_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+CORE_INIT = ROOT / "src" / "repro" / "core" / "__init__.py"
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+_IMPORT = re.compile(r"^from\s+(repro[\w.]*)\s+import\s+(.+)$", re.MULTILINE)
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in MD_FILES:
+        rel = md.relative_to(ROOT)
+        for target in _LINK.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists():
+                errors.append(f"{rel}: broken link -> {target}")
+    return errors
+
+
+def _rst_literal_blocks(docstring: str) -> list[str]:
+    """Extract the indented literal blocks that follow ``::`` lines."""
+    blocks, lines, i = [], docstring.splitlines(), 0
+    while i < len(lines):
+        if lines[i].rstrip().endswith("::"):
+            i += 1
+            while i < len(lines) and not lines[i].strip():
+                i += 1
+            block = []
+            while i < len(lines) and (not lines[i].strip()
+                                      or lines[i].startswith("    ")):
+                block.append(lines[i])
+                i += 1
+            if block:
+                blocks.append(textwrap.dedent("\n".join(block)))
+        else:
+            i += 1
+    return blocks
+
+
+def check_examples(execute: bool) -> list[str]:
+    errors = []
+    tree = ast.parse(CORE_INIT.read_text())
+    doc = ast.get_docstring(tree) or ""
+    blocks = _rst_literal_blocks(doc)
+    if not blocks:
+        return [f"{CORE_INIT.relative_to(ROOT)}: no usage examples found "
+                "in the module docstring"]
+    ns: dict = {}
+    exec_ok = True  # blocks share one namespace, so a failed exec poisons
+    for bi, block in enumerate(blocks):  # only the blocks AFTER it
+        label = f"core/__init__.py example #{bi + 1}"
+        block_errors: list[str] = []
+        try:
+            code = compile(block, label, "exec")
+        except SyntaxError as e:
+            errors.append(f"{label}: does not compile: {e}")
+            continue
+        for mod_name, names in _IMPORT.findall(block):
+            try:
+                mod = importlib.import_module(mod_name)
+            except ImportError as e:
+                block_errors.append(f"{label}: import {mod_name} failed: {e}")
+                continue
+            for name in (n.strip() for n in names.split(",")):
+                if name and not hasattr(mod, name):
+                    block_errors.append(
+                        f"{label}: {mod_name} has no attribute {name!r}")
+        errors.extend(block_errors)
+        if execute and exec_ok and not block_errors:
+            try:
+                exec(code, ns)
+            except Exception as e:
+                errors.append(f"{label}: execution failed: {e!r}")
+                exec_ok = False
+
+    # markdown fences: syntax-only (many are illustrative fragments)
+    for md in MD_FILES:
+        for fi, fence in enumerate(_FENCE.findall(md.read_text())):
+            label = f"{md.relative_to(ROOT)} fence #{fi + 1}"
+            try:
+                compile(fence, label, "exec")
+            except SyntaxError as e:
+                errors.append(f"{label}: does not compile: {e}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--exec", action="store_true", dest="execute",
+                    help="also execute the core __init__ usage examples "
+                         "(runs a small BO loop; ~a minute)")
+    a = ap.parse_args()
+    errors = check_links() + check_examples(a.execute)
+    for e in errors:
+        print(f"FAIL {e}")
+    n_md = len(MD_FILES)
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s) across {n_md} files")
+        return 1
+    print(f"check_docs: OK ({n_md} markdown files, links + examples clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
