@@ -24,6 +24,14 @@ subprocesses so each size reports its own honest peak memory::
 
 Pool mode engages automatically at ``--n-pool`` >= 20000 (force it lower
 with ``--pool-bench``).
+
+**ADRS parity soak** (the evidence gate for flipping ``incremental=True`` to
+the default — ROADMAP): ``--soak wl1,wl2,...`` runs exact AND incremental
+end-to-end for every (workload × seed) cell, records final ADRS per path,
+the gap, and the symmetric front cross-ADRS into ``BENCH_soak.json``::
+
+    PYTHONPATH=src python -m benchmarks.engine_bench \\
+        --soak resnet50,mobilenet,transformer --soak-seeds 3 --n-pool 400
 """
 from __future__ import annotations
 
@@ -158,10 +166,71 @@ def _pool_main(a) -> None:
               f"updates)")
     # no top-level config block: points merged across runs carry their own
     out = {"points": points}
-    os.makedirs(os.path.dirname(a.pool_out), exist_ok=True)
+    os.makedirs(os.path.dirname(os.path.abspath(a.pool_out)), exist_ok=True)
     with open(a.pool_out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"[engine-bench] {len(points)} pool point(s) -> {a.pool_out}")
+
+
+def _soak_main(a) -> None:
+    """Exact-vs-incremental final-ADRS parity over workloads × seeds."""
+    workloads = [w.strip() for w in a.soak.split(",") if w.strip()]
+    points = []
+    for wl in workloads:
+        bench = make_bench(wl, n_pool=a.n_pool, seed=0)  # pool seed pinned
+        for seed in range(a.soak_seeds):
+            kw = dict(T=a.T, n=a.n, b=a.b, gp_steps=a.gp_steps, seed=seed,
+                      warm_steps=a.warm_steps, drift_tol=a.drift_tol)
+            res_x, exact = _run(bench, incremental=False, **kw)
+            res_i, incr = _run(bench, incremental=True, **kw)
+            rec = {
+                "workload": wl, "seed": seed,
+                "exact_adrs": exact["final_adrs"],
+                "incremental_adrs": incr["final_adrs"],
+                "adrs_gap": incr["final_adrs"] - exact["final_adrs"],
+                "front_cross_adrs": {
+                    "exact_ref_vs_incremental": float(adrs(res_x.pareto_y,
+                                                           res_i.pareto_y)),
+                    "incremental_ref_vs_exact": float(adrs(res_i.pareto_y,
+                                                           res_x.pareto_y)),
+                },
+                "speedup_wall": exact["wall_s"] / incr["wall_s"],
+                "refactors": incr["refactors"],
+                "block_updates": incr["block_updates"],
+            }
+            points.append(rec)
+            print(f"[engine-bench] soak {wl} seed {seed}: "
+                  f"adrs exact {rec['exact_adrs']:.4f} vs incr "
+                  f"{rec['incremental_adrs']:.4f} (gap "
+                  f"{rec['adrs_gap']:+.4f}), {rec['speedup_wall']:.1f}x wall")
+    gaps = np.asarray([r["adrs_gap"] for r in points])
+    out = {
+        "config": {"workloads": workloads, "seeds": a.soak_seeds,
+                   "n_pool": a.n_pool, "T": a.T, "n": a.n, "b": a.b,
+                   "gp_steps": a.gp_steps, "warm_steps": a.warm_steps,
+                   "drift_tol": a.drift_tol,
+                   "backend": jax.default_backend()},
+        "points": points,
+        "summary": {
+            "cells": len(points),
+            "mean_adrs_gap": float(gaps.mean()),
+            "max_adrs_gap": float(gaps.max()),
+            # "not worse": ties count for the incremental path (identical
+            # fronts give an exact 0.0 gap)
+            "incremental_not_worse": int((gaps <= 0).sum()),
+            "mean_speedup_wall": float(np.mean(
+                [r["speedup_wall"] for r in points])),
+        },
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(a.soak_out)), exist_ok=True)
+    with open(a.soak_out, "w") as f:
+        json.dump(out, f, indent=2)
+    s = out["summary"]
+    print(f"[engine-bench] soak: {s['cells']} cells, mean ADRS gap "
+          f"{s['mean_adrs_gap']:+.4f} (max {s['max_adrs_gap']:+.4f}), "
+          f"incremental not-worse in "
+          f"{s['incremental_not_worse']}/{s['cells']}, "
+          f"mean {s['mean_speedup_wall']:.1f}x wall -> {a.soak_out}")
 
 
 def main() -> None:
@@ -188,10 +257,20 @@ def main() -> None:
     p.add_argument("--pool-out",
                    default=os.path.join(OUT_DIR, "BENCH_pool.json"))
     p.add_argument("--point-out", default=None, help=argparse.SUPPRESS)
+    p.add_argument("--soak", default=None,
+                   help="comma-separated workloads: run the exact-vs-"
+                        "incremental ADRS parity soak over --soak-seeds "
+                        "seeds each")
+    p.add_argument("--soak-seeds", type=int, default=3)
+    p.add_argument("--soak-out",
+                   default=os.path.join(OUT_DIR, "BENCH_soak.json"))
     a = p.parse_args()
     if a.pool_chunk == "none":
         a.pool_chunk = None
 
+    if a.soak:
+        _soak_main(a)
+        return
     if a.pool_sweep or a.pool_bench or a.n_pool >= POOL_MODE_MIN:
         _pool_main(a)
         return
@@ -230,7 +309,7 @@ def main() -> None:
                                                    res_x.pareto_y)),
         },
     }
-    os.makedirs(os.path.dirname(a.out), exist_ok=True)
+    os.makedirs(os.path.dirname(os.path.abspath(a.out)), exist_ok=True)
     with open(a.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"[engine-bench] speedup {out['speedup_wall']:.2f}x wall, "

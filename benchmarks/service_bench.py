@@ -1,0 +1,120 @@
+"""Service concurrency benchmark: q-batch workers vs the sequential round.
+
+The exploration service exists because the real VLSI flow costs hours per
+design point; this benchmark reproduces that regime with ``DelayedFlow`` (a
+fixed per-call sleep on top of the surrogate) and measures the wall-clock
+effect of running q concurrent mock-flow workers against the one-at-a-time
+baseline at the SAME evaluation budget::
+
+    PYTHONPATH=src python -m benchmarks.service_bench \\
+        --n-pool 1024 --T 40 --delay 3.0 --qs 1,4
+
+Emits ``results/benchmarks/BENCH_service.json``: per-q wall/BO-phase wall,
+engine + pool stats, and the speedup of each q against q=1 (the ISSUE 4
+acceptance gate is >= 3x at q=4, T=40, n_pool=1024). ``T`` counts BO-phase
+flow evaluations for every q — see ``repro.service.runner``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from .common import OUT_DIR, make_bench
+from repro.soc import DelayedFlow
+
+
+def run_point(a, q: int) -> dict:
+    from repro.service import service_tuner
+
+    bench = make_bench(a.workload, n_pool=a.n_pool, seed=a.seed,
+                       with_ref=False)
+    flow = DelayedFlow(bench.flow_factory(), a.delay)
+    t0 = time.time()
+    res = service_tuner(
+        bench.space, bench.pool, flow, workload=a.workload, T=a.T, q=q,
+        min_done=a.min_done if q > 1 else 1, executor=a.executor,
+        max_workers=q, n=a.n, b=a.b, gp_steps=a.gp_steps,
+        key=jax.random.PRNGKey(a.seed), bucket=a.bucket,
+        fantasy=a.fantasy)
+    wall = time.time() - t0
+    walls = [h["wall_s"] for h in res.history[1:]]
+    stats = dict(res.engine_stats)
+    service = stats.pop("service")
+    return {
+        "q": q,
+        "wall_s": wall,
+        "bo_wall_s": float(sum(walls)),
+        "evaluations": int(len(res.evaluated_rows)),
+        "bo_evaluations": a.T,
+        **stats,
+        "pool": service,
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--workload", default="resnet50")
+    p.add_argument("--n-pool", type=int, default=1024)
+    p.add_argument("--T", type=int, default=40,
+                   help="BO-phase evaluation budget (same for every q)")
+    p.add_argument("--qs", default="1,4",
+                   help="comma-separated q values; q=1 is the baseline")
+    p.add_argument("--delay", type=float, default=3.0,
+                   help="mock flow latency per call, seconds")
+    p.add_argument("--min-done", type=int, default=1,
+                   help="completions per refill for q>1 (1 = fully async)")
+    p.add_argument("--executor", default="process",
+                   choices=("process", "thread", "inline"))
+    p.add_argument("--fantasy", default="mean")
+    p.add_argument("--n", type=int, default=30)
+    p.add_argument("--b", type=int, default=20)
+    p.add_argument("--gp-steps", type=int, default=150)
+    p.add_argument("--bucket", type=int, default=256,
+                   help="engine pad bucket (one jit shape for the whole run)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out",
+                   default=os.path.join(OUT_DIR, "BENCH_service.json"))
+    a = p.parse_args()
+
+    qs = [int(x) for x in a.qs.split(",")]
+    points = []
+    for q in qs:
+        print(f"[service-bench] q={q} T={a.T} delay={a.delay}s "
+              f"({a.executor} executor) ...")
+        rec = run_point(a, q)
+        points.append(rec)
+        print(f"[service-bench]   wall {rec['wall_s']:.1f}s "
+              f"(BO phase {rec['bo_wall_s']:.1f}s), "
+              f"{rec['pool']['pool_dispatched']} dispatches, "
+              f"{rec['fantasy_steps']} fantasy steps")
+
+    base = next((r for r in points if r["q"] == 1), points[0])
+    out = {
+        "config": {"workload": a.workload, "n_pool": a.n_pool, "T": a.T,
+                   "delay_s": a.delay, "min_done": a.min_done,
+                   "executor": a.executor, "fantasy": a.fantasy, "n": a.n,
+                   "b": a.b, "gp_steps": a.gp_steps, "bucket": a.bucket,
+                   "seed": a.seed, "backend": jax.default_backend()},
+        "points": points,
+        "speedup_wall": {str(r["q"]): base["wall_s"] / r["wall_s"]
+                         for r in points},
+        "speedup_bo_wall": {str(r["q"]): base["bo_wall_s"] / r["bo_wall_s"]
+                            for r in points},
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(a.out)), exist_ok=True)
+    with open(a.out, "w") as f:
+        json.dump(out, f, indent=2)
+    for r in points:
+        if r["q"] != base["q"]:
+            print(f"[service-bench] q={r['q']}: "
+                  f"{out['speedup_wall'][str(r['q'])]:.2f}x wall speedup "
+                  f"vs q=1")
+    print(f"[service-bench] -> {a.out}")
+
+
+if __name__ == "__main__":
+    main()

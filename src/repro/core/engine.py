@@ -54,6 +54,35 @@ a device mesh with ``shard_map`` (scenarios are embarrassingly parallel —
 one scenario group per device, no collectives inside a round); the per-round
 host sync collapses to the fleet-wide drift maximum plus one gather of the
 [S] picks.
+
+Two service-facing extensions (``repro.service`` builds on both):
+
+* **q-batch fantasy selection** — :meth:`BOEngine.select_q` picks ``q``
+  candidates per round: after each pick it *imputes* the outcome (posterior
+  mean, or a constant liar) in standardized target space, pushes the fantasy
+  row through the same rank-1 trailing Cholesky + V-cache block update the
+  real rounds use, re-scores the pool and picks again — all device-resident
+  and pool-chunk-compatible. ``q=1`` (with no pending evaluations) delegates
+  to :meth:`BOEngine.select` verbatim, so it is bit-identical to today's
+  round by construction. In-flight evaluations of an *async* driver are
+  handed in as ``pending`` and fantasized before any new pick, which is what
+  lets a round start before all previous picks have returned. Fantasy rows
+  only ever live in the trailing ``[bucket-floor(n), P)`` region that the
+  next real round recomputes anyway, so fantasy state never leaks into real
+  posterior math.
+* **checkpoint/resume** — :meth:`BOEngine.state_dict` /
+  :meth:`BOEngine.load_state_dict` (and the batched twins) serialize the
+  complete engine state — train rows/targets, warm ``GPParams``, the
+  ``params_ref`` factorization snapshot, the Cholesky bucket ``L`` and
+  chunked ``V`` cache, pad bookkeeping, stats — as numpy arrays + scalars.
+  A restored engine continues the trajectory *bit-exactly* (same picks, same
+  refactor decisions); ``repro.service.checkpoint`` owns the on-disk format.
+
+Engine-state buffers are **donated** through the round dispatches
+(``jax.jit(..., donate_argnames=...)``): the update scan writes the new V
+cache into the old V's storage instead of holding both copies live, which is
+what keeps the transient footprint flat in the 10⁵–10⁶-candidate regime
+(measured in ``BENCH_pool.json``).
 """
 from __future__ import annotations
 
@@ -73,7 +102,17 @@ from .acquisition import imoo_scores, imoo_scores_batch, mes_information_gain
 from .gp import (JITTER, PAD_BUCKET, GPParams, _default_params, _fit, _kernel,
                  _standardize, fit_gp, fit_gp_batch, pad_training)
 
-__all__ = ["BOEngine", "BatchedBOEngine", "EngineStats"]
+__all__ = ["BOEngine", "BatchedBOEngine", "EngineStats", "FANTASY_MODES"]
+
+#: supported imputation rules for fantasy (q-batch / pending) selection:
+#: ``"mean"`` — posterior mean at the pick (kriging believer); ``"cl_min"`` /
+#: ``"cl_max"`` — constant liar at the worst / best observed target per
+#: objective (in the engine's negated, standardized target space, so
+#: ``cl_min`` is the pessimistic liar of the maximization problem).
+FANTASY_MODES = ("mean", "cl_min", "cl_max")
+
+#: version tag of the ``state_dict`` layout (bumped on incompatible change).
+ENGINE_STATE_FORMAT = 1
 
 
 @dataclasses.dataclass
@@ -84,10 +123,16 @@ class EngineStats:
     refactors: int = 0       # full O(P³) factorizations
     block_updates: int = 0   # rank-k trailing-block updates
     dispatches: int = 0      # top-level jitted program launches
+    fantasy_steps: int = 0   # rank-1 fantasy appends (q-batch / pending)
     last_drift: float = 0.0  # max |params − params_ref| at the last round
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EngineStats":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
 
 
 class EngineState(NamedTuple):
@@ -103,6 +148,17 @@ class EngineState(NamedTuple):
     params_ref: GPParams  # hyperparameters of the current factorization
     L: jnp.ndarray        # [m, P, P] Cholesky of K(params_ref) + noise
     V: jnp.ndarray        # [nc, m, P, C] L⁻¹ · K(train_pad, pool chunk)
+
+
+def _params_to_np(p: GPParams) -> dict:
+    return {"log_ls": np.asarray(p.log_ls), "log_var": np.asarray(p.log_var),
+            "log_noise": np.asarray(p.log_noise)}
+
+
+def _params_from_np(d: dict) -> GPParams:
+    return GPParams(jnp.asarray(d["log_ls"], jnp.float32),
+                    jnp.asarray(d["log_var"], jnp.float32),
+                    jnp.asarray(d["log_noise"], jnp.float32))
 
 
 def _drift(params: GPParams, params_ref: GPParams) -> jnp.ndarray:
@@ -274,12 +330,19 @@ def _select_chunks(params_ref: GPParams, L, V, x, yn, y_mean, y_std, pool_c,
     return nxt
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "s", "s0"))
+@functools.partial(jax.jit, static_argnames=("steps", "s", "s0", "select"),
+                   donate_argnames=("state",))
 def _round_seq(state: EngineState, rows_pad, y_pad, mask, pool_c, evalm_c,
                base, sub_rows, key, force_refactor, drift_tol, weights, *,
-               steps: int, s: int, s0: int):
+               steps: int, s: int, s0: int, select: bool = True):
     """One full BO round as a single XLA dispatch: warm fit → drift check →
-    block-update-or-refactor (``lax.cond``) → chunk-scanned score + argmax."""
+    block-update-or-refactor (``lax.cond``) → chunk-scanned score + argmax.
+
+    ``state`` is donated: the update scan writes the new L/V into the old
+    buffers' storage, so the engine never holds two V caches live.
+    ``select=False`` skips the scoring scan and returns ``nxt = -1`` — the
+    q-batch path uses it when in-flight evaluations must be fantasized
+    before the round's first real pick is taken."""
     nc, C, d = pool_c.shape
     pool_flat = pool_c.reshape(nc * C, d)
     x = pool_flat[rows_pad] + 10.0 * mask[:, None]  # pad_training's x rule
@@ -312,9 +375,85 @@ def _round_seq(state: EngineState, rows_pad, y_pad, mask, pool_c, evalm_c,
             lambda: _v_chunk_block(params_ref, L, Vc_old, x, pc, s0))
 
     _, V = jax.lax.scan(vstep, None, (state.V, pool_c))
-    nxt = _select_chunks(params_ref, L, V, x, yn, y_mean, y_std, pool_c, base,
-                         sub_rows, evalm_c, key, weights, s=s)
+    if select:
+        nxt = _select_chunks(params_ref, L, V, x, yn, y_mean, y_std, pool_c,
+                             base, sub_rows, evalm_c, key, weights, s=s)
+    else:
+        nxt = jnp.asarray(-1, jnp.int32)
     return EngineState(params, params_ref, L, V), nxt, do_ref, drift
+
+
+# ------------------------------------------------------- fantasy (q-batch)
+def _liar_target(liar: str, mean_std, yn, mask):
+    """Imputed standardized target [m] for one fantasy row (see
+    ``FANTASY_MODES``; targets live in the engine's negated/standardized
+    space, so ``cl_min`` is the pessimistic liar of the maximization)."""
+    if liar == "mean":
+        return mean_std
+    pad = mask[:, None] > 0
+    if liar == "cl_min":
+        return jnp.min(jnp.where(pad, jnp.inf, yn), axis=0)
+    return jnp.max(jnp.where(pad, -jnp.inf, yn), axis=0)  # cl_max
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("s", "s0", "liar", "return_pick"),
+                   donate_argnames=("L", "V"))
+def _fantasy_step(params_ref: GPParams, L, V, rows_pad, yn, mask, pool_c,
+                  evalm_c, base, sub_rows, key, weights, y_mean, y_std, pick,
+                  pos, *, s: int, s0: int, liar: str, return_pick: bool):
+    """Append ONE fantasy observation and (optionally) re-score the pool.
+
+    The picked pool row replaces the pad row at position ``pos``: its target
+    is imputed under the *current* posterior (``_liar_target``), then L and
+    every V chunk are extended by the same rank-k trailing-block update a
+    real round uses (``s0`` = bucket-floored count of real rows, so every
+    fantasy row of the batch lives in the recomputed ``[s0, P)`` region and
+    one compiled program serves all q-1 steps — ``pos``/``pick`` are traced).
+    ``return_pick=False`` skips the O(N) scoring scan (used while fantasizing
+    pending in-flight evaluations that are not the last before a new pick).
+    L and V are donated — the fantasy chain reuses one set of buffers.
+    """
+    nc, C, d = pool_c.shape
+    pool_flat = pool_c.reshape(nc * C, d)
+    ci = pick // C
+    col = pick % C
+
+    # Imputed target under the CURRENT state — the same fixed-order
+    # accumulation the scoring path uses, so "impute the posterior mean"
+    # means exactly the mean that ranked this candidate.
+    beta = _train_beta(L, yn)                                    # [m, P]
+    Vc = jax.lax.dynamic_index_in_dim(V, ci, axis=0, keepdims=False)
+    Vcol = jax.lax.dynamic_index_in_dim(Vc, col, axis=2, keepdims=False)
+    P = Vcol.shape[1]
+    mean_std = jax.lax.fori_loop(
+        1, P, lambda p, acc: acc + beta[:, p] * Vcol[:, p],
+        beta[:, 0] * Vcol[:, 0])                                  # [m]
+    target = _liar_target(liar, mean_std, yn, mask)
+
+    rows2 = rows_pad.at[pos].set(pick)
+    mask2 = mask.at[pos].set(0.0)
+    yn2 = yn.at[pos].set(target)
+    x2 = pool_flat[rows2] + 10.0 * mask2[:, None]
+    if s0 <= 0:  # statically known: no reusable prefix (tiny first rounds)
+        L2 = _chol_refactor(params_ref, x2, mask2)
+        _, V2 = jax.lax.scan(
+            lambda _, pc: (None, _v_chunk_refactor(params_ref, L2, x2, pc)),
+            None, pool_c)
+    else:
+        L2 = _chol_block(params_ref, L, x2, mask2, s0)
+        _, V2 = jax.lax.scan(
+            lambda _, inp: (None, _v_chunk_block(params_ref, L2, inp[0], x2,
+                                                 inp[1], s0)),
+            None, (V, pool_c))
+    evalm2 = evalm_c.at[ci, col].set(True)
+    if return_pick:
+        nxt = _select_chunks(params_ref, L2, V2, x2, yn2, y_mean, y_std,
+                             pool_c, base, sub_rows, evalm2, key, weights,
+                             s=s)
+    else:
+        nxt = jnp.asarray(-1, jnp.int32)
+    return L2, V2, rows2, mask2, yn2, evalm2, nxt
 
 
 # --------------------------------------------------------------- fleet batch
@@ -366,8 +505,11 @@ def _update_select_batch_impl(params_ref, L, V, x, mask, pool_c, base, yn,
 _phase1_batch = jax.jit(_phase1_batch_impl, static_argnames=("steps",))
 _refactor_select_batch = jax.jit(_refactor_select_batch_impl,
                                  static_argnames=("s",))
+# L/V are donated: the batched block update writes into the old buckets'
+# storage (same no-second-V-copy property as the sequential _round_seq).
 _update_select_batch = jax.jit(_update_select_batch_impl,
-                               static_argnames=("s", "s0"))
+                               static_argnames=("s", "s0"),
+                               donate_argnames=("L", "V"))
 
 
 class _EngineBase:
@@ -450,6 +592,74 @@ class _EngineBase:
             em = jnp.concatenate(
                 [em, jnp.ones(em.shape[:-1] + (pad,), bool)], axis=-1)
         return em.reshape(em.shape[:-1] + (self._nc, self._C))
+
+    # -------------------------------------------- state (de)serialization
+    def _base_state_dict(self) -> dict:
+        d = {
+            "format": ENGINE_STATE_FORMAT,
+            "kind": type(self).__name__,
+            "incremental": self.incremental,
+            "bucket": self.bucket,
+            "pool_shape": list(self.pool.shape),
+            "P": self._P,
+            "n_at_last_select": self._n_at_last_select,
+            "stats": self.stats.as_dict(),
+        }
+        if self._state is not None:
+            d["state"] = {
+                "params": _params_to_np(self._state.params),
+                "params_ref": _params_to_np(self._state.params_ref),
+                "L": np.asarray(self._state.L),
+                "V": np.asarray(self._state.V),
+            }
+        if self._last_params is not None:
+            d["last_params"] = _params_to_np(self._last_params)
+        return d
+
+    def _load_base_state_dict(self, d: dict) -> None:
+        if d.get("format") != ENGINE_STATE_FORMAT:
+            raise ValueError(
+                f"engine snapshot format {d.get('format')!r} is not the "
+                f"supported format {ENGINE_STATE_FORMAT}")
+        if d.get("kind") != type(self).__name__:
+            raise ValueError(f"snapshot was taken from a {d.get('kind')!r}, "
+                             f"not a {type(self).__name__}")
+        for key in ("incremental", "bucket"):
+            if d.get(key) != getattr(self, key):
+                raise ValueError(
+                    f"snapshot {key}={d.get(key)!r} does not match this "
+                    f"engine's {key}={getattr(self, key)!r}")
+        if list(d.get("pool_shape", [])) != list(self.pool.shape):
+            raise ValueError(
+                f"snapshot pool shape {d.get('pool_shape')} does not match "
+                f"this engine's pool {list(self.pool.shape)} — resume must "
+                "use the identical candidate pool")
+        self._P = int(d["P"])
+        self._n_at_last_select = int(d["n_at_last_select"])
+        self.stats = EngineStats.from_dict(d["stats"])
+        if "state" in d:
+            st = d["state"]
+            V = np.asarray(st["V"])
+            # [nc, m, P, C] (sequential) or [S, nc, m, P, C] (batched): the
+            # chunk grid is part of the stored state, so a mismatched
+            # pool_chunk (e.g. "auto" resolving differently on this host)
+            # must fail here with a real message, not as a shape error
+            # inside the next round's jit.
+            if V.shape[-1] != self._C or V.shape[-4] != self._nc:
+                raise ValueError(
+                    f"snapshot V cache has chunk grid nc={V.shape[-4]}, "
+                    f"C={V.shape[-1]} but this engine resolved nc="
+                    f"{self._nc}, C={self._C} — resume with the pool_chunk "
+                    "the snapshot was taken with")
+            self._state = EngineState(
+                _params_from_np(st["params"]),
+                _params_from_np(st["params_ref"]),
+                jnp.asarray(st["L"], jnp.float32),
+                jnp.asarray(V, jnp.float32))
+        else:
+            self._state = None
+        self._last_params = (_params_from_np(d["last_params"])
+                             if "last_params" in d else None)
 
 
 # ============================================================== sequential
@@ -535,6 +745,101 @@ class BOEngine(_EngineBase):
             return self._select_incremental(key, sub_rows)
         return self._select_exact(key, sub_rows)
 
+    def select_q(self, key, q: int = 1, sub_rows=None, *,
+                 pending: Sequence[int] = (),
+                 fantasy: str = "mean") -> list[int]:
+        """Select ``q`` distinct candidates in one round via fantasy updates.
+
+        After the round's first pick, the pick's outcome is *imputed*
+        (``fantasy`` ∈ ``FANTASY_MODES``: posterior mean or a constant liar),
+        pushed through the rank-1 trailing Cholesky + V-cache block update,
+        the pool is re-scored and the next candidate picked — q picks for one
+        GP fit. ``pending`` lists pool rows whose real evaluations are still
+        in flight (an async driver's previous picks): they are fantasized
+        before any new pick, so a round never re-proposes or ignores them.
+
+        ``q=1`` with no ``pending`` delegates to :meth:`select` and is
+        therefore bit-identical to today's round. Fantasy rows only occupy
+        the trailing pad region the next real round recomputes, so no
+        fantasy value ever contaminates real posterior math.
+        """
+        pending = [int(r) for r in pending]
+        if q < 1:
+            raise ValueError(f"select_q: q must be >= 1, got {q}")
+        if fantasy not in FANTASY_MODES:
+            raise ValueError(f"select_q: fantasy must be one of "
+                             f"{FANTASY_MODES}, got {fantasy!r}")
+        if q == 1 and not pending:
+            return [self.select(key, sub_rows)]
+        if not self.incremental:
+            raise ValueError(
+                "q-batch / pending fantasy selection requires "
+                "incremental=True: fantasy appends reuse the incremental "
+                "engine's trailing Cholesky + V-cache updates")
+        if self._y is None or not self._rows:
+            raise RuntimeError("select_q() before observe(): nothing to fit")
+        n_fant = len(pending) + q - 1
+        if len(set(self._rows)) + len(pending) + q > self.N:
+            raise ValueError("select_q: pool has too few unevaluated rows "
+                             f"for q={q} with {len(pending)} pending")
+        keys = jax.random.split(key, 1 + n_fant)
+
+        # Round phase: warm fit + update-or-refactor (+ first pick when there
+        # is nothing pending). `reserve` provisions pad rows for the whole
+        # fantasy chain so no append can trigger bucket growth mid-round.
+        pick0 = self._select_incremental(keys[0], sub_rows, reserve=n_fant,
+                                         do_select=not pending)
+        n = self._n_at_last_select
+        state = self._state
+        rows_pad, y_pad, mask = self._last_batch
+        rows_pad = jnp.asarray(rows_pad)
+        mask_j = jnp.asarray(mask)
+        yn, y_mean, y_std = _standardize(jnp.asarray(y_pad), mask_j)
+        sub = (np.arange(self.N, dtype=np.int32) if sub_rows is None
+               else np.asarray(sub_rows, np.int32))
+        weights = (jnp.ones((self.m,), jnp.float32) if self.weights is None
+                   else self.weights)
+        s0 = (n // self.bucket) * self.bucket
+        L, V, evalm = state.L, state.V, self._evalm_chunks()
+
+        picks: list[int] = [] if pending else [int(pick0)]
+        to_append = list(pending)
+        ki, appended = 1, 0
+        try:
+            while len(picks) < q:
+                if not to_append:
+                    to_append.append(picks[-1])
+                row = to_append.pop(0)
+                need_pick = not to_append  # last append before a fresh pick
+                L, V, rows_pad, mask_j, yn, evalm, nxt = _fantasy_step(
+                    state.params_ref, L, V, rows_pad, yn, mask_j,
+                    self._pool_c, evalm, self._base, jnp.asarray(sub),
+                    keys[ki], weights, y_mean, y_std,
+                    jnp.asarray(row, jnp.int32),
+                    jnp.asarray(n + appended, jnp.int32),
+                    s=self.s_frontiers, s0=s0, liar=fantasy,
+                    return_pick=need_pick)
+                ki += 1
+                appended += 1
+                self.stats.fantasy_steps += 1
+                self.stats.dispatches += 1
+                if need_pick:
+                    picks.append(int(nxt))
+        except BaseException:
+            # The chain donated the live L/V buffers; a partial chain would
+            # leave self._state referencing deleted storage. Drop to a cold
+            # rebuild (observations are host-side, nothing is lost) so the
+            # engine stays usable — checkpointable, selectable — after the
+            # caller handles the error.
+            self._state = None
+            self._P = 0
+            raise
+        # Keeping the fantasy-updated L/V is sound: fantasy rows live in
+        # [s0, P), exactly the region the next round's block update (or
+        # refactor) recomputes — see the class docstring.
+        self._state = state._replace(L=L, V=V)
+        return picks
+
     def _select_exact(self, key, sub_rows) -> int:
         """The historical from-scratch round, call-for-call (bit-exact)."""
         rows = np.asarray(self._rows)
@@ -555,9 +860,16 @@ class BOEngine(_EngineBase):
         self._n_at_last_select = len(self._rows)
         return int(np.argmax(scores))
 
-    def _select_incremental(self, key, sub_rows) -> int:
+    def _select_incremental(self, key, sub_rows, *, reserve: int = 0,
+                            do_select: bool = True) -> int:
+        """One incremental round. ``reserve`` extra pad rows are provisioned
+        beyond the real training set so a following fantasy chain (q-batch /
+        pending) never triggers bucket growth mid-round; ``do_select=False``
+        runs the fit + factorization but skips the scoring scan (returns -1).
+        """
         n = len(self._rows)
-        P = n + (-n) % self.bucket
+        P = n + reserve
+        P = P + (-P) % self.bucket
         grew = P != self._P
         first = self._state is None
         rows_pad, y_pad, mask = self._padded_batch(self._rows, self._y, P)
@@ -576,7 +888,8 @@ class BOEngine(_EngineBase):
         state, nxt, did_ref, drift = _round_seq(
             state, rows_pad, y_pad, mask, self._pool_c, self._evalm_chunks(),
             self._base, jnp.asarray(sub), key, bool(first or grew),
-            self.drift_tol, weights, steps=steps, s=self.s_frontiers, s0=s0)
+            self.drift_tol, weights, steps=steps, s=self.s_frontiers, s0=s0,
+            select=do_select)
 
         self._state = state
         self._P = P
@@ -613,7 +926,10 @@ class BOEngine(_EngineBase):
         m = self.m
         L = jnp.zeros((m, P, P), jnp.float32)
         V = jnp.zeros((self._nc, m, P, self._C), jnp.float32)
-        ref = params0 if self._state is None else self._state.params_ref
+        # params_ref must not alias params: _round_seq donates the whole
+        # state, and XLA rejects donating one buffer twice.
+        ref = (jax.tree.map(lambda a: jnp.array(a, copy=True), params0)
+               if self._state is None else self._state.params_ref)
         return EngineState(params0, ref, L, V)
 
     def refactor_residual(self) -> float:
@@ -627,6 +943,39 @@ class BOEngine(_EngineBase):
         x = pool_flat[rows_pad] + 10.0 * jnp.asarray(mask)[:, None]
         L_full = _chol_refactor(self._state.params_ref, x, jnp.asarray(mask))
         return float(jnp.max(jnp.abs(self._state.L - L_full)))
+
+    # -------------------------------------------- state (de)serialization
+    def state_dict(self) -> dict:
+        """Complete engine snapshot — nested dict of numpy arrays + JSON-able
+        scalars. :meth:`load_state_dict` on a freshly constructed engine
+        (same pool, same knobs) restores it *bit-exactly*: the next
+        ``select``/``select_q`` reproduces the uninterrupted run's candidate.
+        ``repro.service.checkpoint`` owns the on-disk encoding."""
+        d = self._base_state_dict()
+        d["rows"] = np.asarray(self._rows, np.int64)
+        d["y"] = None if self._y is None else np.asarray(self._y)
+        if self._last_batch is not None:
+            rp, yp, mk = self._last_batch
+            d["last_batch"] = {"rows_pad": np.asarray(rp),
+                               "y_pad": np.asarray(yp),
+                               "mask": np.asarray(mk)}
+        return d
+
+    def load_state_dict(self, d: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot (validates format, engine
+        kind, bucket/incremental flags and pool shape)."""
+        self._load_base_state_dict(d)
+        self._rows = [int(r) for r in np.asarray(d["rows"]).reshape(-1)]
+        self._y = None if d.get("y") is None else np.asarray(d["y"], np.float32)
+        self._eval_mask = jnp.zeros((self.N,), bool)
+        if self._rows:
+            self._eval_mask = self._eval_mask.at[
+                np.asarray(self._rows)].set(True)
+        lb = d.get("last_batch")
+        self._last_batch = (None if lb is None else
+                            (np.asarray(lb["rows_pad"]),
+                             np.asarray(lb["y_pad"]),
+                             np.asarray(lb["mask"])))
 
 
 # ================================================================= batched
@@ -847,3 +1196,29 @@ class BatchedBOEngine(_EngineBase):
         V = jnp.zeros((self.S, self._nc, m, P, self._C), jnp.float32)
         ref = params0 if self._state is None else self._state.params_ref
         return EngineState(params0, ref, L, V)
+
+    # -------------------------------------------- state (de)serialization
+    def state_dict(self) -> dict:
+        """Batched twin of :meth:`BOEngine.state_dict` — per-scenario train
+        sets are ragged, so rows/targets are stored per scenario index."""
+        d = self._base_state_dict()
+        d["rows"] = {str(si): np.asarray(r, np.int64)
+                     for si, r in enumerate(self._rows)}
+        d["ys"] = {str(si): None if y is None else np.asarray(y)
+                   for si, y in enumerate(self._ys)}
+        return d
+
+    def load_state_dict(self, d: dict) -> None:
+        self._load_base_state_dict(d)
+        self._rows = [[int(r) for r in
+                       np.asarray(d["rows"][str(si)]).reshape(-1)]
+                      for si in range(self.S)]
+        self._ys = [None if d["ys"].get(str(si)) is None
+                    else np.asarray(d["ys"][str(si)], np.float32)
+                    for si in range(self.S)]
+        self._eval_mask = jnp.zeros((self.S, self.N), bool)
+        scat_s = [si for si, rows in enumerate(self._rows) for _ in rows]
+        scat_r = [r for rows in self._rows for r in rows]
+        if scat_r:
+            self._eval_mask = self._eval_mask.at[
+                np.asarray(scat_s), np.asarray(scat_r)].set(True)

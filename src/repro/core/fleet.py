@@ -82,10 +82,17 @@ class FlowEvalCache:
     count *requests*, ``evaluated`` counts design points actually pushed
     through the surrogate (== stored entries), ``flow_calls`` counts
     dispatches.
+
+    ``disk`` (a :class:`repro.service.flowcache.FlowDiskCache` or a root
+    path) backs the in-memory store with the content-addressed on-disk
+    cache: in-memory misses consult the disk before any dispatch
+    (``disk_hits`` counts how many flushes resolved that way) and every
+    computed result is written back atomically — so concurrent fleets,
+    service runs and restarts share one evaluation corpus.
     """
 
     def __init__(self, space: DesignSpace, pool_idx: np.ndarray,
-                 workloads: Sequence[str]):
+                 workloads: Sequence[str], disk=None):
         from repro.soc.workloads import get_workload
 
         self.space = space
@@ -94,8 +101,14 @@ class FlowEvalCache:
                        for w in dict.fromkeys(workloads)}
         self._store: dict[str, dict[int, np.ndarray]] = {
             w: {} for w in self.layers}
+        if disk is not None and not hasattr(disk, "get"):
+            from repro.service.flowcache import FlowDiskCache
+
+            disk = FlowDiskCache(disk)
+        self.disk = disk
         self.hits = 0
         self.misses = 0
+        self.disk_hits = 0
         self.flow_calls = 0
         self.evaluated = 0
 
@@ -108,9 +121,11 @@ class FlowEvalCache:
         return self.hits / max(self.requests, 1)
 
     def summary(self) -> str:
+        disk = (f", {self.disk_hits} disk hits" if self.disk is not None
+                else "")
         return (f"cache: {self.requests} requests, {self.hits} hits "
-                f"({100.0 * self.hit_rate:.1f}%), {self.evaluated} designs "
-                f"evaluated in {self.flow_calls} flow dispatches")
+                f"({100.0 * self.hit_rate:.1f}%){disk}, {self.evaluated} "
+                f"designs evaluated in {self.flow_calls} flow dispatches")
 
     # ------------------------------------------------------------------ eval
     def evaluate_many(self, reqs: list[tuple[str, np.ndarray]]
@@ -142,6 +157,22 @@ class FlowEvalCache:
         from repro.soc.model import soc_metrics, soc_metrics_multi
         from repro.soc.workloads import pad_workloads
 
+        if self.disk is not None and pending:
+            # Resolve what the shared on-disk corpus already knows before
+            # paying any dispatch; leftovers are written back after compute.
+            for wl in list(pending):
+                left = []
+                for r in pending[wl]:
+                    y = self.disk.get(wl, self.pool_idx[r])
+                    if y is None:
+                        left.append(r)
+                    else:
+                        self._store[wl][r] = np.asarray(y)
+                        self.disk_hits += 1
+                if left:
+                    pending[wl] = left
+                else:
+                    del pending[wl]
         if not pending:
             return
         self.flow_calls += 1
@@ -155,6 +186,8 @@ class FlowEvalCache:
                                        jnp.asarray(self.layers[wl], jnp.float32)))
             for r, yr in zip(rows, y):
                 self._store[wl][r] = yr
+                if self.disk is not None:
+                    self.disk.put(wl, self.pool_idx[r], yr)
             return
         # Fused path: pad rows to a common count and layers to a common depth,
         # then one vmapped dispatch covers every pending workload.
@@ -171,6 +204,8 @@ class FlowEvalCache:
         for wi, w in enumerate(names):
             for ri, r in enumerate(pending[w]):
                 self._store[w][r] = y[wi, ri]
+                if self.disk is not None:
+                    self.disk.put(w, self.pool_idx[r], y[wi, ri])
 
 
 @dataclasses.dataclass
@@ -233,6 +268,10 @@ def fleet_tuner(
     pool_chunk: int | str | None = None,
     mesh=None,
     mesh_axis: str | None = None,
+    disk_cache=None,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
     verbose: bool = False,
 ) -> FleetResult:
     """Explore every scenario of a fleet over the SAME candidate pool.
@@ -258,46 +297,100 @@ def fleet_tuner(
     per-round host sync fused into the fleet-wide drift max plus one gather
     of the [S] picks. Both require ``incremental=True``; ``S`` must divide
     evenly over the mesh axis. See ``docs/scaling.md``.
+
+    ``disk_cache`` (path or ``repro.service.flowcache.FlowDiskCache``) backs
+    the in-memory evaluation cache with the content-addressed on-disk store
+    shared across fleets, service runs and restarts. ``checkpoint_dir`` /
+    ``checkpoint_every`` / ``resume`` snapshot the full fleet state (batched
+    engine, per-scenario keys/history) each round and continue a killed run
+    bit-exactly — the resumed prologue is rebuilt from the checkpointed
+    importance vectors without re-paying any flow evaluation.
     """
     t0 = time.time()
     scenarios = list(scenarios)
     pool_idx = np.asarray(pool_idx)
     N = pool_idx.shape[0]
     reference_fronts = reference_fronts or {}
-    cache = FlowEvalCache(space, pool_idx, [sc.workload for sc in scenarios])
+    cache = FlowEvalCache(space, pool_idx, [sc.workload for sc in scenarios],
+                          disk=disk_cache)
+
+    config = {"n": int(n), "b": int(b), "mu": float(mu),
+              "v_th": float(v_th), "gp_steps": int(gp_steps),
+              "s_frontiers": int(s_frontiers),
+              "frontier_subset": int(frontier_subset),
+              "incremental": bool(incremental), "pool_chunk": pool_chunk,
+              "warm_start": warm_start, "warm_steps": warm_steps,
+              "drift_tol": float(drift_tol),
+              "reuse_icd_trials": bool(reuse_icd_trials),
+              # exact per-scenario parameters: labels round-trip weights
+              # through %g formatting, which can collide at >6 significant
+              # digits — the guard must compare the real values
+              "scenario_params": [
+                  [sc.workload, int(sc.seed), [float(w) for w in sc.weights]]
+                  for sc in scenarios]}
+    snap = None
+    if resume and checkpoint_dir:
+        from repro.core.tuner import _pool_fingerprint
+        from repro.service.checkpoint import load_latest_validated
+
+        snap = load_latest_validated(
+            checkpoint_dir, driver="fleet_tuner",
+            pool=_pool_fingerprint(pool_idx), config=config)
+        if snap is not None and \
+                snap["scenarios"] != [sc.label for sc in scenarios]:
+            raise ValueError(f"checkpoint in {checkpoint_dir} was taken for "
+                             f"scenarios {snap['scenarios']} — resume "
+                             "requires the identical fleet")
 
     # ---- Alg. 3 lines 1-2 per scenario: ICD trials (one fused flush), then
-    # importance + pruning + TED init. Key schedule matches soc_tuner exactly.
+    # importance + pruning + TED init. Key schedule matches soc_tuner
+    # exactly. On resume the flow-dependent pieces are restored from the
+    # snapshot and only the deterministic soc_init transform is replayed.
     states: list[_ScenarioState] = []
-    trial_sets: list[np.ndarray] = []
-    for sc in scenarios:
-        trial_rows, key = icd_trial_rows(jax.random.PRNGKey(sc.seed), N, n)
-        trial_sets.append(trial_rows)
-        states.append(_ScenarioState(
-            key=key, v=np.zeros(space.d), pruned=space,
-            pool_icd=jnp.zeros(()), evaluated=[], y=np.zeros((0, 3)),
-            weights=(None if tuple(sc.weights) == (1.0, 1.0, 1.0)
-                     else jnp.asarray(sc.weights, jnp.float32)),
-            history=[]))
-    trial_ys = cache.evaluate_many(
-        [(sc.workload, rows) for sc, rows in zip(scenarios, trial_sets)])
+    if snap is None:
+        trial_sets: list[np.ndarray] = []
+        for sc in scenarios:
+            trial_rows, key = icd_trial_rows(jax.random.PRNGKey(sc.seed), N, n)
+            trial_sets.append(trial_rows)
+            states.append(_ScenarioState(
+                key=key, v=np.zeros(space.d), pruned=space,
+                pool_icd=jnp.zeros(()), evaluated=[], y=np.zeros((0, 3)),
+                weights=(None if tuple(sc.weights) == (1.0, 1.0, 1.0)
+                         else jnp.asarray(sc.weights, jnp.float32)),
+                history=[]))
+        trial_ys = cache.evaluate_many(
+            [(sc.workload, rows) for sc, rows in zip(scenarios, trial_sets)])
 
-    init_reqs: list[tuple[str, np.ndarray]] = []
-    for sc, st, trial_rows, trial_y in zip(scenarios, states, trial_sets,
-                                           trial_ys):
-        st.v = icd_from_data(space, pool_idx[trial_rows], trial_y)
-        init_rows, st.pruned, pool_icd = soc_init(
-            space, pool_idx, st.v, v_th=v_th, b=b, mu=mu)
-        st.pool_icd = jnp.asarray(pool_icd, jnp.float32)
-        st.evaluated = list(dict.fromkeys(int(r) for r in init_rows))
-        init_reqs.append((sc.workload, np.asarray(st.evaluated)))
-    init_ys = cache.evaluate_many(init_reqs)
+        init_reqs: list[tuple[str, np.ndarray]] = []
+        for sc, st, trial_rows, trial_y in zip(scenarios, states, trial_sets,
+                                               trial_ys):
+            st.v = icd_from_data(space, pool_idx[trial_rows], trial_y)
+            init_rows, st.pruned, pool_icd = soc_init(
+                space, pool_idx, st.v, v_th=v_th, b=b, mu=mu)
+            st.pool_icd = jnp.asarray(pool_icd, jnp.float32)
+            st.evaluated = list(dict.fromkeys(int(r) for r in init_rows))
+            init_reqs.append((sc.workload, np.asarray(st.evaluated)))
+        init_ys = cache.evaluate_many(init_reqs)
 
-    for sc, st, trial_rows, trial_y, init_y in zip(
-            scenarios, states, trial_sets, trial_ys, init_ys):
-        st.evaluated, st.y = merge_trial_evals(
-            st.evaluated, init_y, trial_rows, trial_y, reuse_icd_trials)
-        _log_round(st, 0, sc.label, reference_fronts.get(sc.workload), verbose)
+        for sc, st, trial_rows, trial_y, init_y in zip(
+                scenarios, states, trial_sets, trial_ys, init_ys):
+            st.evaluated, st.y = merge_trial_evals(
+                st.evaluated, init_y, trial_rows, trial_y, reuse_icd_trials)
+            _log_round(st, 0, sc.label, reference_fronts.get(sc.workload),
+                       verbose)
+    else:
+        for si, sc in enumerate(scenarios):
+            v = np.asarray(snap["vs"][str(si)])
+            _, pruned, pool_icd = soc_init(space, pool_idx, v, v_th=v_th,
+                                           b=b, mu=mu)
+            states.append(_ScenarioState(
+                key=jnp.asarray(snap["keys"][si]), v=v, pruned=pruned,
+                pool_icd=jnp.asarray(pool_icd, jnp.float32),
+                evaluated=[int(r) for r in snap["evaluated"][str(si)]],
+                y=np.asarray(snap["ys"][str(si)]),
+                weights=(None if tuple(sc.weights) == (1.0, 1.0, 1.0)
+                         else jnp.asarray(sc.weights, jnp.float32)),
+                history=list(snap["histories"][str(si)])))
 
     pool_icd_stack = jnp.stack([st.pool_icd for st in states])  # [S, N, d]
     any_weights = any(st.weights is not None for st in states)
@@ -314,8 +407,34 @@ def fleet_tuner(
                              s_frontiers=s_frontiers, weights=weights,
                              pool_chunk=pool_chunk, mesh=mesh,
                              mesh_axis=mesh_axis)
-    engine.observe([st.evaluated for st in states], [st.y for st in states])
-    for it in range(T):
+    if snap is None:
+        engine.observe([st.evaluated for st in states],
+                       [st.y for st in states])
+    else:
+        engine.load_state_dict(snap["engine"])
+
+    def save_checkpoint(round_i: int) -> None:
+        from repro.core.tuner import _pool_fingerprint
+        from repro.service.checkpoint import (prune_snapshots, save_snapshot,
+                                              snapshot_path)
+
+        save_snapshot(snapshot_path(checkpoint_dir, round_i), {
+            "driver": "fleet_tuner", "round": round_i,
+            "pool": _pool_fingerprint(pool_idx), "config": config,
+            "scenarios": [sc.label for sc in scenarios],
+            "keys": np.stack([np.asarray(st.key) for st in states]),
+            "vs": {str(si): np.asarray(st.v)
+                   for si, st in enumerate(states)},
+            "evaluated": {str(si): np.asarray(st.evaluated, np.int64)
+                          for si, st in enumerate(states)},
+            "ys": {str(si): st.y for si, st in enumerate(states)},
+            "histories": {str(si): st.history
+                          for si, st in enumerate(states)},
+            "engine": engine.state_dict()})
+        prune_snapshots(checkpoint_dir)
+
+    start_round = 0 if snap is None else int(snap["round"])
+    for it in range(start_round, T):
         subs, keys_acq = [], []
         for st in states:
             st.key, k_fit, k_acq, k_sub = jax.random.split(st.key, 4)
@@ -338,6 +457,8 @@ def fleet_tuner(
             st.y = np.concatenate([st.y, y_new], axis=0)
             _log_round(st, it + 1, sc.label,
                        reference_fronts.get(sc.workload), verbose)
+        if checkpoint_dir and (it + 1) % checkpoint_every == 0:
+            save_checkpoint(it + 1)
 
     # ---- package per-scenario results in soc_tuner's own layout.
     wall = time.time() - t0

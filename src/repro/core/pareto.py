@@ -14,21 +14,25 @@ __all__ = [
 ]
 
 
-def dominance_counts(y: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
+def dominance_counts(y: jnp.ndarray, use_kernel: bool = False,
+                     backend: str = "auto") -> jnp.ndarray:
     """Number of points that strictly dominate each row of ``y`` [N, m].
 
     A point q dominates p (minimization) iff all(q <= p) and any(q < p)
     (Definition 3 / Eq. (1) with the inequality direction flipped to
     minimization, as used in the paper's experiments).
-    """
-    if use_kernel:
-        from repro.kernels.pareto_count import ops as _ops
 
-        return _ops.dominance_counts(y)
-    le = jnp.all(y[:, None, :] <= y[None, :, :], axis=-1)  # le[q,p]: q<=p all dims
-    lt = jnp.any(y[:, None, :] < y[None, :, :], axis=-1)
-    dom = jnp.logical_and(le, lt)
-    return jnp.sum(dom, axis=0)
+    Routed through the unified kernel backend
+    (``repro.kernels.backend.dominance_counts_auto``, same pattern as
+    pairdist): ``auto`` resolves to the bit-identical XLA form unless
+    ``REPRO_PARETO_BACKEND`` upgrades it (``platform`` → Pallas on TPU for
+    tile-worthy N). ``use_kernel=True`` keeps its historical meaning —
+    force the Pallas kernel.
+    """
+    from repro.kernels.backend import dominance_counts_auto
+
+    return dominance_counts_auto(y, backend="pallas" if use_kernel
+                                 else backend)
 
 
 def pareto_mask(y: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:

@@ -21,7 +21,8 @@ from .pareto import adrs, pareto_mask
 from .sampling import soc_init
 from .space import DesignSpace
 
-__all__ = ["TunerResult", "soc_tuner", "frontier_subset_rows"]
+__all__ = ["TunerResult", "soc_tuner", "frontier_subset_rows",
+           "explore_prologue"]
 
 FlowFn = Callable[[np.ndarray], np.ndarray]
 
@@ -87,6 +88,60 @@ def frontier_subset_rows(key: jax.Array, n_pool: int,
     return None
 
 
+def explore_prologue(space: DesignSpace, pool_idx: np.ndarray, flow: FlowFn,
+                     key: jax.Array, *, n: int, mu: float, b: int,
+                     v_th: float, use_kernels: bool = False,
+                     reuse_icd_trials: bool = True):
+    """Algorithm 3 lines 1-4: ICD trials → importance → prune/TED-init →
+    seed evaluations. Returns ``(key, v, pruned, pool_icd, evaluated, y)``.
+
+    Shared between :func:`soc_tuner` and the exploration service
+    (``repro.service.runner``) — operation-for-operation the historical
+    prologue, so both drivers consume the PRNG stream and the flow budget
+    identically. A checkpoint resume replays everything after the flow
+    calls from the stored ``v`` instead (see :func:`_prologue_from_v`).
+    """
+    N = pool_idx.shape[0]
+    # Line 1: v = ICD(X, n). Trials are drawn from the pool so their metrics
+    # can seed the GP (the paper's flow budget accounting does the same: the
+    # n importance trials are real evaluations).
+    trial_rows, key = icd_trial_rows(key, N, n)
+    trial_y = np.asarray(flow(pool_idx[trial_rows]))
+    v = icd_from_data(space, pool_idx[trial_rows], trial_y)
+
+    # Line 2: Z = SoC-Init(X, µ, b, v, v_th)  (prune + ICD transform + TED)
+    init_rows, pruned, pool_icd = soc_init(
+        space, pool_idx, v, v_th=v_th, b=b, mu=mu, use_kernel=use_kernels)
+    pool_icd = jnp.asarray(pool_icd, jnp.float32)
+
+    # Line 4: y <- VLSIFlow(Z)
+    evaluated: list[int] = list(dict.fromkeys(int(r) for r in init_rows))
+    y_init = np.asarray(flow(pool_idx[np.asarray(evaluated)]))
+    evaluated, y = merge_trial_evals(evaluated, y_init, trial_rows, trial_y,
+                                     reuse_icd_trials)
+    return key, v, pruned, pool_icd, evaluated, y
+
+
+def _prologue_from_v(space: DesignSpace, pool_idx: np.ndarray, v: np.ndarray,
+                     *, mu: float, b: int, v_th: float,
+                     use_kernels: bool = False):
+    """Rebuild the flow-free prologue outputs from a checkpointed importance
+    vector: ``soc_init`` is deterministic in ``(space, pool, v)``, so resume
+    never re-pays the trial/init flow evaluations."""
+    _, pruned, pool_icd = soc_init(space, pool_idx, v, v_th=v_th, b=b, mu=mu,
+                                   use_kernel=use_kernels)
+    return pruned, jnp.asarray(pool_icd, jnp.float32)
+
+
+def _pool_fingerprint(pool_idx: np.ndarray) -> str:
+    """Cheap content hash of the candidate pool — a resumed run must explore
+    the identical pool or the stored engine state is meaningless."""
+    import hashlib
+
+    return hashlib.sha1(np.ascontiguousarray(
+        np.asarray(pool_idx, np.int64)).tobytes()).hexdigest()
+
+
 @dataclasses.dataclass
 class TunerResult:
     space: DesignSpace                # pruned space actually explored
@@ -132,6 +187,11 @@ def soc_tuner(
     warm_steps: int | None = None,
     drift_tol: float = 1.0,
     pool_chunk: int | str | None = None,
+    q: int = 1,
+    fantasy: str = "mean",
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
     verbose: bool = False,
 ) -> TunerResult:
     """Run SoC-Tuner over ``pool_idx`` [N, d] candidate designs.
@@ -156,31 +216,61 @@ def soc_tuner(
     the engine's O(N) pool state in column chunks so ``n_pool`` can grow to
     10⁵–10⁶ candidates — identical selections at any chunk size; see
     ``docs/scaling.md``.
+
+    ``q`` (requires ``incremental=True`` when > 1) selects q candidates per
+    round via fantasy updates (``BOEngine.select_q``; ``fantasy`` picks the
+    imputation rule) and evaluates them in ONE flow call — ``q=1`` is the
+    historical one-pick round, bit-for-bit. ``checkpoint_dir`` writes a
+    versioned snapshot of the full exploration state (engine, RNG key,
+    history) every ``checkpoint_every`` rounds; ``resume=True`` continues a
+    killed run from the latest snapshot *bit-exactly*, without re-paying any
+    flow evaluation (see ``docs/service.md``).
     """
     t0 = time.time()
     key = jax.random.PRNGKey(0) if key is None else key
     pool_idx = np.asarray(pool_idx)
     N = pool_idx.shape[0]
+    if q < 1:
+        raise ValueError(f"q must be >= 1, got {q}")
+    if q > 1 and not incremental:
+        raise ValueError(
+            "q > 1 requires incremental=True: fantasy q-batch selection "
+            "runs on the incremental engine (checked up front so no flow "
+            "budget is spent on a run that cannot start)")
+    # everything that defines the trajectory must survive a resume intact
+    # (T may grow: it only decides when the loop stops)
+    config = {"q": int(q), "n": int(n), "b": int(b), "mu": float(mu),
+              "v_th": float(v_th), "gp_steps": int(gp_steps),
+              "s_frontiers": int(s_frontiers),
+              "frontier_subset": int(frontier_subset), "fantasy": fantasy,
+              "incremental": bool(incremental), "pool_chunk": pool_chunk,
+              "warm_start": warm_start, "warm_steps": warm_steps,
+              "drift_tol": float(drift_tol),
+              "reuse_icd_trials": bool(reuse_icd_trials),
+              "weights": (None if weights is None else
+                          [float(x) for x in np.asarray(weights).reshape(-1)])}
 
-    # Line 1: v = ICD(X, n). Trials are drawn from the pool so their metrics
-    # can seed the GP (the paper's flow budget accounting does the same: the
-    # n importance trials are real evaluations).
-    trial_rows, key = icd_trial_rows(key, N, n)
-    trial_y = np.asarray(flow(pool_idx[trial_rows]))
-    v = icd_from_data(space, pool_idx[trial_rows], trial_y)
+    snap = None
+    if resume and checkpoint_dir:
+        from repro.service.checkpoint import load_latest_validated
 
-    # Line 2: Z = SoC-Init(X, µ, b, v, v_th)   (prune + ICD transform + TED)
-    init_rows, pruned, pool_icd = soc_init(
-        space, pool_idx, v, v_th=v_th, b=b, mu=mu, use_kernel=use_kernels)
-    pool_icd = jnp.asarray(pool_icd, jnp.float32)
+        snap = load_latest_validated(
+            checkpoint_dir, driver="soc_tuner",
+            pool=_pool_fingerprint(pool_idx), config=config)
 
-    # Line 4: y <- VLSIFlow(Z)
-    evaluated: list[int] = list(dict.fromkeys(int(r) for r in init_rows))
-    y_init = np.asarray(flow(pool_idx[np.asarray(evaluated)]))
-    evaluated, y = merge_trial_evals(evaluated, y_init, trial_rows, trial_y,
-                                     reuse_icd_trials)
+    if snap is None:
+        key, v, pruned, pool_icd, evaluated, y = explore_prologue(
+            space, pool_idx, flow, key, n=n, mu=mu, b=b, v_th=v_th,
+            use_kernels=use_kernels, reuse_icd_trials=reuse_icd_trials)
+    else:
+        v = np.asarray(snap["v"])
+        pruned, pool_icd = _prologue_from_v(space, pool_idx, v, mu=mu, b=b,
+                                            v_th=v_th, use_kernels=use_kernels)
+        evaluated = [int(r) for r in snap["evaluated"]]
+        y = np.asarray(snap["y"], np.float32)
+        key = jnp.asarray(snap["key"])
 
-    history: list[dict] = []
+    history: list[dict] = [] if snap is None else list(snap["history"])
     t_round = time.time()
 
     def log_round(i: int):
@@ -195,7 +285,9 @@ def soc_tuner(
                   f"front={rec['pareto_size']:3d}"
                   + (f" adrs={rec['adrs']:.4f}" if "adrs" in rec else ""))
 
-    log_round(0)
+    start_round = 0 if snap is None else int(snap["round"])
+    if snap is None:
+        log_round(0)
 
     # Lines 5-10: BO loop, run on a persistent device-resident engine. The
     # engine internally negates targets (paper metrics are minimized, MES
@@ -206,21 +298,39 @@ def soc_tuner(
                       warm_steps=warm_steps, drift_tol=drift_tol,
                       s_frontiers=s_frontiers, weights=w,
                       pool_chunk=pool_chunk)
-    engine.observe(evaluated, y)
-    for it in range(T):
+    if snap is None:
+        engine.observe(evaluated, y)
+    else:
+        engine.load_state_dict(snap["engine"])
+
+    def save_checkpoint(round_i: int) -> None:
+        from repro.service.checkpoint import (prune_snapshots, save_snapshot,
+                                              snapshot_path)
+
+        save_snapshot(snapshot_path(checkpoint_dir, round_i), {
+            "driver": "soc_tuner", "round": round_i,
+            "pool": _pool_fingerprint(pool_idx), "config": config,
+            "key": np.asarray(key), "v": np.asarray(v),
+            "evaluated": np.asarray(evaluated, np.int64), "y": y,
+            "history": history, "engine": engine.state_dict()})
+        prune_snapshots(checkpoint_dir)
+
+    for it in range(start_round, T):
         key, k_fit, k_acq, k_sub = jax.random.split(key, 4)
         del k_fit  # reserved slot — keeps the key schedule seed-stable
 
         # Frontier sampling over a subset (O(q³) Cholesky), scoring over all.
         sub = frontier_subset_rows(k_sub, N, frontier_subset)
-        nxt = engine.select(k_acq, sub_rows=sub)
+        picks = engine.select_q(k_acq, q, sub_rows=sub, fantasy=fantasy)
 
-        # Line 8: evaluate and append.
-        y_new = np.asarray(flow(pool_idx[nxt][None, :]))
-        evaluated.append(nxt)
+        # Line 8: evaluate and append (one flow call for the whole batch).
+        y_new = np.asarray(flow(pool_idx[np.asarray(picks)]))
+        evaluated.extend(picks)
         y = np.concatenate([y, y_new], axis=0)
-        engine.observe([nxt], y_new)
+        engine.observe(picks, y_new)
         log_round(it + 1)
+        if checkpoint_dir and (it + 1) % checkpoint_every == 0:
+            save_checkpoint(it + 1)
 
     front = _front(y)
     rows = np.asarray(evaluated)

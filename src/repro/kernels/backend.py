@@ -1,9 +1,12 @@
-"""Unified kernel backend: one dispatch point for pairwise-distance work.
+"""Unified kernel backend: one dispatch point per kernel family.
 
 Every consumer of pairwise squared distances / RBF kernel matrices — the GP
 surrogate's ARD kernel (``core.gp``), TED initialization (``core.sampling``)
 and, through the GP, the IMOO acquisition — routes through
-:func:`pairdist_auto` instead of picking an implementation inline. Dispatch:
+:func:`pairdist_auto` instead of picking an implementation inline; Pareto
+dominance counting (``core.pareto``) routes through
+:func:`dominance_counts_auto` under the same dispatch rules with its own
+environment override (``REPRO_PARETO_BACKEND``). Dispatch:
 
 * ``"auto"``     — the ``REPRO_PAIRDIST_BACKEND`` environment variable if
   set (``xla`` / ``pallas`` / ``platform``), else ``"xla"``. XLA is the
@@ -34,9 +37,12 @@ from .common import pad_to, use_interpret
 from .pairdist.kernel import LANE, TILE_I, TILE_J, pairdist as _raw_pairdist
 
 __all__ = ["pairdist_auto", "pairdist_chunked", "auto_chunk",
-           "resolve_backend", "sqdist_xla", "rbf_xla"]
+           "resolve_backend", "sqdist_xla", "rbf_xla",
+           "dominance_counts_auto", "resolve_pareto_backend",
+           "dominance_counts_xla"]
 
 _ENV_VAR = "REPRO_PAIRDIST_BACKEND"
+_PARETO_ENV_VAR = "REPRO_PARETO_BACKEND"
 _BACKENDS = ("auto", "platform", "pallas", "xla")
 
 #: default streaming budget for :func:`auto_chunk` (MB of f32 working set
@@ -111,6 +117,52 @@ def pairdist_auto(x: jnp.ndarray, y: jnp.ndarray, *,
             return sqdist_xla(x, y)
         return rbf_xla(x, y, bandwidth)
     return _pallas_padded(x, y, None if bandwidth is None else float(bandwidth))
+
+
+# ------------------------------------------------------------ pareto_count
+def resolve_pareto_backend(backend: str = "auto",
+                           n: int | None = None) -> str:
+    """Resolve the dominance-count backend for an [n, m] problem — same
+    dispatch table as :func:`resolve_backend` with its own env override
+    (``REPRO_PARETO_BACKEND``): ``auto`` defaults to XLA everywhere (the
+    fidelity default — bit-identical to the historical inline broadcast
+    form), ``platform`` upgrades to the Pallas kernel on TPU for
+    tile-worthy row counts."""
+    if backend == "auto":
+        backend = os.environ.get(_PARETO_ENV_VAR, "xla")
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown pareto backend {backend!r}; expected one "
+                         f"of {_BACKENDS}")
+    if backend in ("pallas", "xla"):
+        return backend
+    if jax.default_backend() != "tpu":
+        return "xla"
+    from .pareto_count.kernel import TILE_I as _PC_TILE
+
+    if n is not None and n < _PC_TILE:
+        return "xla"
+    return "pallas"
+
+
+def dominance_counts_xla(y: jnp.ndarray) -> jnp.ndarray:
+    """Strict-dominance counts [N] for minimization — the historical inline
+    broadcast form (Definition 3 / Eq. (1) flipped to minimization)."""
+    le = jnp.all(y[:, None, :] <= y[None, :, :], axis=-1)  # le[q,p]: q<=p
+    lt = jnp.any(y[:, None, :] < y[None, :, :], axis=-1)
+    return jnp.sum(jnp.logical_and(le, lt), axis=0)
+
+
+def dominance_counts_auto(y: jnp.ndarray, *,
+                          backend: str = "auto") -> jnp.ndarray:
+    """Dominance counts with automatic backend dispatch — the
+    ``pareto_count`` twin of :func:`pairdist_auto` (no tile-alignment
+    requirements on any path; the Pallas route pads rows with ``+inf`` and
+    slices back inside ``pareto_count.ops``)."""
+    if resolve_pareto_backend(backend, y.shape[0]) == "xla":
+        return dominance_counts_xla(y)
+    from .pareto_count import ops as _ops
+
+    return _ops.dominance_counts(y)
 
 
 def auto_chunk(n: int, *, bytes_per_col: int = 4 * 3 * 256,

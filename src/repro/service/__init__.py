@@ -1,0 +1,42 @@
+"""Exploration service — restartable, horizontally-scalable SoC exploration.
+
+The paper's real cost is the VLSI flow: hours per evaluated design point.
+``soc_tuner`` evaluates one candidate per round and holds every byte of
+exploration state in process memory, so a production deployment can neither
+parallelize flow evaluations nor survive a restart. This package is the
+missing deployment layer on top of the incremental BO engine:
+
+- ``runner``     :func:`service_tuner` — the async q-batch exploration loop:
+                 q candidates per round via fantasy updates
+                 (:meth:`repro.core.engine.BOEngine.select_q`), dispatched to
+                 a :class:`FlowPool` of concurrent workers, with completions
+                 fed back as they land (a round never waits for stragglers)
+                 and a checkpoint written every round.
+- ``pool``       :class:`FlowPool` — concurrent flow evaluation (process pool
+                 locally, pluggable executor), content-addressed dedup
+                 against the on-disk cache, in-order or opportunistic
+                 completion draining.
+- ``flowcache``  :class:`FlowDiskCache` — content-addressed, atomically
+                 written flow results keyed by (workload, design point);
+                 shared across fleet scenarios, service workers and runs.
+- ``checkpoint`` versioned atomic snapshot files; ``soc_tuner`` /
+                 ``fleet_tuner`` / ``service_tuner`` all write and resume
+                 from this one format.
+- ``cli``        the ``soc-service`` console driver.
+
+See ``docs/service.md`` for the architecture, the checkpoint format, the
+cache layout and a worked async example.
+"""
+from .checkpoint import (SNAPSHOT_VERSION, latest_snapshot, load_snapshot,
+                         save_snapshot, snapshot_path)
+from .flowcache import CachedFlow, FlowDiskCache
+from .pool import FlowPool, InlineExecutor
+from .runner import service_tuner
+
+__all__ = [
+    "SNAPSHOT_VERSION", "save_snapshot", "load_snapshot", "latest_snapshot",
+    "snapshot_path",
+    "FlowDiskCache", "CachedFlow",
+    "FlowPool", "InlineExecutor",
+    "service_tuner",
+]

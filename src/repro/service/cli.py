@@ -1,0 +1,137 @@
+"""``soc-service`` — command-line driver for the exploration service.
+
+Runs a restartable, q-batch-parallel SoC exploration over a deterministic
+sampled pool. Typical lifecycle::
+
+    # start (checkpoints every round, disk-cached evaluations)
+    soc-service --workload resnet50 --n-pool 1024 --T 40 --q 4 --workers 4 \\
+        --checkpoint-dir runs/r50/ckpt --cache-dir runs/flowcache \\
+        --out runs/r50/result.json
+
+    # after a crash / SIGKILL: continue bit-exactly from the last snapshot
+    soc-service ... --resume --out runs/r50/result.json
+
+The same binary is the CI smoke driver: ``--kill-after K`` SIGKILLs the
+process right after the checkpoint covering K evaluations (crash
+simulation), and ``--mock-flow-delay`` wraps the surrogate flow in a fixed
+per-call sleep so concurrency effects are visible without a real flow.
+
+Also runnable as ``python -m repro.service.cli``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+__all__ = ["main", "build_parser"]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog="soc-service", description=__doc__)
+    p.add_argument("--workload", default="resnet50")
+    p.add_argument("--n-pool", type=int, default=1024)
+    p.add_argument("--pool-seed", type=int, default=0,
+                   help="PRNG seed of the deterministic pool sample")
+    p.add_argument("--seed", type=int, default=0,
+                   help="exploration PRNG seed")
+    p.add_argument("--T", type=int, default=40,
+                   help="BO-phase flow-evaluation budget")
+    p.add_argument("--q", type=int, default=1,
+                   help="max concurrent evaluations in flight")
+    p.add_argument("--min-done", type=int, default=1,
+                   help="completions to wait for before the next refill "
+                        "(1 = fully async, q = per-round barrier)")
+    p.add_argument("--fantasy", default="mean",
+                   choices=("mean", "cl_min", "cl_max"))
+    p.add_argument("--unordered", action="store_true",
+                   help="observe completions as they land instead of in "
+                        "submission order (faster, timing-dependent)")
+    p.add_argument("--workers", type=int, default=None,
+                   help="pool workers (default: q)")
+    p.add_argument("--executor", default="process",
+                   choices=("process", "thread", "inline"))
+    p.add_argument("--n", type=int, default=30)
+    p.add_argument("--b", type=int, default=20)
+    p.add_argument("--gp-steps", type=int, default=150)
+    p.add_argument("--bucket", type=int, default=None,
+                   help="engine pad bucket (bigger = fewer jit recompiles)")
+    p.add_argument("--pool-chunk", default=None,
+                   help="engine pool_chunk: int or 'auto'")
+    p.add_argument("--no-incremental", action="store_true",
+                   help="run the exact historical engine (forces q=1)")
+    p.add_argument("--cache-dir", default=None,
+                   help="content-addressed on-disk flow cache root")
+    p.add_argument("--checkpoint-dir", default=None)
+    p.add_argument("--checkpoint-every", type=int, default=1)
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--mock-flow-delay", type=float, default=None,
+                   help="wrap the flow in a per-call sleep of this many "
+                        "seconds (mock of a real flow's latency)")
+    p.add_argument("--out", default=None,
+                   help="write the result (rows, metrics, history, stats) "
+                        "as JSON here")
+    p.add_argument("--kill-after", type=int, default=None,
+                   help="test hook: SIGKILL right after the checkpoint "
+                        "covering this many evaluations")
+    p.add_argument("--quiet", action="store_true")
+    return p
+
+
+def main(argv=None) -> int:
+    a = build_parser().parse_args(argv)
+    from repro.core import make_space
+    from repro.soc import DelayedFlow, VLSIFlow
+    from .runner import service_tuner
+
+    space = make_space()
+    pool = np.asarray(space.sample(jax.random.PRNGKey(a.pool_seed), a.n_pool))
+    flow = VLSIFlow(space, a.workload)
+    if a.mock_flow_delay is not None:
+        flow = DelayedFlow(flow, a.mock_flow_delay)
+    pool_chunk = a.pool_chunk
+    if pool_chunk not in (None, "auto"):
+        pool_chunk = int(pool_chunk)
+    q = a.q
+    if a.no_incremental and q > 1:
+        # the help text promises this: the exact historical engine has no
+        # fantasy machinery, so the run degenerates to sequential rounds
+        print(f"[service] --no-incremental forces q=1 (requested q={q})")
+        q = 1
+
+    res = service_tuner(
+        space, pool, flow, workload=a.workload, T=a.T, q=q,
+        fantasy=a.fantasy, min_done=min(a.min_done, q),
+        ordered=not a.unordered,
+        max_workers=a.workers, executor=a.executor, n=a.n, b=a.b,
+        gp_steps=a.gp_steps, key=jax.random.PRNGKey(a.seed),
+        incremental=not a.no_incremental, bucket=a.bucket,
+        pool_chunk=pool_chunk, cache_dir=a.cache_dir,
+        checkpoint_dir=a.checkpoint_dir, checkpoint_every=a.checkpoint_every,
+        resume=a.resume, verbose=not a.quiet, _kill_after=a.kill_after)
+
+    if not a.quiet:
+        print(f"[service] {len(res.evaluated_rows)} evaluations, "
+              f"{res.pareto_y.shape[0]} Pareto points, "
+              f"wall {res.wall_s:.1f}s")
+    if a.out:
+        os.makedirs(os.path.dirname(os.path.abspath(a.out)), exist_ok=True)
+        with open(a.out, "w") as f:
+            json.dump({
+                "evaluated_rows": [int(r) for r in res.evaluated_rows],
+                "y": np.asarray(res.y, np.float64).tolist(),
+                "pareto_rows": [int(r) for r in res.pareto_rows],
+                "history": res.history,
+                "engine_stats": res.engine_stats,
+                "wall_s": res.wall_s,
+            }, f, indent=2)
+        if not a.quiet:
+            print(f"[service] result -> {a.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

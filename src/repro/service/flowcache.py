@@ -1,0 +1,121 @@
+"""Content-addressed on-disk flow-evaluation cache.
+
+The VLSI flow is deterministic in the design point, so its results are
+cacheable forever. Entries are keyed by the sha1 of
+``workload || canonical(int64 design-index vector)`` — the *content* of the
+design point, not its row number in some pool — so the cache is shared
+across fleet scenarios, across service workers, across runs and across
+pools of different sizes/orderings.
+
+Layout: ``<root>/<k[:2]>/<k>.npy`` (two-hex-char fan-out keeps directories
+small at millions of entries). Writes go to a same-directory temp file and
+``os.replace`` into place: concurrent writers on POSIX either both write the
+identical immutable content or one wins — readers never observe a torn file.
+
+:class:`CachedFlow` wraps any ``idx [k, d] -> y [k, m]`` flow callable with
+a read-through/write-through view of the cache — drop-in for ``soc_tuner``'s
+``flow`` argument; misses are evaluated in ONE inner flow call per batch.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import tempfile
+
+import numpy as np
+
+__all__ = ["FlowDiskCache", "CachedFlow"]
+
+
+class FlowDiskCache:
+    """Process-safe on-disk memo of ``(workload, design point) -> y [m]``."""
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+
+    @staticmethod
+    def key(workload: str, idx_row) -> str:
+        """Content hash of one design point under one workload."""
+        h = hashlib.sha1()
+        h.update(str(workload).encode())
+        h.update(b"\0")
+        h.update(np.ascontiguousarray(
+            np.asarray(idx_row, np.int64).reshape(-1)).tobytes())
+        return h.hexdigest()
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2], key + ".npy")
+
+    # ------------------------------------------------------------------ io
+    def get(self, workload: str, idx_row) -> np.ndarray | None:
+        try:
+            y = np.load(self._path(self.key(workload, idx_row)),
+                        allow_pickle=False)
+            self.hits += 1
+            return y
+        except (FileNotFoundError, ValueError, OSError):
+            self.misses += 1
+            return None
+
+    def put(self, workload: str, idx_row, y) -> None:
+        path = self._path(self.key(workload, idx_row))
+        d = os.path.dirname(path)
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(suffix=".npy.tmp", dir=d)
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.save(f, np.asarray(y))
+            os.replace(tmp, path)  # atomic: concurrent writers can't tear
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self.puts += 1
+
+    def get_many(self, workload: str, idx: np.ndarray) -> list:
+        """Per-row lookup of ``idx [k, d]`` -> list of ``y [m]`` or None."""
+        return [self.get(workload, row) for row in np.atleast_2d(idx)]
+
+    # ---------------------------------------------------------- accounting
+    @property
+    def requests(self) -> int:
+        return self.hits + self.misses
+
+    def summary(self) -> str:
+        hr = self.hits / max(self.requests, 1)
+        return (f"disk cache [{self.root}]: {self.requests} requests, "
+                f"{self.hits} hits ({100.0 * hr:.1f}%), {self.puts} puts")
+
+
+class CachedFlow:
+    """Read-through/write-through disk-cache wrapper for a flow callable.
+
+    ``CachedFlow(flow, cache, workload)`` is itself a valid
+    ``idx [k, d] -> y [k, m]`` flow: cached rows are served from disk, the
+    misses of a batch are evaluated in one inner ``flow`` call, and fresh
+    results are written back. Picklable whenever the inner flow is (the
+    cache handle re-opens its root on unpickle), so it is pool-safe.
+    """
+
+    def __init__(self, flow, cache: FlowDiskCache | str, workload: str):
+        self.flow = flow
+        self.cache = cache if isinstance(cache, FlowDiskCache) \
+            else FlowDiskCache(cache)
+        self.workload = str(workload)
+        self.flow_calls = 0  # inner dispatches actually paid
+
+    def __call__(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.atleast_2d(np.asarray(idx))
+        found = self.cache.get_many(self.workload, idx)
+        miss = [i for i, y in enumerate(found) if y is None]
+        if miss:
+            self.flow_calls += 1
+            y_miss = np.atleast_2d(np.asarray(self.flow(idx[miss])))
+            for i, y in zip(miss, y_miss):
+                self.cache.put(self.workload, idx[i], y)
+                found[i] = y
+        return np.stack(found)

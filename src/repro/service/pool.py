@@ -1,0 +1,177 @@
+"""Async flow-evaluation pool: concurrent workers + completion draining.
+
+A :class:`FlowPool` owns a set of workers (a ``spawn`` process pool by
+default — the VLSI flow is CPU-hours of work per design point, and ``fork``
+under a live JAX runtime is unsafe — or threads, an inline synchronous
+executor for tests, or any user-supplied ``concurrent.futures.Executor``)
+and a ticket queue. ``submit(row, idx_row)`` dispatches ONE design point and
+returns a monotonically increasing ticket; ``drain(min_done)`` blocks until
+at least ``min_done`` completions are available and feeds them back.
+
+Two drain disciplines:
+
+- ``ordered=True`` (default): each drain releases exactly the requested
+  number of completions, strictly in ticket order (a reorder buffer holds
+  early finishers; nothing extra is taken even when more happen to be
+  ready). Workers still run concurrently — ordering only defers
+  *observation* — and both the feed-back order AND the batch size become
+  independent of worker timing, which is what makes checkpoint/resume
+  bit-exact and async runs reproducible.
+- ``ordered=False``: completions are released as they land (opportunistic
+  async BO); the trajectory then depends on arrival order and timing.
+
+Every submit first consults the content-addressed
+:class:`~repro.service.flowcache.FlowDiskCache` (when attached): a hit
+completes the ticket instantly without occupying a worker, and every real
+completion is written back — so concurrent scenarios, restarts and later
+runs never pay for the same design point twice.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import multiprocessing
+from typing import Callable
+
+import numpy as np
+
+from .flowcache import FlowDiskCache
+
+__all__ = ["FlowPool", "InlineExecutor"]
+
+
+def _flow_task(flow, idx_row: np.ndarray) -> np.ndarray:
+    """Worker entry: evaluate ONE design point -> y [m]."""
+    return np.asarray(flow(np.atleast_2d(idx_row)))[0]
+
+
+class InlineExecutor:
+    """Synchronous ``Executor``: runs the task at submit time, in-process.
+
+    The zero-concurrency baseline — ``FlowPool(executor="inline")`` makes the
+    service loop execute exactly like the sequential tuner (used by the q=1
+    parity tests and cheap CI smoke runs).
+    """
+
+    def submit(self, fn: Callable, *args, **kwargs) -> cf.Future:
+        fut: cf.Future = cf.Future()
+        try:
+            fut.set_result(fn(*args, **kwargs))
+        except BaseException as e:  # pragma: no cover - surfaced via result()
+            fut.set_exception(e)
+        return fut
+
+    def shutdown(self, wait: bool = True, **_) -> None:
+        pass
+
+
+class FlowPool:
+    """Dispatch flow evaluations to concurrent workers, ticket-ordered.
+
+    ``flow`` must be picklable for the process executor (``VLSIFlow`` and
+    friends are — see ``repro.soc.flow``). ``executor`` is ``"process"`` |
+    ``"thread"`` | ``"inline"`` | an ``Executor`` instance (not shut down on
+    :meth:`close` when caller-owned).
+    """
+
+    def __init__(self, flow, *, workload: str = "workload",
+                 max_workers: int = 4, executor="process",
+                 cache: FlowDiskCache | str | None = None,
+                 mp_context: str = "spawn"):
+        self.flow = flow
+        self.workload = str(workload)
+        self.cache = (None if cache is None else
+                      cache if isinstance(cache, FlowDiskCache)
+                      else FlowDiskCache(cache))
+        self._owned = isinstance(executor, str)
+        if executor == "process":
+            self._ex = cf.ProcessPoolExecutor(
+                max_workers=max_workers,
+                mp_context=multiprocessing.get_context(mp_context))
+        elif executor == "thread":
+            self._ex = cf.ThreadPoolExecutor(max_workers=max_workers)
+        elif executor == "inline":
+            self._ex = InlineExecutor()
+        elif isinstance(executor, str):
+            raise ValueError(f"unknown executor {executor!r}; expected "
+                             "'process', 'thread', 'inline' or an Executor")
+        else:
+            self._ex = executor
+        self._next_ticket = 0
+        self._rows: dict[int, int] = {}          # ticket -> pool row
+        self._idx: dict[int, np.ndarray] = {}    # ticket -> design point
+        self._futs: dict[int, cf.Future] = {}    # tickets on workers
+        self._ready: dict[int, np.ndarray] = {}  # completed, unconsumed
+        self.cache_hits = 0
+        self.dispatched = 0
+
+    # ---------------------------------------------------------------- submit
+    def submit(self, row: int, idx_row: np.ndarray) -> int:
+        """Dispatch one design point; returns its ticket."""
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._rows[t] = int(row)
+        idx_row = np.asarray(idx_row)
+        self._idx[t] = idx_row
+        if self.cache is not None:
+            y = self.cache.get(self.workload, idx_row)
+            if y is not None:
+                self.cache_hits += 1
+                self._ready[t] = np.asarray(y)
+                return t
+        self.dispatched += 1
+        self._futs[t] = self._ex.submit(_flow_task, self.flow, idx_row)
+        return t
+
+    @property
+    def outstanding(self) -> int:
+        return len(self._rows)
+
+    # ----------------------------------------------------------------- drain
+    def _complete(self, t: int) -> None:
+        y = np.asarray(self._futs.pop(t).result())
+        if self.cache is not None:
+            self.cache.put(self.workload, self._idx[t], y)
+        self._ready[t] = y
+
+    def _pop(self, t: int) -> tuple[int, int, np.ndarray]:
+        self._idx.pop(t)
+        return t, self._rows.pop(t), self._ready.pop(t)
+
+    def drain(self, min_done: int = 1, ordered: bool = True,
+              timeout: float | None = None) -> list[tuple[int, int, np.ndarray]]:
+        """Collect completions as ``(ticket, row, y)`` triples.
+
+        ``ordered=True`` blocks until the ``min_done`` (clamped to the
+        outstanding count) OLDEST tickets have completed and releases
+        exactly those, in ticket order — never more: the batch size is a
+        pure function of the caller's state, not of worker timing, which is
+        what keeps the driver's PRNG consumption (and therefore the whole
+        trajectory and its checkpoints) reproducible. ``ordered=False``
+        blocks until ``min_done`` completions exist and additionally sweeps
+        everything already finished (lowest latency, timing-dependent).
+        """
+        min_done = min(min_done, self.outstanding)
+        out: list[tuple[int, int, np.ndarray]] = []
+        if ordered:
+            while self._rows and len(out) < min_done:
+                t = min(self._rows)
+                if t not in self._ready:
+                    self._futs[t].result(timeout)  # block on the oldest
+                    self._complete(t)
+                out.append(self._pop(t))
+            return out
+        while self._rows:
+            ready = sorted(self._ready)
+            for t in ready:
+                out.append(self._pop(t))
+            if len(out) >= min_done or not self._futs:
+                break
+            done, _ = cf.wait(list(self._futs.values()), timeout=timeout,
+                              return_when=cf.FIRST_COMPLETED)
+            for t in [t for t, f in self._futs.items() if f in done]:
+                self._complete(t)
+        return out
+
+    def close(self) -> None:
+        if self._owned:
+            self._ex.shutdown(wait=True)

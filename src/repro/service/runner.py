@@ -1,0 +1,251 @@
+"""The exploration service loop: async q-batch BO over a worker pool.
+
+:func:`service_tuner` is Algorithm 3 rebuilt for a production flow budget:
+
+- per refill it asks the incremental engine for up to ``q`` candidates via
+  **fantasy updates** (``BOEngine.select_q`` — in-flight picks are
+  fantasized, new picks are chosen one rank-1 update apart);
+- picks are dispatched to a :class:`~repro.service.pool.FlowPool` of
+  concurrent workers and **completions are fed back as they land** —
+  with ``min_done=1`` (the default) a new selection round starts as soon as
+  ONE evaluation returns, while the other q-1 stay pending;
+- every completion batch writes a **versioned atomic checkpoint** (engine
+  state, RNG key, trajectory); a SIGKILL'd run resumed with ``resume=True``
+  reproduces the uninterrupted trajectory bit-exactly;
+- all evaluations dedup against the content-addressed on-disk flow cache.
+
+With ``q=1`` and the inline executor the loop degenerates to exactly
+``soc_tuner``'s sequential round — bit-identical picks, same PRNG stream,
+same flow calls (pinned by ``tests/test_service.py``). ``T`` counts **flow
+evaluations consumed by the BO phase** (for q=1 that equals rounds, so the
+budget is comparable across q).
+
+Determinism: with ``ordered=True`` (default) completions are *observed* in
+submission order regardless of which worker finishes first — workers still
+run concurrently; only the feed-back order is pinned — so the trajectory,
+and therefore every checkpoint, is independent of worker timing.
+``ordered=False`` observes opportunistically (lowest latency, trajectory
+then depends on arrival order; checkpoints remain self-consistent).
+"""
+from __future__ import annotations
+
+import os
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import BOEngine, FANTASY_MODES
+from repro.core.tuner import (TunerResult, _front, _pool_fingerprint,
+                              _prologue_from_v, explore_prologue,
+                              frontier_subset_rows, round_record)
+
+from .checkpoint import (load_latest_validated, prune_snapshots,
+                         save_snapshot, snapshot_path)
+from .flowcache import CachedFlow, FlowDiskCache
+from .pool import FlowPool
+
+__all__ = ["service_tuner"]
+
+
+
+def service_tuner(
+    space,
+    pool_idx: np.ndarray,
+    flow,
+    *,
+    workload: str = "resnet50",
+    T: int = 40,
+    q: int = 1,
+    fantasy: str = "mean",
+    min_done: int = 1,
+    ordered: bool = True,
+    max_workers: int | None = None,
+    executor="process",
+    n: int = 30,
+    mu: float = 0.1,
+    b: int = 20,
+    v_th: float = 0.07,
+    s_frontiers: int = 10,
+    frontier_subset: int = 512,
+    gp_steps: int = 150,
+    key: jax.Array | None = None,
+    reference_front: np.ndarray | None = None,
+    reuse_icd_trials: bool = True,
+    weights: np.ndarray | None = None,
+    incremental: bool = True,
+    warm_start: bool | None = None,
+    warm_steps: int | None = None,
+    drift_tol: float = 1.0,
+    pool_chunk: int | str | None = None,
+    bucket: int | None = None,
+    cache_dir: str | None = None,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
+    verbose: bool = False,
+    _kill_after: int | None = None,
+) -> TunerResult:
+    """Run the exploration service; returns ``soc_tuner``'s result layout.
+
+    ``T`` = BO-phase flow-evaluation budget; ``q`` = max concurrent
+    evaluations in flight; ``min_done`` = completions to wait for before the
+    next refill (1 = fully async, ``q`` = synchronous round barrier).
+    ``executor`` ∈ {"process", "thread", "inline"} or an Executor instance;
+    ``max_workers`` defaults to ``q``. ``cache_dir`` attaches the on-disk
+    flow cache; ``checkpoint_dir``/``resume`` make the run restartable (see
+    module docstring). ``incremental`` defaults to True — the engine the
+    service is built for; q>1 requires it. ``bucket`` overrides the engine's
+    jit-cache pad bucket (larger buckets = fewer recompiles on long runs).
+    ``_kill_after`` is a test hook: SIGKILL this process right after the
+    checkpoint that covers that many BO evaluations (exercises crash-resume).
+    """
+    t0 = time.time()
+    if q < 1:
+        raise ValueError(f"q must be >= 1, got {q}")
+    if q > 1 and not incremental:
+        raise ValueError(
+            "q > 1 requires incremental=True: fantasy q-batch selection "
+            "runs on the incremental engine (checked up front so no flow "
+            "budget is spent on a run that cannot start)")
+    if min_done < 1 or min_done > q:
+        raise ValueError(f"min_done must be in [1, q={q}], got {min_done}")
+    if fantasy not in FANTASY_MODES:
+        raise ValueError(f"fantasy must be one of {FANTASY_MODES}")
+    key = jax.random.PRNGKey(0) if key is None else key
+    pool_idx = np.asarray(pool_idx)
+    N = pool_idx.shape[0]
+    # Everything that defines the trajectory must survive a resume intact;
+    # ``T`` is stored for reference but exempt from the resume guard —
+    # extending the budget is a legitimate ops action (it only clamps
+    # refill sizes near the end of the budget).
+    config = {"T": int(T), "q": int(q), "n": int(n), "b": int(b),
+              "mu": float(mu), "v_th": float(v_th), "gp_steps": int(gp_steps),
+              "s_frontiers": int(s_frontiers),
+              "frontier_subset": int(frontier_subset), "fantasy": fantasy,
+              "min_done": int(min_done), "ordered": bool(ordered),
+              "incremental": bool(incremental), "workload": str(workload),
+              "warm_start": warm_start, "warm_steps": warm_steps,
+              "drift_tol": float(drift_tol), "pool_chunk": pool_chunk,
+              "reuse_icd_trials": bool(reuse_icd_trials),
+              "weights": (None if weights is None else
+                          [float(x) for x in np.asarray(weights).reshape(-1)])}
+
+    snap = None
+    if resume and checkpoint_dir:
+        snap = load_latest_validated(
+            checkpoint_dir, driver="service_tuner",
+            pool=_pool_fingerprint(pool_idx),
+            config={k: v for k, v in config.items() if k != "T"})
+        if snap is not None and verbose:
+            print(f"[service] resuming at {int(snap['done'])}/{T} "
+                  "evaluations")
+
+    disk = FlowDiskCache(cache_dir) if cache_dir else None
+    # Prologue flow calls go through the disk cache too (a restart re-pays
+    # nothing even without a checkpoint); the pool consults it per pick.
+    pro_flow = flow if disk is None else CachedFlow(flow, disk, workload)
+    if snap is None:
+        key, v, pruned, pool_icd, evaluated, y = explore_prologue(
+            space, pool_idx, pro_flow, key, n=n, mu=mu, b=b, v_th=v_th,
+            reuse_icd_trials=reuse_icd_trials)
+    else:
+        v = np.asarray(snap["v"])
+        pruned, pool_icd = _prologue_from_v(space, pool_idx, v, mu=mu, b=b,
+                                            v_th=v_th)
+        evaluated = [int(r) for r in snap["evaluated"]]
+        y = np.asarray(snap["y"], np.float32)
+        key = jnp.asarray(snap["key"])
+
+    w = None if weights is None else jnp.asarray(weights, jnp.float32)
+    engine_kw = dict(incremental=incremental, warm_start=warm_start,
+                     gp_steps=gp_steps, warm_steps=warm_steps,
+                     drift_tol=drift_tol, s_frontiers=s_frontiers,
+                     weights=w, pool_chunk=pool_chunk)
+    if bucket is not None:
+        engine_kw["bucket"] = int(bucket)
+    engine = BOEngine(pool_icd, **engine_kw)
+    if snap is None:
+        engine.observe(evaluated, y)
+    else:
+        engine.load_state_dict(snap["engine"])
+
+    history: list[dict] = [] if snap is None else list(snap["history"])
+    done = 0 if snap is None else int(snap["done"])
+    t_round = time.time()
+
+    def log_round(i: int) -> None:
+        nonlocal t_round
+        now = time.time()
+        rec = round_record(y, len(evaluated), i, reference_front,
+                           wall_s=now - t_round)
+        t_round = now
+        history.append(rec)
+        if verbose:
+            print(f"[service] eval {i:4d} evals={rec['evaluations']:4d} "
+                  f"front={rec['pareto_size']:3d}"
+                  + (f" adrs={rec['adrs']:.4f}" if "adrs" in rec else ""))
+
+    if snap is None:
+        log_round(0)
+
+    fpool = FlowPool(flow, workload=workload,
+                     max_workers=q if max_workers is None else max_workers,
+                     executor=executor, cache=disk)
+    pending: list[tuple[int, int]] = []  # (ticket, pool row), ticket order
+    try:
+        if snap is not None:  # re-dispatch what was in flight at the kill
+            for r in (int(r) for r in snap["pending"]):
+                pending.append((fpool.submit(r, pool_idx[r]), r))
+
+        while done < T or pending:
+            want = min(q - len(pending), T - done - len(pending))
+            if want > 0:
+                key, k_fit, k_acq, k_sub = jax.random.split(key, 4)
+                del k_fit  # reserved slot — keeps the schedule seed-stable
+                sub = frontier_subset_rows(k_sub, N, frontier_subset)
+                picks = engine.select_q(
+                    k_acq, want, sub_rows=sub,
+                    pending=[r for _, r in pending], fantasy=fantasy)
+                for p in picks:
+                    pending.append((fpool.submit(p, pool_idx[p]), p))
+            results = fpool.drain(min_done=min(min_done, len(pending)),
+                                  ordered=ordered)
+            for t, row, y_row in results:
+                engine.observe([row], y_row[None])
+                evaluated.append(int(row))
+                y = np.concatenate([y, np.asarray(y_row, y.dtype)[None]], 0)
+                pending.remove((t, row))
+                done += 1
+                log_round(done)
+            if checkpoint_dir and results and \
+                    (done % checkpoint_every == 0 or done >= T):
+                save_snapshot(snapshot_path(checkpoint_dir, done), {
+                    "driver": "service_tuner", "done": done,
+                    "pool": _pool_fingerprint(pool_idx), "config": config,
+                    "key": np.asarray(key), "v": np.asarray(v),
+                    "evaluated": np.asarray(evaluated, np.int64), "y": y,
+                    "history": history,
+                    "pending": np.asarray([r for _, r in pending], np.int64),
+                    "engine": engine.state_dict()})
+                prune_snapshots(checkpoint_dir)
+                if _kill_after is not None and done >= _kill_after:
+                    os.kill(os.getpid(), signal.SIGKILL)
+    finally:
+        fpool.close()
+
+    front = _front(y)
+    rows = np.asarray(evaluated)
+    stats = engine.stats.as_dict()
+    stats["service"] = {
+        "pool_dispatched": fpool.dispatched,
+        "pool_cache_hits": fpool.cache_hits,
+        **({"disk": {"hits": disk.hits, "misses": disk.misses,
+                     "puts": disk.puts}} if disk is not None else {}),
+    }
+    return TunerResult(
+        space=pruned, v=np.asarray(v), evaluated_rows=rows, y=y,
+        pareto_rows=rows[front], pareto_y=y[front], history=history,
+        wall_s=time.time() - t0, engine_stats=stats)

@@ -3,12 +3,12 @@ from .model import (soc_metrics, soc_metrics_multi, decode_design,
                     area_breakdown, CONST, FEATI)
 from .simplified import simplified_metrics
 from .workloads import WORKLOADS, get_workload, from_arch_config, pad_workloads
-from .flow import VLSIFlow, SimplifiedFlow
+from .flow import VLSIFlow, SimplifiedFlow, DelayedFlow
 
 __all__ = [
     "soc_metrics", "soc_metrics_multi", "decode_design", "area_breakdown",
     "CONST", "FEATI",
     "simplified_metrics", "WORKLOADS", "get_workload", "from_arch_config",
     "pad_workloads",
-    "VLSIFlow", "SimplifiedFlow",
+    "VLSIFlow", "SimplifiedFlow", "DelayedFlow",
 ]

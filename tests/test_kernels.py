@@ -169,3 +169,27 @@ def test_systolic_eval_sweep(workload, n):
     want = soc_metrics(vals, layers)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------- pareto_count backend dispatch
+def test_pareto_backend_dispatch(monkeypatch):
+    """core.pareto.dominance_counts routes through the unified
+    kernels/backend dispatch point (same pattern as pairdist): auto resolves
+    to the bit-identical XLA form by default, ``use_kernel=True`` forces the
+    Pallas kernel, and REPRO_PARETO_BACKEND upgrades every auto call."""
+    from repro.core.pareto import dominance_counts
+    from repro.kernels import backend as kb
+
+    rng = np.random.default_rng(3)
+    y = jnp.asarray(rng.uniform(0.0, 1.0, (37, 3)), jnp.float32)
+    auto = np.asarray(dominance_counts(y))
+    assert (auto == np.asarray(kb.dominance_counts_xla(y))).all()
+    assert (auto == np.asarray(dominance_counts(y, use_kernel=True))).all()
+    assert (auto == np.asarray(pc_ref.dominance_counts(y))).all()
+    # default resolution is the XLA fidelity path on every platform
+    assert kb.resolve_pareto_backend("auto", y.shape[0]) == "xla"
+    monkeypatch.setenv("REPRO_PARETO_BACKEND", "pallas")
+    assert kb.resolve_pareto_backend("auto", y.shape[0]) == "pallas"
+    assert (np.asarray(dominance_counts(y)) == auto).all()
+    with pytest.raises(ValueError, match="pareto backend"):
+        kb.resolve_pareto_backend("bogus")

@@ -80,3 +80,13 @@ def test_kernel_matches_reference_dominance(y):
     ref = np.asarray(dominance_counts(jnp.asarray(y)))
     ker = np.asarray(ops.dominance_counts(jnp.asarray(y)))
     assert (ref == ker).all()
+
+
+def test_dominance_counts_backend_auto_matches_kernel():
+    """pareto_count routes through the unified kernels/backend dispatch —
+    auto (XLA fidelity form) and the forced Pallas kernel agree. The full
+    dispatch-table test lives in test_kernels.py (hypothesis-free)."""
+    rng = np.random.default_rng(3)
+    y = jnp.asarray(rng.uniform(0.0, 1.0, (37, 3)), jnp.float32)
+    assert (np.asarray(dominance_counts(y))
+            == np.asarray(dominance_counts(y, use_kernel=True))).all()

@@ -1,0 +1,85 @@
+"""Service smoke: crash-resume bit-exactness + disk-cache reuse (CI job).
+
+Drives the ``soc-service`` CLI the way an operator would and asserts the
+ISSUE 4 service guarantees end to end:
+
+1. an uninterrupted reference run;
+2. the same run SIGKILLed right after an early checkpoint, then resumed —
+   the final trajectory must match the reference **bit-exactly**;
+3. a re-run against the populated disk cache — it must dispatch ZERO flow
+   evaluations.
+
+Run from the repo root (a scratch directory is created and removed)::
+
+    PYTHONPATH=src python tools/service_smoke.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_cli(args: list[str], env: dict, check: bool = True):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.service.cli", *args],
+        check=check, env=env, cwd=ROOT)
+
+
+def main() -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    base = ["--workload", "resnet50", "--n-pool", "96", "--T", "4",
+            "--q", "2", "--min-done", "2", "--executor", "thread",
+            "--workers", "2", "--gp-steps", "15", "--n", "10", "--b", "8",
+            "--seed", "3", "--quiet"]
+    with tempfile.TemporaryDirectory() as td:
+        ref = os.path.join(td, "ref.json")
+        ck = os.path.join(td, "ckpt")
+        cache = os.path.join(td, "flowcache")
+        res = os.path.join(td, "res.json")
+        rerun = os.path.join(td, "rerun.json")
+
+        print("[smoke] uninterrupted reference run ...")
+        run_cli(base + ["--out", ref], env)
+
+        print("[smoke] SIGKILL after the 2-evaluation checkpoint ...")
+        killed = run_cli(base + ["--checkpoint-dir", ck, "--cache-dir",
+                                 cache, "--kill-after", "2",
+                                 "--out", os.path.join(td, "dead.json")],
+                         env, check=False)
+        assert killed.returncode == -signal.SIGKILL, killed.returncode
+        assert not os.path.exists(os.path.join(td, "dead.json")), \
+            "killed run must not have produced a result"
+
+        print("[smoke] resume from the latest snapshot ...")
+        run_cli(base + ["--checkpoint-dir", ck, "--cache-dir", cache,
+                        "--resume", "--out", res], env)
+        a, b = json.load(open(ref)), json.load(open(res))
+        assert a["evaluated_rows"] == b["evaluated_rows"], \
+            (a["evaluated_rows"], b["evaluated_rows"])
+        assert a["y"] == b["y"], "resumed metrics differ from reference"
+        print(f"[smoke] resume bit-exact over "
+              f"{len(a['evaluated_rows'])} evaluations")
+
+        print("[smoke] re-run against the populated disk cache ...")
+        run_cli(base + ["--cache-dir", cache, "--out", rerun], env)
+        c = json.load(open(rerun))
+        svc = c["engine_stats"]["service"]
+        assert svc["pool_dispatched"] == 0, svc
+        assert c["evaluated_rows"] == a["evaluated_rows"]
+        print(f"[smoke] cache reuse OK: 0 dispatches, "
+              f"{svc['pool_cache_hits']} pool cache hits")
+    print("[smoke] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
