@@ -124,6 +124,7 @@ class EngineStats:
     block_updates: int = 0   # rank-k trailing-block updates
     dispatches: int = 0      # top-level jitted program launches
     fantasy_steps: int = 0   # rank-1 fantasy appends (q-batch / pending)
+    frontier_resamples: int = 0  # O(q³) joint frontier draws (1/refill)
     last_drift: float = 0.0  # max |params − params_ref| at the last round
 
     def as_dict(self) -> dict:
@@ -301,18 +302,19 @@ def _score_chunk(params_ref: GPParams, beta, Vc, y_mean, y_std, ystar,
     return jnp.where(evalm_c, -jnp.inf, scores)
 
 
-def _select_chunks(params_ref: GPParams, L, V, x, yn, y_mean, y_std, pool_c,
-                   base, sub_rows, evalm_c, key, weights, *, s: int):
-    """Whole-pool argmax from the chunked V cache (one scenario).
+def _select_chunks(params_ref: GPParams, beta, ystar, V, y_mean, y_std,
+                   evalm_c, base, weights):
+    """Whole-pool argmax from the chunked V cache (one scenario) under a
+    precomputed whitened-target ``beta`` and frontier sample ``ystar``.
 
     Scans the chunks with an online running-max carry; cross-chunk ties keep
     the earlier chunk (strict ``>``) and in-chunk ``argmax`` keeps the first
     column, reproducing monolithic first-index-wins tie semantics exactly.
+    ``ystar`` is sampled by the caller (:func:`_frontier_ystar`) — the round
+    samples it ONCE and every fantasy step of the same refill re-scores
+    under that *frozen* sample (standard MES q-batch practice), so a chain
+    never re-pays the O(q³) joint frontier draw.
     """
-    nc, C, d = pool_c.shape
-    xq = pool_c.reshape(nc * C, d)[sub_rows]
-    beta = _train_beta(L, yn)
-    ystar = _frontier_ystar(params_ref, L, beta, x, xq, y_mean, y_std, key, s)
 
     def step(carry, inp):
         best_val, best_idx = carry
@@ -330,19 +332,32 @@ def _select_chunks(params_ref: GPParams, L, V, x, yn, y_mean, y_std, pool_c,
     return nxt
 
 
+def _beta_ystar(params_ref: GPParams, L, x, yn, y_mean, y_std, pool_c,
+                sub_rows, key, *, s: int):
+    """Whitened targets + ONE sampled frontier maximum for a round/refill."""
+    nc, C, d = pool_c.shape
+    xq = pool_c.reshape(nc * C, d)[sub_rows]
+    beta = _train_beta(L, yn)
+    ystar = _frontier_ystar(params_ref, L, beta, x, xq, y_mean, y_std, key, s)
+    return beta, ystar
+
+
 @functools.partial(jax.jit, static_argnames=("steps", "s", "s0", "select"),
                    donate_argnames=("state",))
 def _round_seq(state: EngineState, rows_pad, y_pad, mask, pool_c, evalm_c,
                base, sub_rows, key, force_refactor, drift_tol, weights, *,
                steps: int, s: int, s0: int, select: bool = True):
     """One full BO round as a single XLA dispatch: warm fit → drift check →
-    block-update-or-refactor (``lax.cond``) → chunk-scanned score + argmax.
+    block-update-or-refactor (``lax.cond``) → frontier sample →
+    chunk-scanned score + argmax.
 
     ``state`` is donated: the update scan writes the new L/V into the old
     buffers' storage, so the engine never holds two V caches live.
     ``select=False`` skips the scoring scan and returns ``nxt = -1`` — the
     q-batch path uses it when in-flight evaluations must be fantasized
-    before the round's first real pick is taken."""
+    before the round's first real pick is taken. The sampled frontier
+    ``ystar`` is returned either way: it is the ONE sample the whole
+    refill's fantasy chain re-scores under (frozen y*)."""
     nc, C, d = pool_c.shape
     pool_flat = pool_c.reshape(nc * C, d)
     x = pool_flat[rows_pad] + 10.0 * mask[:, None]  # pad_training's x rule
@@ -375,12 +390,14 @@ def _round_seq(state: EngineState, rows_pad, y_pad, mask, pool_c, evalm_c,
             lambda: _v_chunk_block(params_ref, L, Vc_old, x, pc, s0))
 
     _, V = jax.lax.scan(vstep, None, (state.V, pool_c))
+    beta, ystar = _beta_ystar(params_ref, L, x, yn, y_mean, y_std, pool_c,
+                              sub_rows, key, s=s)
     if select:
-        nxt = _select_chunks(params_ref, L, V, x, yn, y_mean, y_std, pool_c,
-                             base, sub_rows, evalm_c, key, weights, s=s)
+        nxt = _select_chunks(params_ref, beta, ystar, V, y_mean, y_std,
+                             evalm_c, base, weights)
     else:
         nxt = jnp.asarray(-1, jnp.int32)
-    return EngineState(params, params_ref, L, V), nxt, do_ref, drift
+    return EngineState(params, params_ref, L, V), nxt, do_ref, drift, ystar
 
 
 # ------------------------------------------------------- fantasy (q-batch)
@@ -396,13 +413,9 @@ def _liar_target(liar: str, mean_std, yn, mask):
     return jnp.max(jnp.where(pad, -jnp.inf, yn), axis=0)  # cl_max
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("s", "s0", "liar", "return_pick"),
-                   donate_argnames=("L", "V"))
-def _fantasy_step(params_ref: GPParams, L, V, rows_pad, yn, mask, pool_c,
-                  evalm_c, base, sub_rows, key, weights, y_mean, y_std, pick,
-                  pos, *, s: int, s0: int, liar: str, return_pick: bool):
-    """Append ONE fantasy observation and (optionally) re-score the pool.
+def _fantasy_append(params_ref: GPParams, L, V, rows_pad, yn, mask, pool_c,
+                    pick, pos, *, s0: int, liar: str):
+    """Append ONE fantasy observation to (L, V, rows, mask, yn).
 
     The picked pool row replaces the pad row at position ``pos``: its target
     is imputed under the *current* posterior (``_liar_target``), then L and
@@ -410,9 +423,7 @@ def _fantasy_step(params_ref: GPParams, L, V, rows_pad, yn, mask, pool_c,
     real round uses (``s0`` = bucket-floored count of real rows, so every
     fantasy row of the batch lives in the recomputed ``[s0, P)`` region and
     one compiled program serves all q-1 steps — ``pos``/``pick`` are traced).
-    ``return_pick=False`` skips the O(N) scoring scan (used while fantasizing
-    pending in-flight evaluations that are not the last before a new pick).
-    L and V are donated — the fantasy chain reuses one set of buffers.
+    Shared verbatim by the sequential and the vmapped batched fantasy steps.
     """
     nc, C, d = pool_c.shape
     pool_flat = pool_c.reshape(nc * C, d)
@@ -446,14 +457,76 @@ def _fantasy_step(params_ref: GPParams, L, V, rows_pad, yn, mask, pool_c,
             lambda _, inp: (None, _v_chunk_block(params_ref, L2, inp[0], x2,
                                                  inp[1], s0)),
             None, (V, pool_c))
-    evalm2 = evalm_c.at[ci, col].set(True)
+    return L2, V2, rows2, mask2, yn2
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("s0", "liar", "return_pick"),
+                   donate_argnames=("L", "V"))
+def _fantasy_step(params_ref: GPParams, L, V, rows_pad, yn, mask, pool_c,
+                  evalm_c, base, weights, y_mean, y_std, ystar, pick, pos, *,
+                  s0: int, liar: str, return_pick: bool):
+    """One sequential fantasy append (+ optional re-score under the frozen
+    ``ystar`` sampled by the refill's round — no per-step frontier resample).
+    ``return_pick=False`` skips the O(N) scoring scan (used while fantasizing
+    pending in-flight evaluations that are not the last before a new pick).
+    L and V are donated — the fantasy chain reuses one set of buffers.
+    """
+    nc, C, _ = pool_c.shape
+    L2, V2, rows2, mask2, yn2 = _fantasy_append(
+        params_ref, L, V, rows_pad, yn, mask, pool_c, pick, pos, s0=s0,
+        liar=liar)
+    evalm2 = evalm_c.at[pick // C, pick % C].set(True)
     if return_pick:
-        nxt = _select_chunks(params_ref, L2, V2, x2, yn2, y_mean, y_std,
-                             pool_c, base, sub_rows, evalm2, key, weights,
-                             s=s)
+        beta2 = _train_beta(L2, yn2)
+        nxt = _select_chunks(params_ref, beta2, ystar, V2, y_mean, y_std,
+                             evalm2, base, weights)
     else:
         nxt = jnp.asarray(-1, jnp.int32)
     return L2, V2, rows2, mask2, yn2, evalm2, nxt
+
+
+def _fantasy_batch_impl(params_ref: GPParams, L, V, rows_pad, yn, mask,
+                        pool_c, evalm_c, base, weights, y_mean, y_std, ystar,
+                        pick, pos, active, *, s0: int, liar: str,
+                        return_pick: bool):
+    """Batched fantasy step: every scenario appends (or skips) one fantasy
+    row in lockstep, then (optionally) re-scores under its frozen ``ystar``.
+
+    ``active`` [S] masks per-scenario no-op steps — scenarios whose pending
+    list is shorter than the fleet maximum are front-padded with inactive
+    steps, so one vmapped program serves ragged pending sets. An inactive
+    step leaves the scenario's state untouched (``jnp.where`` select) and,
+    when ``return_pick`` is set, scores the *unmodified* state — exactly the
+    pick the round itself would have returned.
+    """
+
+    def one(p, Li, Vi, rp, yni, mi, pci, emi, bi, wi, ym, ys, yst, pk, po,
+            act):
+        nc, C, _ = pci.shape
+        L2, V2, rows2, mask2, yn2 = _fantasy_append(
+            p, Li, Vi, rp, yni, mi, pci, pk, po, s0=s0, liar=liar)
+        em2 = emi.at[pk // C, pk % C].set(True)
+        sel = lambda a, b: jnp.where(act, a, b)
+        L2, V2 = sel(L2, Li), sel(V2, Vi)
+        rows2, mask2 = sel(rows2, rp), sel(mask2, mi)
+        yn2, em2 = sel(yn2, yni), sel(em2, emi)
+        if return_pick:
+            beta2 = _train_beta(L2, yn2)
+            nxt = _select_chunks(p, beta2, yst, V2, ym, ys, em2, bi, wi)
+        else:
+            nxt = jnp.asarray(-1, jnp.int32)
+        return L2, V2, rows2, mask2, yn2, em2, nxt
+
+    return jax.vmap(one)(params_ref, L, V, rows_pad, yn, mask, pool_c,
+                         evalm_c, base, weights, y_mean, y_std, ystar, pick,
+                         pos, active)
+
+
+# L/V donated: one set of buffers serves the whole batched fantasy chain.
+_fantasy_batch = jax.jit(_fantasy_batch_impl,
+                         static_argnames=("s0", "liar", "return_pick"),
+                         donate_argnames=("L", "V"))
 
 
 # --------------------------------------------------------------- fleet batch
@@ -472,14 +545,17 @@ def _phase1_batch_impl(params, params_ref, pool_flat, rows_pad, y_pad, mask,
 
 def _refactor_select_batch_impl(params, x, mask, pool_c, base, yn, y_mean,
                                 y_std, sub_rows, evalm_c, keys, weights, *,
-                                s: int):
+                                s: int, select: bool = True):
     def one(p, xi, mi, pci, bi, yni, ym, ys, sr, em, k, w):
         L = _chol_refactor(p, xi, mi)
         _, V = jax.lax.scan(
             lambda _, pc: (None, _v_chunk_refactor(p, L, xi, pc)), None, pci)
-        nxt = _select_chunks(p, L, V, xi, yni, ym, ys, pci, bi, sr, em, k, w,
-                             s=s)
-        return L, V, nxt
+        beta, ystar = _beta_ystar(p, L, xi, yni, ym, ys, pci, sr, k, s=s)
+        if select:
+            nxt = _select_chunks(p, beta, ystar, V, ym, ys, em, bi, w)
+        else:
+            nxt = jnp.asarray(-1, jnp.int32)
+        return L, V, nxt, ystar
 
     return jax.vmap(one)(params, x, mask, pool_c, base, yn, y_mean, y_std,
                          sub_rows, evalm_c, keys, weights)
@@ -487,16 +563,19 @@ def _refactor_select_batch_impl(params, x, mask, pool_c, base, yn, y_mean,
 
 def _update_select_batch_impl(params_ref, L, V, x, mask, pool_c, base, yn,
                               y_mean, y_std, sub_rows, evalm_c, keys, weights,
-                              *, s: int, s0: int):
+                              *, s: int, s0: int, select: bool = True):
     def one(p, Li, Vi, xi, mi, pci, bi, yni, ym, ys, sr, em, k, w):
         Ln = _chol_block(p, Li, xi, mi, s0)
         _, Vn = jax.lax.scan(
             lambda _, inp: (None, _v_chunk_block(p, Ln, inp[0], xi, inp[1],
                                                  s0)),
             None, (Vi, pci))
-        nxt = _select_chunks(p, Ln, Vn, xi, yni, ym, ys, pci, bi, sr, em, k,
-                             w, s=s)
-        return Ln, Vn, nxt
+        beta, ystar = _beta_ystar(p, Ln, xi, yni, ym, ys, pci, sr, k, s=s)
+        if select:
+            nxt = _select_chunks(p, beta, ystar, Vn, ym, ys, em, bi, w)
+        else:
+            nxt = jnp.asarray(-1, jnp.int32)
+        return Ln, Vn, nxt, ystar
 
     return jax.vmap(one)(params_ref, L, V, x, mask, pool_c, base, yn, y_mean,
                          y_std, sub_rows, evalm_c, keys, weights)
@@ -504,11 +583,11 @@ def _update_select_batch_impl(params_ref, L, V, x, mask, pool_c, base, yn,
 
 _phase1_batch = jax.jit(_phase1_batch_impl, static_argnames=("steps",))
 _refactor_select_batch = jax.jit(_refactor_select_batch_impl,
-                                 static_argnames=("s",))
+                                 static_argnames=("s", "select"))
 # L/V are donated: the batched block update writes into the old buckets'
 # storage (same no-second-V-copy property as the sequential _round_seq).
 _update_select_batch = jax.jit(_update_select_batch_impl,
-                               static_argnames=("s", "s0"),
+                               static_argnames=("s", "s0", "select"),
                                donate_argnames=("L", "V"))
 
 
@@ -712,6 +791,7 @@ class BOEngine(_EngineBase):
         self._P = 0                              # current padded train size
         self._n_at_last_select = 0
         self._last_batch = None                  # (rows_pad, y_pad, mask)
+        self._last_ystar = None                  # frozen y* of the last round
 
     # ------------------------------------------------------------- observe
     def observe(self, rows, y) -> None:
@@ -757,6 +837,11 @@ class BOEngine(_EngineBase):
         GP fit. ``pending`` lists pool rows whose real evaluations are still
         in flight (an async driver's previous picks): they are fantasized
         before any new pick, so a round never re-proposes or ignores them.
+        The sampled frontier maxima y* are drawn ONCE per call, by the round
+        phase, and **frozen across the whole fantasy chain** (standard MES
+        q-batch practice): every re-score reuses that sample, so a refill
+        pays exactly one O(q³) joint frontier draw however many picks or
+        pending rows it processes.
 
         ``q=1`` with no ``pending`` delegates to :meth:`select` and is
         therefore bit-identical to today's round. Fantasy rows only occupy
@@ -782,21 +867,22 @@ class BOEngine(_EngineBase):
         if len(set(self._rows)) + len(pending) + q > self.N:
             raise ValueError("select_q: pool has too few unevaluated rows "
                              f"for q={q} with {len(pending)} pending")
-        keys = jax.random.split(key, 1 + n_fant)
 
-        # Round phase: warm fit + update-or-refactor (+ first pick when there
-        # is nothing pending). `reserve` provisions pad rows for the whole
-        # fantasy chain so no append can trigger bucket growth mid-round.
-        pick0 = self._select_incremental(keys[0], sub_rows, reserve=n_fant,
+        # Round phase: warm fit + update-or-refactor + ONE frontier sample
+        # (+ first pick when there is nothing pending). `reserve` provisions
+        # pad rows for the whole fantasy chain so no append can trigger
+        # bucket growth mid-round; the sampled frontier y* is FROZEN across
+        # the chain — fantasy steps re-score under it instead of re-paying
+        # the O(q³) joint frontier draw per pick.
+        pick0 = self._select_incremental(key, sub_rows, reserve=n_fant,
                                          do_select=not pending)
         n = self._n_at_last_select
         state = self._state
+        ystar = self._last_ystar
         rows_pad, y_pad, mask = self._last_batch
         rows_pad = jnp.asarray(rows_pad)
         mask_j = jnp.asarray(mask)
         yn, y_mean, y_std = _standardize(jnp.asarray(y_pad), mask_j)
-        sub = (np.arange(self.N, dtype=np.int32) if sub_rows is None
-               else np.asarray(sub_rows, np.int32))
         weights = (jnp.ones((self.m,), jnp.float32) if self.weights is None
                    else self.weights)
         s0 = (n // self.bucket) * self.bucket
@@ -804,7 +890,7 @@ class BOEngine(_EngineBase):
 
         picks: list[int] = [] if pending else [int(pick0)]
         to_append = list(pending)
-        ki, appended = 1, 0
+        appended = 0
         try:
             while len(picks) < q:
                 if not to_append:
@@ -813,13 +899,10 @@ class BOEngine(_EngineBase):
                 need_pick = not to_append  # last append before a fresh pick
                 L, V, rows_pad, mask_j, yn, evalm, nxt = _fantasy_step(
                     state.params_ref, L, V, rows_pad, yn, mask_j,
-                    self._pool_c, evalm, self._base, jnp.asarray(sub),
-                    keys[ki], weights, y_mean, y_std,
-                    jnp.asarray(row, jnp.int32),
+                    self._pool_c, evalm, self._base, weights, y_mean, y_std,
+                    ystar, jnp.asarray(row, jnp.int32),
                     jnp.asarray(n + appended, jnp.int32),
-                    s=self.s_frontiers, s0=s0, liar=fantasy,
-                    return_pick=need_pick)
-                ki += 1
+                    s0=s0, liar=fantasy, return_pick=need_pick)
                 appended += 1
                 self.stats.fantasy_steps += 1
                 self.stats.dispatches += 1
@@ -885,7 +968,7 @@ class BOEngine(_EngineBase):
             (self._n_at_last_select // self.bucket) * self.bucket
         state = self._alloc_state(params0, P, first or grew)
 
-        state, nxt, did_ref, drift = _round_seq(
+        state, nxt, did_ref, drift, ystar = _round_seq(
             state, rows_pad, y_pad, mask, self._pool_c, self._evalm_chunks(),
             self._base, jnp.asarray(sub), key, bool(first or grew),
             self.drift_tol, weights, steps=steps, s=self.s_frontiers, s0=s0,
@@ -895,8 +978,10 @@ class BOEngine(_EngineBase):
         self._P = P
         self._n_at_last_select = n
         self._last_batch = (rows_pad, y_pad, mask)
+        self._last_ystar = ystar
         self.stats.rounds += 1
         self.stats.dispatches += 1
+        self.stats.frontier_resamples += 1
         self.stats.last_drift = float(drift)
         if bool(did_ref):
             self.stats.refactors += 1
@@ -1042,6 +1127,8 @@ class BatchedBOEngine(_EngineBase):
         self._last_params = None                 # exact-path warm start
         self._P = 0
         self._n_at_last_select = 0               # min over scenarios
+        self._last_batch = None                  # [S]-stacked padded batch
+        self._last_ystar = None                  # frozen y* [S, s, m]
 
     @property
     def m(self) -> int:
@@ -1069,13 +1156,16 @@ class BatchedBOEngine(_EngineBase):
     # ------------------------------------------------------------- observe
     def observe(self, rows_per_scenario: Sequence, ys_per_scenario: Sequence
                 ) -> None:
-        """Append per-scenario evaluations (lists of rows / [k,m] metrics)."""
+        """Append per-scenario evaluations (lists of rows / [k,m] metrics).
+        A scenario's entry may be empty (async fleets drain unevenly)."""
         if len(rows_per_scenario) != self.S or len(ys_per_scenario) != self.S:
             raise ValueError(f"expected {self.S} per-scenario entries")
         scat_s, scat_r = [], []
         for si, (rows, y) in enumerate(zip(rows_per_scenario,
                                            ys_per_scenario)):
             rows = [int(r) for r in np.asarray(rows).reshape(-1)]
+            if not rows:
+                continue
             y = np.atleast_2d(np.asarray(y, np.float32))
             self._rows[si].extend(rows)
             self._ys[si] = (y if self._ys[si] is None
@@ -1098,6 +1188,122 @@ class BatchedBOEngine(_EngineBase):
         if self.incremental:
             return self._select_incremental(keys, sub_rows)
         return self._select_exact(keys, sub_rows)
+
+    def select_q(self, keys, q: int = 1, sub_rows=None, *,
+                 pending: Sequence[Sequence[int]] | None = None,
+                 fantasy: str = "mean") -> np.ndarray:
+        """Select ``q`` distinct candidates per scenario in one vmapped
+        round via fantasy updates — the fleet twin of
+        :meth:`BOEngine.select_q`. Returns an ``[S, q]`` int array.
+
+        ``pending`` is a per-scenario sequence of row lists (in-flight
+        evaluations); the lists may be ragged — shorter scenarios are
+        front-padded with masked no-op steps so ONE compiled program serves
+        the whole fleet. Every scenario's pending rows are fantasized before
+        its new picks, and the frontier y* sampled by the round phase is
+        frozen across the whole chain (one O(q³) joint draw per scenario per
+        refill). ``q=1`` with nothing pending anywhere delegates to
+        :meth:`select` and is bitwise-identical to today's batched round.
+
+        Capacity: the fleet refill size is shared, so a scenario whose
+        unevaluated rows run out mid-chain returns arbitrary (possibly
+        repeated) picks for the surplus — numerically harmless (fantasy
+        rows live in the recomputed pad region either way), but the caller
+        must consume at most ``N - #evaluated - #pending`` fresh picks per
+        scenario. The fleet service clamps exactly so and retires saturated
+        scenarios; direct callers own the same responsibility (the
+        sequential :meth:`BOEngine.select_q`, whose q picks are all
+        consumed, keeps its strict capacity error instead).
+        """
+        pending = ([[] for _ in range(self.S)] if pending is None
+                   else [[int(r) for r in p] for p in pending])
+        if len(pending) != self.S:
+            raise ValueError(f"select_q: pending must have {self.S} "
+                             f"per-scenario entries, got {len(pending)}")
+        if q < 1:
+            raise ValueError(f"select_q: q must be >= 1, got {q}")
+        if fantasy not in FANTASY_MODES:
+            raise ValueError(f"select_q: fantasy must be one of "
+                             f"{FANTASY_MODES}, got {fantasy!r}")
+        if q == 1 and not any(pending):
+            return np.asarray(self.select(keys, sub_rows)).reshape(
+                self.S, 1)
+        if not self.incremental:
+            raise ValueError(
+                "q-batch / pending fantasy selection requires "
+                "incremental=True: fantasy appends reuse the incremental "
+                "engine's trailing Cholesky + V-cache updates")
+        if any(y is None for y in self._ys):
+            raise RuntimeError("select_q() before observe(): nothing to fit")
+        for si in range(self.S):
+            if len(set(self._rows[si])) + len(pending[si]) > self.N:
+                raise ValueError(
+                    f"select_q: scenario {si}'s evaluated + pending rows "
+                    f"exceed the pool ({len(pending[si])} pending, pool "
+                    f"{self.N}) — pending must be unevaluated pool rows")
+        k_max = max(len(p) for p in pending)
+        n_fant = k_max + q - 1
+
+        # Round phase: batched warm fit + update-or-refactor + ONE frontier
+        # sample per scenario (frozen across the chain). ``reserve``
+        # provisions pad rows for the longest chain fleet-wide.
+        picks0 = self._select_incremental(keys, sub_rows, reserve=n_fant,
+                                          do_select=(k_max == 0))
+        state = self._state
+        ystar = self._last_ystar
+        rows_pad, y_pad, mask = self._last_batch
+        rows_pad = jnp.asarray(rows_pad)
+        mask_j = jnp.asarray(mask)
+        yn, y_mean, y_std = jax.vmap(_standardize)(jnp.asarray(y_pad), mask_j)
+        weights = (jnp.ones((self.S, self.m), jnp.float32)
+                   if self.weights is None else self.weights)
+        s0 = (self._n_at_last_select // self.bucket) * self.bucket
+        L, V, evalm = state.L, state.V, self._evalm_chunks()
+
+        # Per-scenario chains, front-padded to the fleet-wide max: inactive
+        # steps leave a scenario untouched, so its first pick lands on the
+        # same step for every scenario and the fleet stays in lockstep.
+        chains = [[None] * (k_max - len(p)) + list(p) for p in pending]
+        picks: list[list[int]] = ([[] for _ in range(self.S)] if k_max
+                                  else [[int(x)] for x in picks0])
+        ns = np.asarray([len(r) for r in self._rows], np.int64)
+        appended = np.zeros(self.S, np.int64)
+        try:
+            for step in range(k_max + q - 1):
+                if step < k_max:
+                    rows_step = [chains[si][step] for si in range(self.S)]
+                else:
+                    rows_step = [picks[si][-1] for si in range(self.S)]
+                active = np.asarray([r is not None for r in rows_step])
+                rows_arr = np.asarray(
+                    [0 if r is None else int(r) for r in rows_step], np.int32)
+                pos = (ns + appended).astype(np.int32)
+                need_pick = step >= k_max - 1
+                L, V, rows_pad, mask_j, yn, evalm, nxt = self._dispatch(
+                    "fantasy", _fantasy_batch_impl, _fantasy_batch,
+                    {"s0": s0, "liar": fantasy, "return_pick": need_pick},
+                    state.params_ref, L, V, rows_pad, yn, mask_j,
+                    self._pool_c, evalm, self._base, weights, y_mean, y_std,
+                    ystar, jnp.asarray(rows_arr), jnp.asarray(pos),
+                    jnp.asarray(active))
+                appended += active
+                self.stats.fantasy_steps += int(active.sum())
+                self.stats.dispatches += 1
+                if need_pick:
+                    nxt_np = np.asarray(nxt)
+                    for si in range(self.S):
+                        picks[si].append(int(nxt_np[si]))
+        except BaseException:
+            # The chain donated the live L/V buffers; drop to a cold rebuild
+            # (observations are host-side, nothing is lost) so the engine
+            # stays usable after the caller handles the error.
+            self._state = None
+            self._P = 0
+            raise
+        # Fantasy rows live in [s0, P) — exactly the region the next round's
+        # block update (or refactor) recomputes, so keeping them is sound.
+        self._state = state._replace(L=L, V=V)
+        return np.asarray(picks, np.int64)
 
     def _select_exact(self, keys, sub_rows) -> np.ndarray:
         n_max = max(len(r) for r in self._rows)
@@ -1130,9 +1336,16 @@ class BatchedBOEngine(_EngineBase):
         self._P = P
         return picks
 
-    def _select_incremental(self, keys, sub_rows) -> np.ndarray:
+    def _select_incremental(self, keys, sub_rows, *, reserve: int = 0,
+                            do_select: bool = True) -> np.ndarray:
+        """One batched incremental round. ``reserve`` extra pad rows are
+        provisioned beyond the fleet-wide max train size so a following
+        fantasy chain never triggers bucket growth mid-round;
+        ``do_select=False`` runs fit + factorization + frontier sampling but
+        skips the scoring scan (returns -1 picks)."""
         n_max = max(len(r) for r in self._rows)
-        P = n_max + (-n_max) % self.bucket
+        P = n_max + reserve
+        P = P + (-P) % self.bucket
         grew = P != self._P
         first = self._state is None
         padded = [BOEngine._padded_batch(self._rows[si], self._ys[si], P)
@@ -1161,18 +1374,20 @@ class BatchedBOEngine(_EngineBase):
             (self._n_at_last_select // self.bucket) * self.bucket
         do_ref = first or grew or s0 <= 0 or max_drift > self.drift_tol
         if do_ref:
-            L, V, picks = self._dispatch(
+            L, V, picks, ystar = self._dispatch(
                 "refactor_select", _refactor_select_batch_impl,
-                _refactor_select_batch, {"s": self.s_frontiers},
+                _refactor_select_batch,
+                {"s": self.s_frontiers, "select": do_select},
                 params, x, jnp.asarray(mask), self._pool_c, self._base, yn,
                 y_mean, y_std, jnp.asarray(sub), self._evalm_chunks(),
                 jnp.asarray(keys), weights)
             params_ref = params
             self.stats.refactors += 1
         else:
-            L, V, picks = self._dispatch(
+            L, V, picks, ystar = self._dispatch(
                 "update_select", _update_select_batch_impl,
-                _update_select_batch, {"s": self.s_frontiers, "s0": s0},
+                _update_select_batch,
+                {"s": self.s_frontiers, "s0": s0, "select": do_select},
                 state.params_ref, state.L, state.V, x, jnp.asarray(mask),
                 self._pool_c, self._base, yn, y_mean, y_std,
                 jnp.asarray(sub), self._evalm_chunks(), jnp.asarray(keys),
@@ -1183,8 +1398,11 @@ class BatchedBOEngine(_EngineBase):
         self._state = EngineState(params, params_ref, L, V)
         self._P = P
         self._n_at_last_select = min(len(r) for r in self._rows)
+        self._last_batch = (rows_pad, y_pad, mask)
+        self._last_ystar = ystar
         self.stats.rounds += 1
         self.stats.dispatches += 2
+        self.stats.frontier_resamples += 1
         self.stats.last_drift = max_drift
         return np.asarray(picks)
 

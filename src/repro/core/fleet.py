@@ -53,7 +53,8 @@ from .space import DesignSpace
 from .tuner import (TunerResult, frontier_subset_rows, icd_trial_rows,
                     merge_trial_evals, round_record)
 
-__all__ = ["FleetScenario", "FleetResult", "FlowEvalCache", "fleet_tuner"]
+__all__ = ["FleetScenario", "FleetResult", "FlowEvalCache", "fleet_tuner",
+           "fleet_prologue"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,10 +90,18 @@ class FlowEvalCache:
     (``disk_hits`` counts how many flushes resolved that way) and every
     computed result is written back atomically — so concurrent fleets,
     service runs and restarts share one evaluation corpus.
+
+    ``flow_factory`` (``workload -> flow callable``, optional) replaces the
+    built-in surrogate dispatch: misses are evaluated by calling the
+    workload's flow on the raw design-index rows instead of
+    ``soc_metrics``/``soc_metrics_multi`` directly. This is how a *real*
+    (or mocked-latency) flow is plugged under ``fleet_tuner`` — e.g. the
+    synchronous baseline of the fleet-service benchmark. The default
+    (``None``) keeps the historical fused dispatch bit-for-bit.
     """
 
     def __init__(self, space: DesignSpace, pool_idx: np.ndarray,
-                 workloads: Sequence[str], disk=None):
+                 workloads: Sequence[str], disk=None, flow_factory=None):
         from repro.soc.workloads import get_workload
 
         self.space = space
@@ -106,11 +115,36 @@ class FlowEvalCache:
 
             disk = FlowDiskCache(disk)
         self.disk = disk
+        self._flows = (None if flow_factory is None
+                       else {w: flow_factory(w) for w in self.layers})
         self.hits = 0
         self.misses = 0
         self.disk_hits = 0
         self.flow_calls = 0
         self.evaluated = 0
+        self.peek_hits = 0
+        self.peek_misses = 0
+
+    # ------------------------------------------------------- external feed
+    def peek(self, workload: str, row) -> np.ndarray | None:
+        """In-memory-only lookup of one pool row (no disk IO, no dispatch).
+        The fleet service consults this before submitting a pick to its
+        worker pool. Counted separately (``peek_hits``/``peek_misses``) —
+        a probe-before-dispatch is not a flush-level cache miss, so the
+        shared ``hits``/``misses`` stats keep measuring flush behavior."""
+        y = self._store[workload].get(int(row))
+        if y is None:
+            self.peek_misses += 1
+        else:
+            self.peek_hits += 1
+        return y
+
+    def store(self, workload: str, row, y) -> None:
+        """Record an externally evaluated result (the fleet service feeds
+        worker-pool completions back so later picks of ANY scenario hit)."""
+        if int(row) not in self._store[workload]:
+            self.evaluated += 1
+        self._store[workload][int(row)] = np.asarray(y)
 
     @property
     def requests(self) -> int:
@@ -175,6 +209,19 @@ class FlowEvalCache:
                     del pending[wl]
         if not pending:
             return
+        if self._flows is not None:
+            # Injected flows: one call per pending workload (the flow owns
+            # its own batching/latency — this is the real-flow seam).
+            for wl, rows in pending.items():
+                self.flow_calls += 1
+                self.evaluated += len(rows)
+                y = np.atleast_2d(np.asarray(
+                    self._flows[wl](self.pool_idx[np.asarray(rows)])))
+                for r, yr in zip(rows, y):
+                    self._store[wl][r] = yr
+                    if self.disk is not None:
+                        self.disk.put(wl, self.pool_idx[r], yr)
+            return
         self.flow_calls += 1
         self.evaluated += sum(len(r) for r in pending.values())
         if len(pending) == 1:
@@ -237,13 +284,79 @@ class _ScenarioState:
 
 
 def _log_round(st: _ScenarioState, i: int, label: str,
-               reference_front: np.ndarray | None, verbose: bool) -> None:
-    rec = round_record(st.y, len(st.evaluated), i, reference_front)
+               reference_front: np.ndarray | None, verbose: bool,
+               tag: str = "fleet", wall_s: float | None = None) -> None:
+    rec = round_record(st.y, len(st.evaluated), i, reference_front,
+                       wall_s=wall_s)
     st.history.append(rec)
     if verbose:
-        print(f"[fleet] {label:<24s} round {i:3d} evals={rec['evaluations']:4d} "
+        print(f"[{tag}] {label:<24s} round {i:3d} evals={rec['evaluations']:4d} "
               f"front={rec['pareto_size']:3d}"
               + (f" adrs={rec['adrs']:.4f}" if "adrs" in rec else ""))
+
+
+def fleet_prologue(space: DesignSpace, pool_idx: np.ndarray,
+                   scenarios: Sequence[FleetScenario], cache: FlowEvalCache,
+                   *, n: int, mu: float, b: int, v_th: float,
+                   reuse_icd_trials: bool, reference_fronts: dict,
+                   verbose: bool, snap: dict | None = None,
+                   tag: str = "fleet") -> "list[_ScenarioState]":
+    """Alg. 3 lines 1-4 for every scenario: ICD trials (one fused flush),
+    importance + pruning + TED init, seed evaluations. The key schedule
+    matches ``soc_tuner`` exactly, so a fleet-of-one consumes the PRNG
+    stream identically to the sequential driver. On resume (``snap``) the
+    flow-dependent pieces are restored from the snapshot and only the
+    deterministic ``soc_init`` transform is replayed. Shared by
+    :func:`fleet_tuner` and the async fleet service
+    (``repro.service.fleet_runner``) — the two drivers' prologues can never
+    drift apart."""
+    states: list[_ScenarioState] = []
+    if snap is None:
+        trial_sets: list[np.ndarray] = []
+        for sc in scenarios:
+            trial_rows, key = icd_trial_rows(jax.random.PRNGKey(sc.seed),
+                                             pool_idx.shape[0], n)
+            trial_sets.append(trial_rows)
+            states.append(_ScenarioState(
+                key=key, v=np.zeros(space.d), pruned=space,
+                pool_icd=jnp.zeros(()), evaluated=[], y=np.zeros((0, 3)),
+                weights=(None if tuple(sc.weights) == (1.0, 1.0, 1.0)
+                         else jnp.asarray(sc.weights, jnp.float32)),
+                history=[]))
+        trial_ys = cache.evaluate_many(
+            [(sc.workload, rows) for sc, rows in zip(scenarios, trial_sets)])
+
+        init_reqs: list[tuple[str, np.ndarray]] = []
+        for sc, st, trial_rows, trial_y in zip(scenarios, states, trial_sets,
+                                               trial_ys):
+            st.v = icd_from_data(space, pool_idx[trial_rows], trial_y)
+            init_rows, st.pruned, pool_icd = soc_init(
+                space, pool_idx, st.v, v_th=v_th, b=b, mu=mu)
+            st.pool_icd = jnp.asarray(pool_icd, jnp.float32)
+            st.evaluated = list(dict.fromkeys(int(r) for r in init_rows))
+            init_reqs.append((sc.workload, np.asarray(st.evaluated)))
+        init_ys = cache.evaluate_many(init_reqs)
+
+        for sc, st, trial_rows, trial_y, init_y in zip(
+                scenarios, states, trial_sets, trial_ys, init_ys):
+            st.evaluated, st.y = merge_trial_evals(
+                st.evaluated, init_y, trial_rows, trial_y, reuse_icd_trials)
+            _log_round(st, 0, sc.label, reference_fronts.get(sc.workload),
+                       verbose, tag)
+    else:
+        for si, sc in enumerate(scenarios):
+            v = np.asarray(snap["vs"][str(si)])
+            _, pruned, pool_icd = soc_init(space, pool_idx, v, v_th=v_th,
+                                           b=b, mu=mu)
+            states.append(_ScenarioState(
+                key=jnp.asarray(snap["keys"][si]), v=v, pruned=pruned,
+                pool_icd=jnp.asarray(pool_icd, jnp.float32),
+                evaluated=[int(r) for r in snap["evaluated"][str(si)]],
+                y=np.asarray(snap["ys"][str(si)]),
+                weights=(None if tuple(sc.weights) == (1.0, 1.0, 1.0)
+                         else jnp.asarray(sc.weights, jnp.float32)),
+                history=list(snap["histories"][str(si)])))
+    return states
 
 
 def fleet_tuner(
@@ -269,6 +382,7 @@ def fleet_tuner(
     mesh=None,
     mesh_axis: str | None = None,
     disk_cache=None,
+    flow_factory=None,
     checkpoint_dir: str | None = None,
     checkpoint_every: int = 1,
     resume: bool = False,
@@ -300,7 +414,12 @@ def fleet_tuner(
 
     ``disk_cache`` (path or ``repro.service.flowcache.FlowDiskCache``) backs
     the in-memory evaluation cache with the content-addressed on-disk store
-    shared across fleets, service runs and restarts. ``checkpoint_dir`` /
+    shared across fleets, service runs and restarts. ``flow_factory``
+    (``workload -> flow``) plugs a real/mocked flow under the evaluation
+    cache instead of the built-in surrogate dispatch (see
+    :class:`FlowEvalCache`) — the asynchronous twin of this driver is
+    ``repro.service.fleet_service``, which overlaps those flow calls on a
+    concurrent worker pool. ``checkpoint_dir`` /
     ``checkpoint_every`` / ``resume`` snapshot the full fleet state (batched
     engine, per-scenario keys/history) each round and continue a killed run
     bit-exactly — the resumed prologue is rebuilt from the checkpointed
@@ -312,7 +431,7 @@ def fleet_tuner(
     N = pool_idx.shape[0]
     reference_fronts = reference_fronts or {}
     cache = FlowEvalCache(space, pool_idx, [sc.workload for sc in scenarios],
-                          disk=disk_cache)
+                          disk=disk_cache, flow_factory=flow_factory)
 
     config = {"n": int(n), "b": int(b), "mu": float(mu),
               "v_th": float(v_th), "gp_steps": int(gp_steps),
@@ -342,55 +461,11 @@ def fleet_tuner(
                              f"scenarios {snap['scenarios']} — resume "
                              "requires the identical fleet")
 
-    # ---- Alg. 3 lines 1-2 per scenario: ICD trials (one fused flush), then
-    # importance + pruning + TED init. Key schedule matches soc_tuner
-    # exactly. On resume the flow-dependent pieces are restored from the
-    # snapshot and only the deterministic soc_init transform is replayed.
-    states: list[_ScenarioState] = []
-    if snap is None:
-        trial_sets: list[np.ndarray] = []
-        for sc in scenarios:
-            trial_rows, key = icd_trial_rows(jax.random.PRNGKey(sc.seed), N, n)
-            trial_sets.append(trial_rows)
-            states.append(_ScenarioState(
-                key=key, v=np.zeros(space.d), pruned=space,
-                pool_icd=jnp.zeros(()), evaluated=[], y=np.zeros((0, 3)),
-                weights=(None if tuple(sc.weights) == (1.0, 1.0, 1.0)
-                         else jnp.asarray(sc.weights, jnp.float32)),
-                history=[]))
-        trial_ys = cache.evaluate_many(
-            [(sc.workload, rows) for sc, rows in zip(scenarios, trial_sets)])
-
-        init_reqs: list[tuple[str, np.ndarray]] = []
-        for sc, st, trial_rows, trial_y in zip(scenarios, states, trial_sets,
-                                               trial_ys):
-            st.v = icd_from_data(space, pool_idx[trial_rows], trial_y)
-            init_rows, st.pruned, pool_icd = soc_init(
-                space, pool_idx, st.v, v_th=v_th, b=b, mu=mu)
-            st.pool_icd = jnp.asarray(pool_icd, jnp.float32)
-            st.evaluated = list(dict.fromkeys(int(r) for r in init_rows))
-            init_reqs.append((sc.workload, np.asarray(st.evaluated)))
-        init_ys = cache.evaluate_many(init_reqs)
-
-        for sc, st, trial_rows, trial_y, init_y in zip(
-                scenarios, states, trial_sets, trial_ys, init_ys):
-            st.evaluated, st.y = merge_trial_evals(
-                st.evaluated, init_y, trial_rows, trial_y, reuse_icd_trials)
-            _log_round(st, 0, sc.label, reference_fronts.get(sc.workload),
-                       verbose)
-    else:
-        for si, sc in enumerate(scenarios):
-            v = np.asarray(snap["vs"][str(si)])
-            _, pruned, pool_icd = soc_init(space, pool_idx, v, v_th=v_th,
-                                           b=b, mu=mu)
-            states.append(_ScenarioState(
-                key=jnp.asarray(snap["keys"][si]), v=v, pruned=pruned,
-                pool_icd=jnp.asarray(pool_icd, jnp.float32),
-                evaluated=[int(r) for r in snap["evaluated"][str(si)]],
-                y=np.asarray(snap["ys"][str(si)]),
-                weights=(None if tuple(sc.weights) == (1.0, 1.0, 1.0)
-                         else jnp.asarray(sc.weights, jnp.float32)),
-                history=list(snap["histories"][str(si)])))
+    # ---- Alg. 3 lines 1-4 per scenario (shared with the fleet service).
+    states = fleet_prologue(space, pool_idx, scenarios, cache, n=n, mu=mu,
+                            b=b, v_th=v_th, reuse_icd_trials=reuse_icd_trials,
+                            reference_fronts=reference_fronts,
+                            verbose=verbose, snap=snap)
 
     pool_icd_stack = jnp.stack([st.pool_icd for st in states])  # [S, N, d]
     any_weights = any(st.weights is not None for st in states)

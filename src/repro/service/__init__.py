@@ -6,29 +6,40 @@ exploration state in process memory, so a production deployment can neither
 parallelize flow evaluations nor survive a restart. This package is the
 missing deployment layer on top of the incremental BO engine:
 
-- ``runner``     :func:`service_tuner` — the async q-batch exploration loop:
-                 q candidates per round via fantasy updates
-                 (:meth:`repro.core.engine.BOEngine.select_q`), dispatched to
-                 a :class:`FlowPool` of concurrent workers, with completions
-                 fed back as they land (a round never waits for stragglers)
-                 and a checkpoint written every round.
-- ``pool``       :class:`FlowPool` — concurrent flow evaluation (process pool
-                 locally, pluggable executor), content-addressed dedup
-                 against the on-disk cache, in-order or opportunistic
-                 completion draining.
-- ``flowcache``  :class:`FlowDiskCache` — content-addressed, atomically
-                 written flow results keyed by (workload, design point);
-                 shared across fleet scenarios, service workers and runs.
-- ``checkpoint`` versioned atomic snapshot files; ``soc_tuner`` /
-                 ``fleet_tuner`` / ``service_tuner`` all write and resume
-                 from this one format.
-- ``cli``        the ``soc-service`` console driver.
+- ``runner``       :func:`service_tuner` — the async q-batch exploration
+                   loop: q candidates per round via fantasy updates
+                   (:meth:`repro.core.engine.BOEngine.select_q` — frontier
+                   y* frozen per refill), dispatched to a :class:`FlowPool`
+                   of concurrent workers, with completions fed back as they
+                   land (a round never waits for stragglers) and a
+                   checkpoint written every round.
+- ``fleet_runner`` :func:`fleet_service` — the multi-scenario twin: the
+                   whole fleet's picks go through ONE shared worker pool
+                   (cross-scenario in-flight + disk dedup) with per-scenario
+                   ticket-ordered exact-``min_done`` drains, so every
+                   scenario's trajectory is deterministic under any worker
+                   timing.
+- ``pool``         :class:`FlowPool` — concurrent flow evaluation (process
+                   pool locally, pluggable executor), per-submit
+                   workload/flow routing, in-flight + content-addressed
+                   on-disk dedup, in-order or opportunistic completion
+                   draining.
+- ``flowcache``    :class:`FlowDiskCache` — content-addressed, atomically
+                   written flow results keyed by (workload, design point);
+                   shared across fleet scenarios, service workers and runs;
+                   ``gc()`` evicts LRU entries to a byte/age budget.
+- ``checkpoint``   versioned atomic snapshot files; ``soc_tuner`` /
+                   ``fleet_tuner`` / ``service_tuner`` / ``fleet_service``
+                   all write and resume from this one format.
+- ``cli``          the ``soc-service`` console driver (``run`` / ``fleet`` /
+                   ``cache-gc`` verbs).
 
 See ``docs/service.md`` for the architecture, the checkpoint format, the
 cache layout and a worked async example.
 """
 from .checkpoint import (SNAPSHOT_VERSION, latest_snapshot, load_snapshot,
                          save_snapshot, snapshot_path)
+from .fleet_runner import fleet_service
 from .flowcache import CachedFlow, FlowDiskCache
 from .pool import FlowPool, InlineExecutor
 from .runner import service_tuner
@@ -38,5 +49,5 @@ __all__ = [
     "snapshot_path",
     "FlowDiskCache", "CachedFlow",
     "FlowPool", "InlineExecutor",
-    "service_tuner",
+    "service_tuner", "fleet_service",
 ]

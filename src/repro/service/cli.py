@@ -1,15 +1,27 @@
 """``soc-service`` — command-line driver for the exploration service.
 
-Runs a restartable, q-batch-parallel SoC exploration over a deterministic
-sampled pool. Typical lifecycle::
+Three verbs (a bare flag list keeps meaning the single-scenario run, so
+existing invocations are untouched):
 
-    # start (checkpoints every round, disk-cached evaluations)
-    soc-service --workload resnet50 --n-pool 1024 --T 40 --q 4 --workers 4 \\
-        --checkpoint-dir runs/r50/ckpt --cache-dir runs/flowcache \\
-        --out runs/r50/result.json
+``soc-service [run] --workload ...``
+    restartable q-batch exploration of ONE scenario (``service_tuner``)::
 
-    # after a crash / SIGKILL: continue bit-exactly from the last snapshot
-    soc-service ... --resume --out runs/r50/result.json
+        # start (checkpoints every round, disk-cached evaluations)
+        soc-service --workload resnet50 --n-pool 1024 --T 40 --q 4 \\
+            --workers 4 --checkpoint-dir runs/r50/ckpt \\
+            --cache-dir runs/flowcache --out runs/r50/result.json
+
+        # after a crash / SIGKILL: continue bit-exactly from the snapshot
+        soc-service ... --resume --out runs/r50/result.json
+
+``soc-service fleet --workloads resnet50,transformer --seeds 0,1 ...``
+    the async multi-scenario fleet (``fleet_service``): workloads × seeds
+    scenarios over ONE shared worker pool, per-scenario deterministic
+    trajectories, same checkpoint/resume story.
+
+``soc-service cache-gc --cache-dir ... [--max-bytes N] [--max-age-days D]``
+    LRU eviction for the content-addressed flow cache
+    (``FlowDiskCache.gc``).
 
 The same binary is the CI smoke driver: ``--kill-after K`` SIGKILLs the
 process right after the checkpoint covering K evaluations (crash
@@ -23,11 +35,13 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 
 import jax
 import numpy as np
 
-__all__ = ["main", "build_parser"]
+__all__ = ["main", "build_parser", "build_fleet_parser",
+           "build_cache_gc_parser"]
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -81,7 +95,149 @@ def build_parser() -> argparse.ArgumentParser:
     return p
 
 
+def build_fleet_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="soc-service fleet",
+        description="async multi-scenario exploration over one worker pool")
+    p.add_argument("--workloads", default="resnet50",
+                   help="comma-separated workload names")
+    p.add_argument("--seeds", default="0",
+                   help="comma-separated exploration seeds; scenarios = "
+                        "workloads x seeds")
+    p.add_argument("--n-pool", type=int, default=1024)
+    p.add_argument("--pool-seed", type=int, default=0,
+                   help="PRNG seed of the deterministic pool sample")
+    p.add_argument("--T", type=int, default=40,
+                   help="BO-phase flow-evaluation budget PER SCENARIO")
+    p.add_argument("--q", type=int, default=1,
+                   help="max concurrent evaluations in flight per scenario")
+    p.add_argument("--min-done", type=int, default=1,
+                   help="completions each scenario awaits per cycle "
+                        "(1 = fully async, q = per-scenario barrier)")
+    p.add_argument("--fantasy", default="mean",
+                   choices=("mean", "cl_min", "cl_max"))
+    p.add_argument("--workers", type=int, default=None,
+                   help="shared pool workers (default: q x scenarios, "
+                        "capped at the CPU count)")
+    p.add_argument("--executor", default="process",
+                   choices=("process", "thread", "inline"))
+    p.add_argument("--n", type=int, default=30)
+    p.add_argument("--b", type=int, default=20)
+    p.add_argument("--gp-steps", type=int, default=150)
+    p.add_argument("--bucket", type=int, default=None,
+                   help="engine pad bucket (bigger = fewer jit recompiles)")
+    p.add_argument("--pool-chunk", default=None,
+                   help="engine pool_chunk: int or 'auto'")
+    p.add_argument("--cache-dir", default=None,
+                   help="content-addressed on-disk flow cache root")
+    p.add_argument("--checkpoint-dir", default=None)
+    p.add_argument("--checkpoint-every", type=int, default=1)
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--mock-flow-delay", type=float, default=None,
+                   help="wrap every flow in a per-call sleep of this many "
+                        "seconds (mock of a real flow's latency)")
+    p.add_argument("--out", default=None,
+                   help="write per-scenario results as JSON here")
+    p.add_argument("--kill-after", type=int, default=None,
+                   help="test hook: SIGKILL right after the checkpoint "
+                        "covering this many TOTAL fleet evaluations")
+    p.add_argument("--quiet", action="store_true")
+    return p
+
+
+def build_cache_gc_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="soc-service cache-gc",
+        description="LRU eviction for the on-disk flow cache")
+    p.add_argument("--cache-dir", required=True)
+    p.add_argument("--max-bytes", type=int, default=None,
+                   help="evict LRU entries until the cache fits this budget")
+    p.add_argument("--max-age-days", type=float, default=None,
+                   help="evict entries unused for longer than this")
+    p.add_argument("--dry-run", action="store_true",
+                   help="report what would be evicted without deleting")
+    p.add_argument("--quiet", action="store_true")
+    return p
+
+
+def main_fleet(argv=None) -> int:
+    a = build_fleet_parser().parse_args(argv)
+    from repro.core import FleetScenario, make_space
+    from repro.soc import DelayedFlow, VLSIFlow
+    from .fleet_runner import fleet_service
+
+    space = make_space()
+    pool = np.asarray(space.sample(jax.random.PRNGKey(a.pool_seed), a.n_pool))
+    scenarios = [FleetScenario(wl.strip(), seed=int(s))
+                 for wl in a.workloads.split(",")
+                 for s in a.seeds.split(",")]
+    delay = a.mock_flow_delay
+    if delay is not None:
+        flow_factory = lambda wl: DelayedFlow(VLSIFlow(space, wl), delay)
+    else:
+        flow_factory = None
+    pool_chunk = a.pool_chunk
+    if pool_chunk not in (None, "auto"):
+        pool_chunk = int(pool_chunk)
+
+    fr = fleet_service(
+        space, pool, scenarios, T=a.T, q=a.q, min_done=a.min_done,
+        fantasy=a.fantasy, max_workers=a.workers, executor=a.executor,
+        n=a.n, b=a.b, gp_steps=a.gp_steps, bucket=a.bucket,
+        pool_chunk=pool_chunk, flow_factory=flow_factory,
+        cache_dir=a.cache_dir, checkpoint_dir=a.checkpoint_dir,
+        checkpoint_every=a.checkpoint_every, resume=a.resume,
+        verbose=not a.quiet, _kill_after=a.kill_after)
+
+    if not a.quiet:
+        for sc, res in zip(fr.scenarios, fr.results):
+            print(f"[fleet-svc] {sc.label}: {len(res.evaluated_rows)} "
+                  f"evaluations, {res.pareto_y.shape[0]} Pareto points")
+        print(f"[fleet-svc] {fr.cache.summary()}")
+        print(f"[fleet-svc] wall {fr.wall_s:.1f}s")
+    if a.out:
+        os.makedirs(os.path.dirname(os.path.abspath(a.out)), exist_ok=True)
+        with open(a.out, "w") as f:
+            json.dump({
+                "scenarios": {
+                    sc.label: {
+                        "evaluated_rows": [int(r)
+                                           for r in res.evaluated_rows],
+                        "y": np.asarray(res.y, np.float64).tolist(),
+                        "pareto_rows": [int(r) for r in res.pareto_rows],
+                        "history": res.history,
+                    } for sc, res in zip(fr.scenarios, fr.results)},
+                "engine_stats": fr.results[0].engine_stats,
+                "wall_s": fr.wall_s,
+            }, f, indent=2)
+        if not a.quiet:
+            print(f"[fleet-svc] result -> {a.out}")
+    return 0
+
+
+def main_cache_gc(argv=None) -> int:
+    a = build_cache_gc_parser().parse_args(argv)
+    from .flowcache import FlowDiskCache
+
+    cache = FlowDiskCache(a.cache_dir)
+    stats = cache.gc(max_bytes=a.max_bytes, max_age_days=a.max_age_days,
+                     dry_run=a.dry_run)
+    if not a.quiet:
+        verb = "would evict" if a.dry_run else "evicted"
+        print(f"[cache-gc] {a.cache_dir}: {verb} {stats['removed']}/"
+              f"{stats['scanned']} entries ({stats['removed_bytes']} bytes), "
+              f"{stats['kept']} kept ({stats['kept_bytes']} bytes)")
+    return 0
+
+
 def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "fleet":
+        return main_fleet(argv[1:])
+    if argv and argv[0] == "cache-gc":
+        return main_cache_gc(argv[1:])
+    if argv and argv[0] == "run":
+        argv = argv[1:]
     a = build_parser().parse_args(argv)
     from repro.core import make_space
     from repro.soc import DelayedFlow, VLSIFlow

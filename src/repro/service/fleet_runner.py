@@ -1,0 +1,353 @@
+"""The fleet exploration service: async q-batch BO across many scenarios.
+
+:func:`fleet_service` is ``fleet_tuner`` rebuilt for a production flow
+budget, the multi-scenario twin of :func:`repro.service.runner.service_tuner`:
+
+- per refill cycle it asks the **batched** incremental engine for up to ``q``
+  candidates per scenario via vmapped fantasy updates
+  (:meth:`repro.core.engine.BatchedBOEngine.select_q` — in-flight picks are
+  fantasized under per-scenario pending masks, the frontier y* is sampled
+  once per scenario per refill and frozen across the chain);
+- every scenario's picks are dispatched to ONE shared
+  :class:`~repro.service.pool.FlowPool`: concurrent workers serve the whole
+  fleet, identical in-flight design points are deduplicated across
+  scenarios, and the content-addressed disk cache (``cache_dir``) dedups
+  across runs and restarts;
+- completions are drained **per scenario, exactly ``min_done`` at a time, in
+  ticket order** (:meth:`FlowPool.collect`): each scenario's feed-back order
+  and batch size are pure functions of the driver's state, so every
+  scenario's trajectory is independent of worker timing — one shared worker
+  pool, per-scenario deterministic trajectories;
+- every cycle writes a versioned atomic checkpoint; a SIGKILL'd run resumed
+  with ``resume=True`` reproduces the uninterrupted fleet bit-exactly.
+
+With ``q=1``, ``min_done=1`` and the inline executor the loop degenerates to
+exactly ``fleet_tuner``'s synchronous batched round: a fleet of ONE is
+bit-identical, and larger fleets pick identical candidates with metrics
+equal to the last ulp (``fleet_tuner`` fuses distinct same-cycle picks into
+one batch-N flush while the pool dispatches per candidate; XLA batch-N vs
+batch-1 programs differ in the final bit — pinned by
+``tests/test_service.py``). ``T`` counts BO-phase flow evaluations **per
+scenario**, so budgets are comparable with ``fleet_tuner``'s round count.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import FANTASY_MODES, BatchedBOEngine
+from repro.core.fleet import (FleetResult, FlowEvalCache, _log_round,
+                              fleet_prologue)
+from repro.core.pareto import pareto_mask
+from repro.core.tuner import (TunerResult, _pool_fingerprint,
+                              frontier_subset_rows)
+
+from .checkpoint import (load_latest_validated, prune_snapshots,
+                         save_snapshot, snapshot_path)
+from .flowcache import FlowDiskCache
+from .pool import FlowPool
+
+__all__ = ["fleet_service"]
+
+
+def fleet_service(
+    space,
+    pool_idx: np.ndarray,
+    scenarios,
+    *,
+    T: int = 40,
+    q: int = 1,
+    fantasy: str = "mean",
+    min_done: int = 1,
+    max_workers: int | None = None,
+    executor="process",
+    n: int = 30,
+    mu: float = 0.1,
+    b: int = 20,
+    v_th: float = 0.07,
+    s_frontiers: int = 10,
+    frontier_subset: int = 512,
+    gp_steps: int = 150,
+    reference_fronts: dict | None = None,
+    reuse_icd_trials: bool = True,
+    incremental: bool = True,
+    warm_start: bool | None = None,
+    warm_steps: int | None = None,
+    drift_tol: float = 1.0,
+    pool_chunk: int | str | None = None,
+    bucket: int | None = None,
+    mesh=None,
+    mesh_axis: str | None = None,
+    flow_factory=None,
+    cache_dir: str | None = None,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
+    verbose: bool = False,
+    _kill_after: int | None = None,
+) -> FleetResult:
+    """Explore every scenario of a fleet asynchronously over one worker pool.
+
+    ``T`` = BO-phase flow-evaluation budget *per scenario*; ``q`` = max
+    concurrent evaluations in flight per scenario; ``min_done`` =
+    completions each scenario waits for per cycle (1 = fully async, ``q`` =
+    per-scenario round barrier). ``max_workers`` defaults to ``q * S``
+    capped at ``os.cpu_count()``. ``flow_factory`` (``workload -> flow``)
+    supplies the evaluation backend (default: the bundled ``VLSIFlow``
+    surrogate); flows must be picklable for the process executor.
+    ``cache_dir`` attaches the content-addressed disk cache (cross-scenario,
+    cross-run dedup); ``checkpoint_dir``/``resume`` make the run
+    restartable. Remaining hyperparameters mirror
+    :func:`repro.core.fleet.fleet_tuner`. ``_kill_after`` is a test hook:
+    SIGKILL this process right after the checkpoint covering that many
+    TOTAL (fleet-wide) BO evaluations.
+    """
+    t0 = time.time()
+    scenarios = list(scenarios)
+    S = len(scenarios)
+    if S < 1:
+        raise ValueError("fleet_service: need at least one scenario")
+    if q < 1:
+        raise ValueError(f"q must be >= 1, got {q}")
+    if q > 1 and not incremental:
+        raise ValueError(
+            "q > 1 requires incremental=True: fantasy q-batch selection "
+            "runs on the incremental engine (checked up front so no flow "
+            "budget is spent on a run that cannot start)")
+    if min_done < 1 or min_done > q:
+        raise ValueError(f"min_done must be in [1, q={q}], got {min_done}")
+    if fantasy not in FANTASY_MODES:
+        raise ValueError(f"fantasy must be one of {FANTASY_MODES}")
+    pool_idx = np.asarray(pool_idx)
+    N = pool_idx.shape[0]
+    reference_fronts = reference_fronts or {}
+    if flow_factory is None:
+        from repro.soc import VLSIFlow
+
+        flow_factory = lambda wl: VLSIFlow(space, wl)
+
+    # Everything that defines the trajectory must survive a resume intact;
+    # ``T`` is exempt (extending the budget is a legitimate ops action).
+    config = {"T": int(T), "q": int(q), "min_done": int(min_done),
+              "fantasy": fantasy, "n": int(n), "b": int(b), "mu": float(mu),
+              "v_th": float(v_th), "gp_steps": int(gp_steps),
+              "s_frontiers": int(s_frontiers),
+              "frontier_subset": int(frontier_subset),
+              "incremental": bool(incremental), "pool_chunk": pool_chunk,
+              "warm_start": warm_start, "warm_steps": warm_steps,
+              "drift_tol": float(drift_tol), "bucket": bucket,
+              "reuse_icd_trials": bool(reuse_icd_trials),
+              "scenario_params": [
+                  [sc.workload, int(sc.seed), [float(w) for w in sc.weights]]
+                  for sc in scenarios]}
+
+    snap = None
+    if resume and checkpoint_dir:
+        snap = load_latest_validated(
+            checkpoint_dir, driver="fleet_service",
+            pool=_pool_fingerprint(pool_idx),
+            config={k: v for k, v in config.items() if k != "T"})
+        if snap is not None and \
+                snap["scenarios"] != [sc.label for sc in scenarios]:
+            raise ValueError(f"checkpoint in {checkpoint_dir} was taken for "
+                             f"scenarios {snap['scenarios']} — resume "
+                             "requires the identical fleet")
+        if snap is not None and verbose:
+            print(f"[fleet-svc] resuming at "
+                  f"{[int(x) for x in snap['done']]}/{T} evaluations")
+
+    disk = FlowDiskCache(cache_dir) if cache_dir else None
+    # ONE flow instance per workload, shared by the prologue (through the
+    # evaluation cache) and the worker pool — a factory that acquires real
+    # resources (tool licenses, farm connections) pays exactly once.
+    flows = {wl: flow_factory(wl)
+             for wl in dict.fromkeys(sc.workload for sc in scenarios)}
+    # Prologue flow calls go through the shared evaluation cache (disk-backed
+    # when attached): scenarios seed each other's GPs for free, restarts
+    # re-pay nothing even without a checkpoint.
+    cache = FlowEvalCache(space, pool_idx, [sc.workload for sc in scenarios],
+                          disk=disk, flow_factory=flows.__getitem__)
+    states = fleet_prologue(space, pool_idx, scenarios, cache, n=n, mu=mu,
+                            b=b, v_th=v_th, reuse_icd_trials=reuse_icd_trials,
+                            reference_fronts=reference_fronts,
+                            verbose=verbose, snap=snap, tag="fleet-svc")
+
+    pool_icd_stack = jnp.stack([st.pool_icd for st in states])  # [S, N, d]
+    any_weights = any(st.weights is not None for st in states)
+    weights = (jnp.stack([
+        st.weights if st.weights is not None else jnp.ones((3,))
+        for st in states]) if any_weights else None)
+
+    engine_kw = dict(incremental=incremental, warm_start=warm_start,
+                     gp_steps=gp_steps, warm_steps=warm_steps,
+                     drift_tol=drift_tol, s_frontiers=s_frontiers,
+                     weights=weights, pool_chunk=pool_chunk, mesh=mesh,
+                     mesh_axis=mesh_axis)
+    if bucket is not None:
+        engine_kw["bucket"] = int(bucket)
+    engine = BatchedBOEngine(pool_icd_stack, **engine_kw)
+    if snap is None:
+        engine.observe([st.evaluated for st in states],
+                       [st.y for st in states])
+    else:
+        engine.load_state_dict(snap["engine"])
+
+    done = ([0] * S if snap is None else [int(x) for x in snap["done"]])
+    cycle = 0 if snap is None else int(snap["cycle"])
+    t_cycle = time.time()
+
+    # One shared pool serves the whole fleet; per-pick workload/flow routing,
+    # in-flight dedup and the disk cache live inside it.
+    if max_workers is None:
+        max_workers = max(1, min(q * S, os.cpu_count() or 1))
+    fpool = FlowPool(next(iter(flows.values())),
+                     workload=scenarios[0].workload,
+                     max_workers=max_workers, executor=executor, cache=disk)
+
+    def submit_pick(si: int, row: int) -> int:
+        wl = scenarios[si].workload
+        y = cache.peek(wl, row)
+        if y is not None:  # fleet memo (prologue + other scenarios' drains)
+            return fpool.submit_resolved(row, y)
+        return fpool.submit(row, pool_idx[row], workload=wl, flow=flows[wl])
+
+    pending: list[list[tuple[int, int]]] = [[] for _ in range(S)]
+    try:
+        if snap is not None:  # re-dispatch what was in flight at the kill
+            for si in range(S):
+                for r in (int(r) for r in snap["pending"][str(si)]):
+                    pending[si].append((submit_pick(si, r), r))
+
+        def caps():
+            # Fresh-pick capacity: a scenario can only be refilled with
+            # rows it has neither evaluated nor in flight. Once the pool is
+            # exhausted the scenario retires (its surplus budget is simply
+            # unreachable — nothing left to evaluate).
+            return [N - len(set(states[si].evaluated)) - len(pending[si])
+                    for si in range(S)]
+
+        def active():
+            # In-flight work always drains; otherwise a scenario is live
+            # while it has budget left AND fresh rows to spend it on.
+            return [bool(pending[si]) or (done[si] < T and cap > 0)
+                    for si, cap in enumerate(caps())]
+
+        while any(active()):
+            # ---- refill every scenario's in-flight set up to q (clamped to
+            # the remaining budget AND the scenario's fresh-pick capacity);
+            # ONE batched select_q serves the fleet.
+            wants = [max(0, min(q - len(pending[si]),
+                                T - done[si] - len(pending[si]), cap))
+                     for si, cap in enumerate(caps())]
+            n_new = max(wants)
+            if n_new > 0:
+                keys_acq, subs = [], []
+                for st in states:
+                    st.key, k_fit, k_acq, k_sub = jax.random.split(st.key, 4)
+                    del k_fit  # reserved slot — keeps the schedule aligned
+                    subs.append(frontier_subset_rows(k_sub, N,
+                                                     frontier_subset))
+                    keys_acq.append(k_acq)
+                picks = engine.select_q(
+                    jnp.stack(keys_acq), n_new,
+                    sub_rows=None if subs[0] is None else np.stack(subs),
+                    pending=[[r for _, r in p] for p in pending],
+                    fantasy=fantasy)
+                for si in range(S):
+                    # Scenarios wanting fewer than the fleet-wide refill
+                    # simply drop the surplus picks: they were fantasized,
+                    # never dispatched — the next real round recomputes the
+                    # fantasy region, so nothing leaks.
+                    for p in picks[si][:wants[si]]:
+                        pending[si].append((submit_pick(si, int(p)), int(p)))
+
+            # ---- drain exactly min_done per scenario, in ticket order.
+            obs_rows: list[list[int]] = [[] for _ in range(S)]
+            obs_ys: list[list[np.ndarray]] = [[] for _ in range(S)]
+            for si, sc in enumerate(scenarios):
+                take = min(min_done, len(pending[si]))
+                if not take:
+                    continue
+                tickets = [t for t, _ in pending[si][:take]]
+                for t, row, y_row in fpool.collect(tickets):
+                    cache.store(sc.workload, row, y_row)
+                    obs_rows[si].append(int(row))
+                    obs_ys[si].append(np.asarray(y_row))
+                del pending[si][:take]
+            engine.observe(
+                obs_rows,
+                [np.stack(ys) if ys else np.zeros((0, 3), np.float32)
+                 for ys in obs_ys])
+            now = time.time()
+            for si, sc in enumerate(scenarios):
+                st = states[si]
+                for row, y_row in zip(obs_rows[si], obs_ys[si]):
+                    st.evaluated.append(row)
+                    st.y = np.concatenate([st.y, y_row[None]], axis=0)
+                    done[si] += 1
+                    _log_round(st, done[si], sc.label,
+                               reference_fronts.get(sc.workload), verbose,
+                               "fleet-svc", wall_s=now - t_cycle)
+            t_cycle = now
+            cycle += 1
+            if checkpoint_dir and any(obs_rows) and \
+                    (cycle % checkpoint_every == 0
+                     or all(d >= T for d in done)):
+                save_snapshot(snapshot_path(checkpoint_dir, cycle), {
+                    "driver": "fleet_service", "cycle": cycle,
+                    "pool": _pool_fingerprint(pool_idx), "config": config,
+                    "scenarios": [sc.label for sc in scenarios],
+                    "done": np.asarray(done, np.int64),
+                    "keys": np.stack([np.asarray(st.key) for st in states]),
+                    "vs": {str(si): np.asarray(st.v)
+                           for si, st in enumerate(states)},
+                    "evaluated": {str(si): np.asarray(st.evaluated, np.int64)
+                                  for si, st in enumerate(states)},
+                    "ys": {str(si): st.y for si, st in enumerate(states)},
+                    "histories": {str(si): st.history
+                                  for si, st in enumerate(states)},
+                    "pending": {
+                        str(si): np.asarray([r for _, r in pending[si]],
+                                            np.int64)
+                        for si in range(S)},
+                    "engine": engine.state_dict()})
+                prune_snapshots(checkpoint_dir)
+                if _kill_after is not None and sum(done) >= _kill_after:
+                    os.kill(os.getpid(), signal.SIGKILL)
+    finally:
+        fpool.close()
+
+    if verbose:
+        for si, sc in enumerate(scenarios):
+            if done[si] < T:
+                print(f"[fleet-svc] {sc.label}: retired after {done[si]}/"
+                      f"{T} evaluations — candidate pool exhausted")
+
+    # ---- package per-scenario results in soc_tuner's own layout.
+    wall = time.time() - t0
+    stats = engine.stats.as_dict()
+    stats["service"] = {
+        "pool_dispatched": fpool.dispatched,
+        "pool_cache_hits": fpool.cache_hits,
+        "pool_inflight_hits": fpool.inflight_hits,
+        "fleet_cache": {"hits": cache.hits, "misses": cache.misses,
+                        "memo_hits": cache.peek_hits,
+                        "evaluated": cache.evaluated},
+        **({"disk": {"hits": disk.hits, "misses": disk.misses,
+                     "puts": disk.puts}} if disk is not None else {}),
+    }
+    results = []
+    for st in states:
+        rows = np.asarray(st.evaluated)
+        front = np.asarray(pareto_mask(jnp.asarray(st.y.astype(np.float64))))
+        results.append(TunerResult(
+            space=st.pruned, v=np.asarray(st.v), evaluated_rows=rows,
+            y=st.y, pareto_rows=rows[front], pareto_y=st.y[front],
+            history=st.history, wall_s=wall, engine_stats=stats))
+    return FleetResult(scenarios=scenarios, results=results, cache=cache,
+                       wall_s=wall)

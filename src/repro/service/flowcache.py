@@ -52,14 +52,20 @@ class FlowDiskCache:
 
     # ------------------------------------------------------------------ io
     def get(self, workload: str, idx_row) -> np.ndarray | None:
+        path = self._path(self.key(workload, idx_row))
         try:
-            y = np.load(self._path(self.key(workload, idx_row)),
-                        allow_pickle=False)
-            self.hits += 1
-            return y
+            y = np.load(path, allow_pickle=False)
         except (FileNotFoundError, ValueError, OSError):
             self.misses += 1
             return None
+        self.hits += 1
+        try:
+            # A hit refreshes the entry's mtime so :meth:`gc`'s
+            # LRU-by-mtime order reflects *use*, not just write time.
+            os.utime(path, None)
+        except OSError:  # concurrent gc / read-only mount: recency is advisory
+            pass
+        return y
 
     def put(self, workload: str, idx_row, y) -> None:
         path = self._path(self.key(workload, idx_row))
@@ -79,6 +85,73 @@ class FlowDiskCache:
     def get_many(self, workload: str, idx: np.ndarray) -> list:
         """Per-row lookup of ``idx [k, d]`` -> list of ``y [m]`` or None."""
         return [self.get(workload, row) for row in np.atleast_2d(idx)]
+
+    # ------------------------------------------------------------------- gc
+    def entries(self) -> list[tuple[str, int, float]]:
+        """All cache entries as ``(path, size_bytes, mtime)``, oldest first
+        (mtime ascending — reads refresh mtime, so this is LRU order)."""
+        out = []
+        for sub in os.listdir(self.root):
+            d = os.path.join(self.root, sub)
+            if len(sub) != 2 or not os.path.isdir(d):
+                continue
+            for name in os.listdir(d):
+                if not name.endswith(".npy"):
+                    continue  # temp files are never eviction candidates
+                path = os.path.join(d, name)
+                try:
+                    st = os.stat(path)
+                except OSError:  # raced with a concurrent gc
+                    continue
+                out.append((path, int(st.st_size), st.st_mtime))
+        out.sort(key=lambda e: (e[2], e[0]))
+        return out
+
+    def gc(self, *, max_bytes: int | None = None,
+           max_age_days: float | None = None, now: float | None = None,
+           dry_run: bool = False) -> dict:
+        """Evict least-recently-used entries (LRU by mtime; :meth:`get`
+        refreshes mtime on hit).
+
+        ``max_age_days`` drops every entry unused for longer than that;
+        ``max_bytes`` then drops the least recently used of the survivors
+        until the cache fits the budget. Entries are immutable and
+        recomputable, so eviction is always safe — a future miss just
+        re-pays the flow. ``dry_run=True`` reports what WOULD be evicted
+        (same policy, same return shape) without deleting anything.
+        Returns ``{"scanned", "removed", "removed_bytes", "kept",
+        "kept_bytes"}``.
+        """
+        if max_bytes is None and max_age_days is None:
+            raise ValueError("gc: pass max_bytes and/or max_age_days")
+        if max_bytes is not None and max_bytes < 0:
+            raise ValueError(f"gc: max_bytes must be >= 0, got {max_bytes}")
+        if max_age_days is not None and max_age_days < 0:
+            raise ValueError(
+                f"gc: max_age_days must be >= 0, got {max_age_days}")
+        import time as _time
+
+        now = _time.time() if now is None else float(now)
+        entries = self.entries()
+        kept_bytes = sum(sz for _, sz, _ in entries)
+        removed = removed_bytes = 0
+        for path, sz, mtime in entries:  # oldest first
+            expired = (max_age_days is not None
+                       and now - mtime > max_age_days * 86400.0)
+            over = max_bytes is not None and kept_bytes > max_bytes
+            if not (expired or over):
+                break  # LRU order: every later entry is younger and kept
+            if not dry_run:
+                try:
+                    os.unlink(path)
+                except OSError:  # concurrent gc / reader won the race
+                    continue
+            removed += 1
+            removed_bytes += sz
+            kept_bytes -= sz
+        return {"scanned": len(entries), "removed": removed,
+                "removed_bytes": removed_bytes,
+                "kept": len(entries) - removed, "kept_bytes": kept_bytes}
 
     # ---------------------------------------------------------- accounting
     @property

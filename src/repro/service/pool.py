@@ -71,6 +71,16 @@ class FlowPool:
     friends are — see ``repro.soc.flow``). ``executor`` is ``"process"`` |
     ``"thread"`` | ``"inline"`` | an ``Executor`` instance (not shut down on
     :meth:`close` when caller-owned).
+
+    One pool can serve MANY workloads/flows (the fleet service drives all
+    its scenarios over a single pool): :meth:`submit` takes per-call
+    ``workload``/``flow`` overrides, and identical in-flight design points
+    are **deduplicated** — a second submit of a (workload, design point)
+    whose evaluation is still running shares the first's future instead of
+    occupying another worker (``inflight_hits`` counts these; the entry is
+    retired when its first ticket drains, and a FAILED evaluation never
+    blocks resubmission), which together with the disk cache means
+    concurrent scenarios never pay for the same design point twice.
     """
 
     def __init__(self, flow, *, workload: str = "workload",
@@ -99,27 +109,61 @@ class FlowPool:
         self._next_ticket = 0
         self._rows: dict[int, int] = {}          # ticket -> pool row
         self._idx: dict[int, np.ndarray] = {}    # ticket -> design point
+        self._wl: dict[int, str] = {}            # ticket -> workload
         self._futs: dict[int, cf.Future] = {}    # tickets on workers
         self._ready: dict[int, np.ndarray] = {}  # completed, unconsumed
+        self._inflight: dict[str, cf.Future] = {}  # content key -> future
         self.cache_hits = 0
+        self.inflight_hits = 0
         self.dispatched = 0
 
     # ---------------------------------------------------------------- submit
-    def submit(self, row: int, idx_row: np.ndarray) -> int:
-        """Dispatch one design point; returns its ticket."""
+    def _new_ticket(self, row: int) -> int:
         t = self._next_ticket
         self._next_ticket += 1
         self._rows[t] = int(row)
+        return t
+
+    def submit(self, row: int, idx_row: np.ndarray, *,
+               workload: str | None = None, flow=None) -> int:
+        """Dispatch one design point; returns its ticket.
+
+        ``workload``/``flow`` default to the pool-wide ones; the fleet
+        service passes them per call (one pool, many scenarios)."""
+        wl = self.workload if workload is None else str(workload)
+        fl = self.flow if flow is None else flow
+        t = self._new_ticket(row)
         idx_row = np.asarray(idx_row)
         self._idx[t] = idx_row
+        self._wl[t] = wl
         if self.cache is not None:
-            y = self.cache.get(self.workload, idx_row)
+            y = self.cache.get(wl, idx_row)
             if y is not None:
                 self.cache_hits += 1
                 self._ready[t] = np.asarray(y)
                 return t
-        self.dispatched += 1
-        self._futs[t] = self._ex.submit(_flow_task, self.flow, idx_row)
+        key = FlowDiskCache.key(wl, idx_row)
+        fut = self._inflight.get(key)
+        if fut is not None and fut.done() and fut.exception() is not None:
+            fut = None  # a FAILED evaluation must not poison the key:
+            # the resubmission gets a fresh dispatch (the failed future
+            # stays owned by the tickets that already hold it).
+        if fut is None:
+            self.dispatched += 1
+            fut = self._ex.submit(_flow_task, fl, idx_row)
+            self._inflight[key] = fut
+        else:
+            self.inflight_hits += 1
+        self._futs[t] = fut
+        return t
+
+    def submit_resolved(self, row: int, y: np.ndarray) -> int:
+        """Enqueue an already-known result under a fresh ticket — the
+        caller's own memo (e.g. the fleet's in-memory evaluation cache)
+        resolved this design point, but drains must still see it in ticket
+        order."""
+        t = self._new_ticket(row)
+        self._ready[t] = np.asarray(y)
         return t
 
     @property
@@ -128,14 +172,46 @@ class FlowPool:
 
     # ----------------------------------------------------------------- drain
     def _complete(self, t: int) -> None:
-        y = np.asarray(self._futs.pop(t).result())
-        if self.cache is not None:
-            self.cache.put(self.workload, self._idx[t], y)
+        fut = self._futs.pop(t)
+        y = np.asarray(fut.result())
+        wl = self._wl.get(t, self.workload)
+        key = FlowDiskCache.key(wl, self._idx[t])
+        if self._inflight.get(key) is fut:
+            # First ticket to consume this dispatch retires the in-flight
+            # entry (a later identical submit goes through the disk cache
+            # or re-dispatches — the dict stays bounded by what is actually
+            # running) and owns the single disk write-back; tickets sharing
+            # the future skip both.
+            del self._inflight[key]
+            if self.cache is not None:
+                self.cache.put(wl, self._idx[t], y)
         self._ready[t] = y
 
     def _pop(self, t: int) -> tuple[int, int, np.ndarray]:
-        self._idx.pop(t)
+        self._idx.pop(t, None)
+        self._wl.pop(t, None)
         return t, self._rows.pop(t), self._ready.pop(t)
+
+    def collect(self, tickets) -> list[tuple[int, int, np.ndarray]]:
+        """Block until every listed ticket has completed and release exactly
+        those, in the given order, as ``(ticket, row, y)`` triples.
+
+        The fleet service's per-scenario drains use this: each scenario
+        collects its own ``min_done`` OLDEST tickets, so every scenario's
+        feed-back order and batch size are pure functions of the driver's
+        state — one shared worker pool, per-scenario deterministic
+        trajectories."""
+        out = []
+        for t in tickets:
+            t = int(t)
+            if t not in self._rows:
+                raise KeyError(f"collect: unknown or already-drained "
+                               f"ticket {t}")
+            if t not in self._ready:
+                self._futs[t].result()
+                self._complete(t)
+            out.append(self._pop(t))
+        return out
 
     def drain(self, min_done: int = 1, ordered: bool = True,
               timeout: float | None = None) -> list[tuple[int, int, np.ndarray]]:

@@ -4,11 +4,16 @@
 
 - per refill it asks the incremental engine for up to ``q`` candidates via
   **fantasy updates** (``BOEngine.select_q`` — in-flight picks are
-  fantasized, new picks are chosen one rank-1 update apart);
+  fantasized, new picks are chosen one rank-1 update apart, and the sampled
+  frontier y* is drawn once per refill and frozen across the whole chain,
+  so a refill pays exactly one O(q³) joint frontier draw);
 - picks are dispatched to a :class:`~repro.service.pool.FlowPool` of
   concurrent workers and **completions are fed back as they land** —
   with ``min_done=1`` (the default) a new selection round starts as soon as
-  ONE evaluation returns, while the other q-1 stay pending;
+  ONE evaluation returns, while the other q-1 stay pending (post-freeze-y*
+  this fully-async mode beats the ``min_done=q`` barrier — see
+  ``BENCH_fleet_service.json``; the multi-scenario twin is
+  :func:`repro.service.fleet_runner.fleet_service`);
 - every completion batch writes a **versioned atomic checkpoint** (engine
   state, RNG key, trajectory); a SIGKILL'd run resumed with ``resume=True``
   reproduces the uninterrupted trajectory bit-exactly;

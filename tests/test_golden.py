@@ -1,0 +1,63 @@
+"""Golden-trajectory regression tests (ISSUE 5).
+
+Every committed fixture under ``tests/golden/`` pins a tiny exploration
+run: the exact pick sequence and the final ADRS. The live parity tests
+compare two code paths that would drift *together*; these catch silent
+numeric drift of the whole pipeline against a state reviewed into the
+repo. On an INTENTIONAL numeric change, regenerate with::
+
+    PYTHONPATH=src python tools/regen_golden.py
+
+and review the fixture diff. The run definitions live in
+``tools/regen_golden.py`` (imported here by path), so fixture and replay
+can never disagree about the configuration.
+"""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_TOOLS = os.path.join(os.path.dirname(__file__), "..", "tools",
+                      "regen_golden.py")
+_spec = importlib.util.spec_from_file_location("regen_golden", _TOOLS)
+regen_golden = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(regen_golden)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+def _fixture(name):
+    path = os.path.join(GOLDEN_DIR, f"{name}.json")
+    if not os.path.exists(path):
+        pytest.fail(f"missing golden fixture {path} — run "
+                    "`PYTHONPATH=src python tools/regen_golden.py`")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_every_case_has_a_fixture_and_vice_versa():
+    have = {f[:-5] for f in os.listdir(GOLDEN_DIR) if f.endswith(".json")}
+    assert have == set(regen_golden.CASES), (
+        "tests/golden/ fixtures out of sync with tools/regen_golden.py "
+        "CASES — regenerate (and delete strays)")
+
+
+@pytest.mark.parametrize("name", sorted(regen_golden.CASES))
+def test_golden_trajectory(name):
+    pinned = _fixture(name)
+    live = regen_golden.run_case(name)
+    assert live["config"] == pinned["config"], (
+        "golden run configuration drifted — fixture and regenerator "
+        "disagree; regenerate the fixtures")
+    assert live["trajectories"].keys() == pinned["trajectories"].keys()
+    for label, want in pinned["trajectories"].items():
+        got = live["trajectories"][label]
+        assert got["evaluated_rows"] == want["evaluated_rows"], (
+            f"{name}/{label}: pick sequence drifted from the committed "
+            "golden trajectory — if the numeric change is intentional, "
+            "regenerate via tools/regen_golden.py and review the diff")
+        assert got["final_adrs"] == pytest.approx(want["final_adrs"],
+                                                  rel=1e-5, abs=1e-7), (
+            f"{name}/{label}: final ADRS drifted "
+            f"({got['final_adrs']} vs {want['final_adrs']})")

@@ -1,17 +1,23 @@
 """Exploration service: q-batch fantasy selection, checkpoint/resume, the
 async flow pool and the on-disk evaluation cache.
 
-The contract under test (ISSUE 4 acceptance):
+The contract under test (ISSUE 4 + ISSUE 5 acceptance):
 - a ``q=1`` service round selects bit-identical candidates to the existing
-  incremental engine / sequential tuner;
+  incremental engine / sequential tuner, and ``BatchedBOEngine.select_q``
+  with ``q=1`` and nothing pending is bitwise-identical to batched
+  ``select``;
 - fantasy appends are the *same math* as a real trailing-block update under
-  frozen hyperparameters;
-- out-of-order worker completions do not change the trajectory
-  (``ordered=True`` reorders observation, not execution);
+  frozen hyperparameters, and a refill's fantasy chain samples the frontier
+  y* exactly ONCE (frozen across the chain);
+- out-of-order worker completions do not change the trajectory — for the
+  single-scenario service AND for the multi-scenario ``fleet_service``
+  (per-scenario ticket-ordered exact-``min_done`` drains);
 - a killed run resumed from its latest checkpoint reproduces the
   uninterrupted trajectory bit-exactly (in-process partial-run resume here;
-  a true SIGKILL subprocess resume in ``test_sigkill_resume_bit_exact``);
-- the content-addressed disk cache is shared across processes.
+  true SIGKILL subprocess resumes in ``test_sigkill_resume_bit_exact`` and
+  ``test_fleet_cli_sigkill_resume_bit_exact``);
+- the content-addressed disk cache is shared across processes, and its
+  ``gc`` evicts least-recently-USED entries to a byte/age budget.
 """
 import concurrent.futures as cf
 import json
@@ -28,13 +34,13 @@ import numpy as np
 import pytest
 
 from repro.core import FleetScenario, fleet_tuner, soc_tuner
-from repro.core.engine import (BOEngine, _chol_refactor, _v_chunk_refactor,
-                               _kernel)
+from repro.core.engine import (BatchedBOEngine, BOEngine, _chol_refactor,
+                               _v_chunk_refactor, _kernel)
 from repro.core.icd import icd_from_data
 from repro.core.sampling import soc_init
-from repro.service import (FlowDiskCache, FlowPool, latest_snapshot,
-                           load_snapshot, save_snapshot, service_tuner,
-                           snapshot_path)
+from repro.service import (FlowDiskCache, FlowPool, fleet_service,
+                           latest_snapshot, load_snapshot, save_snapshot,
+                           service_tuner, snapshot_path)
 from repro.service.flowcache import CachedFlow
 from repro.soc import VLSIFlow
 
@@ -177,6 +183,243 @@ def test_out_of_order_observe_keeps_factorization_exact(icd_setup):
         worst = max(worst, eng.refactor_residual())
     assert eng.stats.block_updates > 0
     assert worst < 5e-4, worst
+
+
+def test_frozen_ystar_one_frontier_resample_per_refill(icd_setup):
+    """A whole select_q refill — q picks plus pending appends — pays exactly
+    ONE O(q³) joint frontier draw: y* is sampled by the round phase and
+    frozen across the fantasy chain."""
+    pool_icd, y_pool = icd_setup
+    eng = _engine(pool_icd, y_pool)
+    eng.select_q(jax.random.PRNGKey(0), 4)
+    assert eng.stats.frontier_resamples == 1
+    eng.observe([200], y_pool[200][None])
+    eng.select_q(jax.random.PRNGKey(1), 3, pending=[40, 50])
+    assert eng.stats.frontier_resamples == 2
+    assert eng.stats.fantasy_steps == 3 + (2 + 3 - 1)
+
+
+# ------------------------------------------------------- batched q-batch
+def _batched_engine(pool_icd, y_pool, n0=12, S=2, **kw) -> BatchedBOEngine:
+    eng = BatchedBOEngine(jnp.stack([pool_icd] * S), incremental=True,
+                          gp_steps=30, warm_steps=5, **kw)
+    # distinct per-scenario training sets (offset windows into the pool)
+    eng.observe([list(range(si * 3, si * 3 + n0)) for si in range(S)],
+                [y_pool[si * 3:si * 3 + n0] for si in range(S)])
+    return eng
+
+
+def test_batched_select_q1_bitwise_parity_with_select(icd_setup):
+    """ISSUE 5 acceptance: BatchedBOEngine.select_q(q=1, no pending) IS the
+    batched round — identical [S] picks from identical keys."""
+    pool_icd, y_pool = icd_setup
+    keys = jnp.stack([jax.random.PRNGKey(7), jax.random.PRNGKey(8)])
+    for r in range(3):
+        e1 = _batched_engine(pool_icd, y_pool)
+        e2 = _batched_engine(pool_icd, y_pool)
+        k = jax.vmap(jax.random.fold_in, (0, None))(keys, r)
+        p_sel = e1.select(k)
+        p_q = e2.select_q(k, 1)
+        assert p_q.shape == (2, 1)
+        np.testing.assert_array_equal(np.asarray(p_sel), p_q[:, 0])
+
+
+def test_batched_select_q_ragged_pending_masks(icd_setup):
+    """Per-scenario pending lists of DIFFERENT lengths: every scenario gets
+    q distinct fresh picks that avoid both its pending set and its own
+    observations; only active (non-padded) steps count as fantasy appends."""
+    pool_icd, y_pool = icd_setup
+    eng = _batched_engine(pool_icd, y_pool)
+    pend = [[40, 50, 60], [70]]          # ragged on purpose
+    keys = jnp.stack([jax.random.PRNGKey(4), jax.random.PRNGKey(5)])
+    picks = eng.select_q(keys, 3, pending=pend, fantasy="cl_min")
+    assert picks.shape == (2, 3)
+    for si in range(2):
+        row_picks = [int(p) for p in picks[si]]
+        assert len(set(row_picks)) == 3
+        assert not (set(row_picks) & set(pend[si]))
+        assert not (set(row_picks) & set(eng._rows[si]))
+    # active appends: (3 pending + 2) + (1 pending + 2)
+    assert eng.stats.fantasy_steps == (3 + 2) + (1 + 2)
+    assert eng.stats.frontier_resamples == 1
+
+
+def test_batched_select_q_no_pending_scenario_matches_round_pick(icd_setup):
+    """A scenario with NO pending inside a fleet that has some elsewhere
+    goes through masked no-op steps — its first pick must equal what the
+    round itself would have picked (the no-ops are bitwise inert)."""
+    pool_icd, y_pool = icd_setup
+    keys = jnp.stack([jax.random.PRNGKey(5), jax.random.PRNGKey(6)])
+    e1 = _batched_engine(pool_icd, y_pool)
+    ref = np.asarray(e1.select(keys))        # plain round picks, both rows
+    e2 = _batched_engine(pool_icd, y_pool)
+    picks = e2.select_q(keys, 1, pending=[[40, 50], []])
+    # scenario 1 had nothing pending: its pick is the round's own argmax
+    assert int(picks[1, 0]) == int(ref[1])
+    # scenario 0 fantasized its pending rows first: never re-proposes them
+    assert int(picks[0, 0]) not in {40, 50}
+
+
+def test_batched_select_q_validation(icd_setup):
+    pool_icd, y_pool = icd_setup
+    eng = _batched_engine(pool_icd, y_pool)
+    keys = jnp.stack([jax.random.PRNGKey(0), jax.random.PRNGKey(1)])
+    with pytest.raises(ValueError, match="fantasy"):
+        eng.select_q(keys, 2, fantasy="nope")
+    with pytest.raises(ValueError, match="entries"):
+        eng.select_q(keys, 2, pending=[[1]])
+    exact = BatchedBOEngine(jnp.stack([pool_icd] * 2), incremental=False,
+                            gp_steps=30)
+    exact.observe([list(range(12))] * 2, [y_pool[:12]] * 2)
+    with pytest.raises(ValueError, match="incremental"):
+        exact.select_q(keys, 2)
+
+
+# ----------------------------------------------------------- fleet service
+FKW = dict(T=4, n=10, b=6, gp_steps=30)
+
+
+def test_fleet_service_fleet_of_one_bitwise_parity(space, small_pool):
+    """A q=1 fleet-service of ONE scenario (inline executor) reproduces the
+    fleet_tuner trajectory bit-for-bit — every evaluation is a batch-1
+    dispatch in both drivers, so rows AND metrics match exactly."""
+    scs = [FleetScenario("resnet50", seed=0)]
+    ref = fleet_tuner(space, small_pool, scs, incremental=True, **FKW)
+    svc = fleet_service(space, small_pool, scs, q=1, min_done=1,
+                        executor="inline", **FKW)
+    np.testing.assert_array_equal(ref.results[0].evaluated_rows,
+                                  svc.results[0].evaluated_rows)
+    np.testing.assert_array_equal(ref.results[0].y, svc.results[0].y)
+
+
+@pytest.mark.parametrize("scs", [
+    [FleetScenario("resnet50", seed=0), FleetScenario("resnet50", seed=1)],
+    [FleetScenario("resnet50", seed=0), FleetScenario("transformer",
+                                                      seed=1)],
+], ids=["single-workload", "mixed-workload"])
+def test_fleet_service_q1_matches_fleet_tuner_picks(space, small_pool, scs):
+    """Multi-scenario fleets pick identical candidates; metrics agree to
+    float tolerance only — whenever two scenarios' distinct picks share one
+    fused flush, fleet_tuner evaluates them as a batch-N dispatch while the
+    service pool dispatches per candidate, and XLA's batch-N vs batch-1
+    programs differ in the last ulp (the prologue, evaluated through the
+    same shared cache in both drivers, stays bitwise)."""
+    ref = fleet_tuner(space, small_pool, scs, incremental=True, **FKW)
+    svc = fleet_service(space, small_pool, scs, q=1, min_done=1,
+                        executor="inline", **FKW)
+    for a, b in zip(ref.results, svc.results):
+        np.testing.assert_array_equal(a.evaluated_rows, b.evaluated_rows)
+        np.testing.assert_allclose(a.y, b.y, rtol=1e-5)
+
+
+def test_fleet_service_async_out_of_order_deterministic(space, small_pool):
+    """Workers completing in reverse order leave every scenario's
+    trajectory unchanged: per-scenario exact-min_done drains collect each
+    scenario's OLDEST tickets whatever order the shared pool finishes
+    them in. (The reversing executor releases each batch of 2 in reverse;
+    2 divides every refill's submission count — mixed workloads so the
+    fleet memo never swallows a submission — so its buffer is always
+    flushed by the time a drain blocks on it.)"""
+    scs = [FleetScenario("resnet50", seed=0),
+           FleetScenario("transformer", seed=1)]
+    kw = dict(q=2, min_done=1, **FKW)
+    ref = fleet_service(space, small_pool, scs, executor="inline", **kw)
+    rev = fleet_service(space, small_pool, scs,
+                        executor=_ReversedBatchExecutor(2), **kw)
+    for a, b in zip(ref.results, rev.results):
+        np.testing.assert_array_equal(a.evaluated_rows, b.evaluated_rows)
+        np.testing.assert_array_equal(a.y, b.y)
+
+
+def test_fleet_service_kill_resume_bit_exact(space, small_pool, tmp_path):
+    """Mid-flight crash simulation: run the full budget with per-cycle
+    checkpoints, delete the newest snapshots (as if SIGKILLed right after
+    an early one — in-flight picks and all), resume with the SAME budget;
+    the resumed fleet must reproduce the uninterrupted run bit-exactly."""
+    from repro.service.checkpoint import _list_snapshots
+
+    scs = [FleetScenario("resnet50", seed=0),
+           FleetScenario("transformer", seed=1)]
+    kw = dict(q=2, min_done=1, executor="thread", **FKW)
+    ck = str(tmp_path / "ck")
+    full = fleet_service(space, small_pool, scs, checkpoint_dir=ck, **kw)
+    snaps = _list_snapshots(ck, "ckpt")
+    assert len(snaps) > 1
+    for _, p in snaps[1:]:
+        os.unlink(p)  # the "kill": only an early mid-flight snapshot is left
+    res = fleet_service(space, small_pool, scs, checkpoint_dir=ck,
+                        resume=True, **kw)
+    for a, b in zip(full.results, res.results):
+        np.testing.assert_array_equal(a.evaluated_rows, b.evaluated_rows)
+        np.testing.assert_array_equal(a.y, b.y)
+
+
+def test_fleet_service_cross_scenario_dedup(space, small_pool):
+    """Two identical scenarios explore identical trajectories, and the
+    shared pool pays each design point ONCE: the duplicate submission hits
+    the in-flight/memo dedup instead of occupying a worker."""
+    scs = [FleetScenario("resnet50", seed=0), FleetScenario("resnet50",
+                                                            seed=0)]
+    svc = fleet_service(space, small_pool, scs, q=2, min_done=1,
+                        executor="thread", **FKW)
+    a, b = svc.results
+    np.testing.assert_array_equal(a.evaluated_rows, b.evaluated_rows)
+    np.testing.assert_array_equal(a.y, b.y)
+    stats = a.engine_stats["service"]
+    total_bo = 2 * FKW["T"]
+    dedup = (stats["pool_inflight_hits"] + stats["pool_cache_hits"]
+             + stats["fleet_cache"]["memo_hits"])
+    assert stats["pool_dispatched"] <= total_bo // 2 + 1
+    assert dedup > 0
+
+
+def test_fleet_service_retires_saturated_scenarios(space):
+    """A budget larger than the candidate pool must not abort (or hang)
+    the fleet: scenarios whose unevaluated rows run out retire gracefully
+    with however many evaluations the pool could supply, never exceeding
+    the pool size and never repeating a row."""
+    tiny_pool = np.asarray(space.sample(jax.random.PRNGKey(9), 24))
+    scs = [FleetScenario("resnet50", seed=0),
+           FleetScenario("resnet50", seed=1)]
+    fr = fleet_service(space, tiny_pool, scs, T=12, q=2, min_done=1,
+                       executor="inline", n=8, b=4, gp_steps=15)
+    for res in fr.results:
+        rows = [int(r) for r in res.evaluated_rows]
+        assert len(rows) == len(set(rows)) <= 24
+
+
+def test_fleet_cli_sigkill_resume_bit_exact(tmp_path):
+    """ISSUE 5 acceptance: a CLI fleet-async run SIGKILLed mid-flight and
+    resumed from its latest snapshot reproduces the uninterrupted fleet
+    bit-exactly, per scenario."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    base = [sys.executable, "-m", "repro.service.cli", "fleet",
+            "--workloads", "resnet50,transformer", "--seeds", "0",
+            "--n-pool", "96", "--T", "3", "--q", "2", "--min-done", "1",
+            "--executor", "thread", "--workers", "4", "--gp-steps", "15",
+            "--n", "10", "--b", "8", "--quiet"]
+    ref_out = str(tmp_path / "ref.json")
+    subprocess.run(base + ["--out", ref_out], check=True, env=env)
+    ck = str(tmp_path / "ck")
+    killed = subprocess.run(
+        base + ["--checkpoint-dir", ck, "--kill-after", "3",
+                "--out", str(tmp_path / "k.json")], env=env)
+    assert killed.returncode == -signal.SIGKILL
+    assert latest_snapshot(ck) is not None
+    assert not os.path.exists(str(tmp_path / "k.json"))  # died mid-run
+    res_out = str(tmp_path / "res.json")
+    subprocess.run(base + ["--checkpoint-dir", ck, "--resume",
+                           "--out", res_out], check=True, env=env)
+    ref = json.load(open(ref_out))
+    res = json.load(open(res_out))
+    assert ref["scenarios"].keys() == res["scenarios"].keys()
+    for k in ref["scenarios"]:
+        assert ref["scenarios"][k]["evaluated_rows"] == \
+            res["scenarios"][k]["evaluated_rows"]
+        assert ref["scenarios"][k]["y"] == res["scenarios"][k]["y"]
 
 
 def test_select_q_validation(icd_setup):
@@ -391,6 +634,93 @@ def test_sigkill_resume_bit_exact(tmp_path):
     res = json.load(open(res_out))
     assert ref["evaluated_rows"] == res["evaluated_rows"]
     assert ref["y"] == res["y"]
+
+
+def test_flow_pool_collect_and_inflight_dedup(tmp_path):
+    """FlowPool unit: per-submit workload routing, in-flight dedup of
+    identical (workload, design point) submissions, and collect() releasing
+    exactly the requested tickets in the requested order."""
+    calls = []
+
+    def flow(idx):
+        calls.append(np.asarray(idx).copy())
+        return np.asarray(idx, np.float64) * 2.0
+
+    pool = FlowPool(flow, workload="wl", executor="thread", max_workers=2)
+    t0 = pool.submit(3, np.asarray([3, 4]))
+    t1 = pool.submit(3, np.asarray([3, 4]))            # identical: dedup
+    t2 = pool.submit(5, np.asarray([5, 6]), workload="other")
+    out = pool.collect([t1, t0])                        # caller's order
+    assert [o[0] for o in out] == [t1, t0]
+    for _, r, y in out:
+        np.testing.assert_array_equal(y, [6, 8])
+    (t, r, y), = pool.collect([t2])
+    np.testing.assert_array_equal(y, [10, 12])
+    pool.close()
+    assert pool.dispatched == 2 and pool.inflight_hits == 1
+    assert len(calls) == 2
+    with pytest.raises(KeyError):
+        pool.collect([t0])  # already drained
+
+
+def test_flow_pool_submit_resolved_keeps_ticket_order(tmp_path):
+    pool = FlowPool(lambda idx: np.asarray(idx, np.float64),
+                    workload="wl", executor="inline")
+    t0 = pool.submit(1, np.asarray([1]))
+    t1 = pool.submit_resolved(9, np.asarray([99.0]))
+    out = pool.drain(min_done=2, ordered=True)
+    assert [o[0] for o in out] == [t0, t1]
+    np.testing.assert_array_equal(out[1][2], [99.0])
+    pool.close()
+
+
+# -------------------------------------------------------------- cache gc
+def _fill_cache(root, n, size=32):
+    cache = FlowDiskCache(root)
+    for i in range(n):
+        cache.put("wl", np.asarray([i]), np.arange(size, dtype=np.float64))
+        # stage mtimes 1 minute apart, oldest first
+        path = cache._path(cache.key("wl", np.asarray([i])))
+        t = 1_000_000 + i * 60
+        os.utime(path, (t, t))
+    return cache
+
+
+def test_flow_cache_gc_max_bytes_evicts_lru(tmp_path):
+    root = str(tmp_path / "fc")
+    cache = _fill_cache(root, 4)
+    entry_bytes = cache.entries()[0][1]
+    stats = cache.gc(max_bytes=2 * entry_bytes)
+    assert stats["removed"] == 2 and stats["kept"] == 2
+    assert stats["kept_bytes"] <= 2 * entry_bytes
+    # the two OLDEST entries went; the newest survive and still load
+    assert cache.get("wl", np.asarray([0])) is None
+    assert cache.get("wl", np.asarray([1])) is None
+    np.testing.assert_array_equal(cache.get("wl", np.asarray([3])),
+                                  np.arange(32, dtype=np.float64))
+
+
+def test_flow_cache_gc_max_age_and_touch_on_read(tmp_path):
+    root = str(tmp_path / "fc")
+    cache = _fill_cache(root, 3)
+    # reading entry 0 refreshes its mtime -> it is now the most recent
+    assert cache.get("wl", np.asarray([0])) is not None
+    now = 1_000_000 + 3 * 60
+    stats = cache.gc(max_age_days=1.0, now=now + 86400 + 61)
+    # entries 1 and 2 (mtimes now+ ~1-2 min) are older than a day relative
+    # to `now + 1 day + 61s`; entry 0 was touched at wall-clock time (way
+    # in the future of the staged mtimes) and survives
+    assert stats["removed"] == 2
+    assert cache.get("wl", np.asarray([0])) is not None
+    assert cache.get("wl", np.asarray([1])) is None
+
+
+def test_flow_cache_gc_validation(tmp_path):
+    cache = FlowDiskCache(str(tmp_path / "fc"))
+    with pytest.raises(ValueError, match="max_bytes"):
+        cache.gc()
+    with pytest.raises(ValueError, match="max_bytes"):
+        cache.gc(max_bytes=-1)
 
 
 # ------------------------------------------------------------- disk cache

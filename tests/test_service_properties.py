@@ -1,0 +1,205 @@
+"""Hypothesis property tests for the service/state layer (ISSUE 5).
+
+The deterministic tests in ``test_service.py`` pin specific trajectories;
+these pin the *invariants* under randomized shapes and contents:
+
+- ``state_dict``/``load_state_dict`` round-trips BOTH engines bit-exactly
+  over randomized pool shapes, observation counts and bucket states — a
+  restored engine continues with the identical next pick;
+- ``FlowDiskCache`` is a faithful read-after-write store under arbitrary
+  workload strings and design-index vectors (content addressing: equal
+  content hits, different content misses), and ``gc`` never leaves the
+  cache over its byte budget;
+- snapshot trees (``save_snapshot``/``load_snapshot``) round-trip arbitrary
+  nested dict/list/scalar/array state exactly.
+
+Kept importorskip-guarded exactly like ``test_pareto.py`` so the no-extras
+CI leg (no ``hypothesis`` installed) skips this module and runs everything
+else — the guard is part of what the suite tests.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the 'test' extra: "
+    "pip install -e .[test]")
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.engine import BatchedBOEngine, BOEngine
+from repro.service import FlowDiskCache, load_snapshot, save_snapshot, \
+    snapshot_path
+
+# Shapes are drawn from small fixed menus: every distinct (N, d, P-bucket)
+# combination costs an XLA compile, and the invariants do not get stronger
+# with exotic dims — the interesting randomness is in n0/bucket (pad-bucket
+# boundary states) and the target values.
+pool_ns = st.sampled_from([16, 24])
+dims = st.just(4)
+n_obs = st.integers(5, 14)
+buckets = st.sampled_from([4, 8])
+seeds = st.integers(0, 2**31 - 1)
+
+
+def _pool(n, d, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, d)).astype(np.float32)
+
+
+def _targets(rng, k):
+    # positive raw metrics, like the flow's (latency, power, area)
+    return (rng.uniform(0.1, 10.0, size=(k, 3))).astype(np.float32)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=pool_ns, d=dims, n0=n_obs, bucket=buckets, seed=seeds)
+def test_engine_state_dict_roundtrip_is_bit_exact(n, d, n0, bucket, seed):
+    rng = np.random.default_rng(seed)
+    pool = _pool(n, d, seed)
+    kw = dict(incremental=True, gp_steps=6, warm_steps=3, bucket=bucket)
+    eng = BOEngine(pool, **kw)
+    eng.observe(list(range(n0)), _targets(rng, n0))
+    key = jax.random.PRNGKey(seed % 997)
+    first = eng.select(key)          # materialize L/V/params state
+    eng.observe([int(first)], _targets(rng, 1))
+
+    sd = eng.state_dict()
+    restored = BOEngine(pool, **kw)
+    restored.load_state_dict(sd)
+
+    k2 = jax.random.fold_in(key, 1)
+    assert restored.select(k2) == eng.select(k2)
+    # the restored snapshot is itself identical (arrays bitwise)
+    sd2 = restored.state_dict()
+    st_a, st_b = sd["state"], sd2["state"]
+    for k in ("L", "V"):
+        np.testing.assert_array_equal(st_a[k], st_b[k])
+    np.testing.assert_array_equal(sd["rows"], sd2["rows"])
+    np.testing.assert_array_equal(sd["y"], sd2["y"])
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=pool_ns, n0=n_obs, bucket=buckets, seed=seeds,
+       S=st.sampled_from([1, 2]))
+def test_batched_state_dict_roundtrip_is_bit_exact(n, n0, bucket, seed, S):
+    rng = np.random.default_rng(seed)
+    pool = np.stack([_pool(n, 4, seed + si) for si in range(S)])
+    kw = dict(incremental=True, gp_steps=6, warm_steps=3, bucket=bucket)
+    eng = BatchedBOEngine(pool, **kw)
+    # ragged per-scenario observation counts exercise the fleet padding
+    counts = [max(3, n0 - si) for si in range(S)]
+    eng.observe([list(range(c)) for c in counts],
+                [_targets(rng, c) for c in counts])
+    keys = jnp.stack([jax.random.PRNGKey(seed % 991 + si)
+                      for si in range(S)])
+    picks = eng.select(keys)
+    eng.observe([[int(p)] for p in picks],
+                [_targets(rng, 1) for _ in range(S)])
+
+    sd = eng.state_dict()
+    restored = BatchedBOEngine(pool, **kw)
+    restored.load_state_dict(sd)
+
+    k2 = jax.vmap(jax.random.fold_in, (0, None))(keys, 7)
+    np.testing.assert_array_equal(eng.select(k2), restored.select(k2))
+
+
+workload_names = st.text(
+    alphabet=st.characters(min_codepoint=32, max_codepoint=0x2FFF),
+    min_size=0, max_size=24)
+idx_vectors = hnp.arrays(np.int64,
+                         st.integers(1, 12).map(lambda n: (n,)),
+                         elements=st.integers(-2**40, 2**40))
+metric_vectors = hnp.arrays(
+    np.float64, st.integers(1, 6).map(lambda n: (n,)),
+    elements=st.floats(allow_nan=False, width=64, min_value=-1e12,
+                       max_value=1e12))
+
+
+@settings(max_examples=40, deadline=None)
+@given(wl=workload_names, idx=idx_vectors, y=metric_vectors,
+       y2=metric_vectors)
+def test_flow_cache_read_after_write(tmp_path_factory, wl, idx, y, y2):
+    root = str(tmp_path_factory.mktemp("fc"))
+    cache = FlowDiskCache(root)
+    assert cache.get(wl, idx) is None
+    cache.put(wl, idx, y)
+    np.testing.assert_array_equal(cache.get(wl, idx), y)
+    # a fresh handle on the same root sees the entry (content addressing)
+    np.testing.assert_array_equal(FlowDiskCache(root).get(wl, idx), y)
+    # different content under the same workload does not collide
+    other = np.concatenate([idx, [idx[-1] + 1]])
+    assert cache.get(wl, other) is None
+    # an overwrite with new content is the new content (last write wins)
+    cache.put(wl, idx, y2)
+    np.testing.assert_array_equal(cache.get(wl, idx), y2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(sizes=st.lists(st.integers(1, 64), min_size=1, max_size=8),
+       budget_frac=st.floats(0.0, 1.2))
+def test_flow_cache_gc_respects_byte_budget(tmp_path_factory, sizes,
+                                            budget_frac):
+    root = str(tmp_path_factory.mktemp("fc"))
+    cache = FlowDiskCache(root)
+    for i, k in enumerate(sizes):
+        cache.put("wl", np.asarray([i]), np.zeros(k, np.float64))
+        path = cache._path(cache.key("wl", np.asarray([i])))
+        os.utime(path, (1_000_000 + i, 1_000_000 + i))
+    total = sum(sz for _, sz, _ in cache.entries())
+    budget = int(total * budget_frac)
+    stats = cache.gc(max_bytes=budget)
+    assert stats["kept_bytes"] <= budget or stats["removed"] == len(sizes)
+    assert stats["kept"] + stats["removed"] == len(sizes)
+    # survivors are the most recently used prefix (LRU evicts oldest first)
+    kept_ids = [i for i in range(len(sizes))
+                if cache.get("wl", np.asarray([i])) is not None]
+    assert kept_ids == list(range(len(sizes) - stats["kept"], len(sizes)))
+
+
+# JSON-able scalar leaves the snapshot codec must preserve exactly.
+_scalars = st.one_of(
+    st.none(), st.booleans(), st.integers(-2**53, 2**53),
+    st.floats(allow_nan=False, allow_infinity=False, width=64),
+    st.text(max_size=16))
+_arrays = hnp.arrays(
+    st.sampled_from([np.float32, np.float64, np.int32, np.int64]),
+    hnp.array_shapes(max_dims=3, max_side=4),
+    elements=st.integers(-100, 100))
+_keys = st.text(
+    alphabet=st.characters(min_codepoint=33, max_codepoint=0x2FF,
+                           exclude_characters="/"),
+    min_size=1, max_size=8).filter(lambda k: k != "__npz__")
+_trees = st.recursive(
+    st.one_of(_scalars, _arrays),
+    lambda children: st.one_of(
+        st.lists(children, max_size=3),
+        st.dictionaries(_keys, children, max_size=3)),
+    max_leaves=12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(tree=st.dictionaries(_keys, _trees, max_size=4))
+def test_snapshot_tree_roundtrip(tmp_path_factory, tree):
+    d = str(tmp_path_factory.mktemp("snap"))
+    path = save_snapshot(snapshot_path(d, 0), tree)
+    back = load_snapshot(path)
+
+    def eq(a, b):
+        if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+            np.testing.assert_array_equal(a, b)
+            return True
+        if isinstance(a, dict):
+            assert isinstance(b, dict) and a.keys() == b.keys()
+            return all(eq(a[k], b[k]) for k in a)
+        if isinstance(a, (list, tuple)):
+            assert len(a) == len(b)
+            return all(eq(x, y) for x, y in zip(a, b))
+        assert a == b and type(a) is type(b)
+        return True
+
+    assert eq(tree, back)

@@ -1,0 +1,121 @@
+"""Regenerate the golden-trajectory regression fixtures in ``tests/golden/``.
+
+Each golden case is a tiny (T=6, n_pool=64) exploration run pinned as a
+committed JSON fixture: the exact pick sequence (pool-row indices in
+evaluation order) plus the final ADRS against the pool's true Pareto front.
+``tests/test_golden.py`` replays every case and compares — unlike the
+parity tests (which compare two LIVE code paths and therefore drift
+together), a committed fixture catches *silent numeric drift* of the whole
+pipeline: a kernel change, a standardization tweak, an acquisition reorder.
+
+Run from the repo root after an INTENTIONAL numeric change, then review the
+fixture diff like any other code change::
+
+    PYTHONPATH=src python tools/regen_golden.py
+
+The run definitions live here (single source of truth); the test imports
+this module by path, so the fixtures and the replay can never disagree
+about the configuration.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests", "golden")
+
+#: fixture name -> run configuration. Keep these TINY: every case is
+#: replayed by tier-1 CI. ``driver`` selects the code path under pin.
+CASES = {
+    "soc_tuner_exact": {
+        "driver": "soc_tuner", "workload": "resnet50", "seed": 3,
+        "incremental": False},
+    "soc_tuner_incremental": {
+        "driver": "soc_tuner", "workload": "resnet50", "seed": 3,
+        "incremental": True},
+    "fleet_tuner_incremental": {
+        "driver": "fleet_tuner", "incremental": True,
+        "scenarios": [["resnet50", 0], ["transformer", 1]]},
+}
+
+#: shared tiny-run knobs (trajectory-defining; part of every fixture).
+RUN_KW = dict(T=6, n=10, b=8, gp_steps=25)
+N_POOL = 64
+POOL_SEED = 7
+
+
+def _setup():
+    import jax
+    import numpy as np
+
+    from repro.core import make_space
+
+    space = make_space()
+    pool = np.asarray(space.sample(jax.random.PRNGKey(POOL_SEED), N_POOL))
+    return space, pool
+
+
+def _reference_front(space, pool, workload):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.pareto import pareto_mask
+    from repro.soc import VLSIFlow
+
+    y = np.asarray(VLSIFlow(space, workload)(pool))
+    mask = np.asarray(pareto_mask(jnp.asarray(y.astype(np.float64))))
+    return y[mask]
+
+
+def run_case(name: str) -> dict:
+    """Execute one golden case; returns the record the fixture stores."""
+    import jax
+
+    from repro.core import FleetScenario, fleet_tuner, soc_tuner
+    from repro.soc import VLSIFlow
+
+    cfg = CASES[name]
+    space, pool = _setup()
+    if cfg["driver"] == "soc_tuner":
+        ref = _reference_front(space, pool, cfg["workload"])
+        res = soc_tuner(space, pool, VLSIFlow(space, cfg["workload"]),
+                        key=jax.random.PRNGKey(cfg["seed"]),
+                        incremental=cfg["incremental"],
+                        reference_front=ref, **RUN_KW)
+        results = {cfg["workload"]: res}
+    else:
+        scenarios = [FleetScenario(wl, seed=s)
+                     for wl, s in cfg["scenarios"]]
+        fronts = {wl: _reference_front(space, pool, wl)
+                  for wl in {sc.workload for sc in scenarios}}
+        fr = fleet_tuner(space, pool, scenarios,
+                         incremental=cfg["incremental"],
+                         reference_fronts=fronts, **RUN_KW)
+        results = {sc.label: r for sc, r in zip(fr.scenarios, fr.results)}
+    return {
+        "config": {**cfg, **RUN_KW, "n_pool": N_POOL,
+                   "pool_seed": POOL_SEED},
+        "trajectories": {
+            label: {
+                "evaluated_rows": [int(r) for r in res.evaluated_rows],
+                "final_adrs": float(res.history[-1]["adrs"]),
+            } for label, res in results.items()},
+    }
+
+
+def main() -> int:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name in CASES:
+        rec = run_case(name)
+        path = os.path.join(GOLDEN_DIR, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True)
+            f.write("\n")
+        n_traj = len(rec["trajectories"])
+        print(f"[golden] {name}: {n_traj} trajectories -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,9 +9,15 @@ ISSUE 4 service guarantees end to end:
 3. a re-run against the populated disk cache — it must dispatch ZERO flow
    evaluations.
 
+``--fleet`` runs the ISSUE 5 fleet-async variant instead: a 2-scenario
+``soc-service fleet`` run (fully async, ``min_done=1``, shared worker
+pool), SIGKILLed after an early checkpoint and resumed — every scenario's
+trajectory must match the uninterrupted reference bit-exactly — and the
+cache-gc verb is exercised on the populated flow cache.
+
 Run from the repo root (a scratch directory is created and removed)::
 
-    PYTHONPATH=src python tools/service_smoke.py
+    PYTHONPATH=src python tools/service_smoke.py [--fleet]
 """
 from __future__ import annotations
 
@@ -25,17 +31,75 @@ import tempfile
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_cli(args: list[str], env: dict, check: bool = True):
+def run_cli(args: list[str], env: dict, check: bool = True,
+            capture: bool = False):
     return subprocess.run(
         [sys.executable, "-m", "repro.service.cli", *args],
-        check=check, env=env, cwd=ROOT)
+        check=check, env=env, cwd=ROOT, capture_output=capture, text=True)
 
 
-def main() -> int:
+def _env() -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(ROOT, "src")]
         + env.get("PYTHONPATH", "").split(os.pathsep))
+    return env
+
+
+def main_fleet() -> int:
+    env = _env()
+    base = ["fleet", "--workloads", "resnet50,transformer", "--seeds", "0",
+            "--n-pool", "96", "--T", "3", "--q", "2", "--min-done", "1",
+            "--executor", "thread", "--workers", "4", "--gp-steps", "15",
+            "--n", "10", "--b", "8", "--quiet"]
+    with tempfile.TemporaryDirectory() as td:
+        ref = os.path.join(td, "ref.json")
+        ck = os.path.join(td, "ckpt")
+        cache = os.path.join(td, "flowcache")
+        res = os.path.join(td, "res.json")
+
+        print("[smoke:fleet] uninterrupted 2-scenario async reference ...")
+        run_cli(base + ["--out", ref], env)
+
+        print("[smoke:fleet] SIGKILL after the 3-evaluation checkpoint ...")
+        killed = run_cli(base + ["--checkpoint-dir", ck, "--cache-dir",
+                                 cache, "--kill-after", "3",
+                                 "--out", os.path.join(td, "dead.json")],
+                         env, check=False)
+        assert killed.returncode == -signal.SIGKILL, killed.returncode
+        assert not os.path.exists(os.path.join(td, "dead.json")), \
+            "killed run must not have produced a result"
+
+        print("[smoke:fleet] resume from the latest snapshot ...")
+        run_cli(base + ["--checkpoint-dir", ck, "--cache-dir", cache,
+                        "--resume", "--out", res], env)
+        a, b = json.load(open(ref)), json.load(open(res))
+        assert a["scenarios"].keys() == b["scenarios"].keys()
+        for label in a["scenarios"]:
+            sa, sb = a["scenarios"][label], b["scenarios"][label]
+            assert sa["evaluated_rows"] == sb["evaluated_rows"], \
+                (label, sa["evaluated_rows"], sb["evaluated_rows"])
+            assert sa["y"] == sb["y"], \
+                f"{label}: resumed metrics differ from reference"
+        n_evals = sum(len(s["evaluated_rows"])
+                      for s in a["scenarios"].values())
+        print(f"[smoke:fleet] resume bit-exact over {n_evals} evaluations "
+              f"across {len(a['scenarios'])} scenarios")
+
+        print("[smoke:fleet] cache-gc on the populated flow cache ...")
+        out = run_cli(["cache-gc", "--cache-dir", cache, "--max-bytes",
+                       "0"], env, capture=True)
+        assert "evicted" in out.stdout, out.stdout
+        remaining = [f for _, _, fs in os.walk(cache)
+                     for f in fs if f.endswith(".npy")]
+        assert not remaining, f"cache-gc left entries: {remaining}"
+        print(f"[smoke:fleet] {out.stdout.strip()}")
+    print("[smoke:fleet] PASS")
+    return 0
+
+
+def main() -> int:
+    env = _env()
     base = ["--workload", "resnet50", "--n-pool", "96", "--T", "4",
             "--q", "2", "--min-done", "2", "--executor", "thread",
             "--workers", "2", "--gp-steps", "15", "--n", "10", "--b", "8",
@@ -82,4 +146,4 @@ def main() -> int:
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    raise SystemExit(main_fleet() if "--fleet" in sys.argv[1:] else main())
