@@ -672,8 +672,45 @@ class _EngineBase:
                 [em, jnp.ones(em.shape[:-1] + (pad,), bool)], axis=-1)
         return em.reshape(em.shape[:-1] + (self._nc, self._C))
 
+    # --------------------------------------------------- lifecycle hooks
+    def _check_live(self) -> None:
+        if getattr(self, "_released", False):
+            raise RuntimeError(
+                "engine has been released: its device arrays are gone. "
+                "Build a fresh engine and load_state_dict() a snapshot "
+                "taken BEFORE release() to continue this trajectory")
+
+    def device_bytes(self) -> int:
+        """Approximate byte footprint of the engine's persistent arrays
+        (chunked pool, never-re-evaluate mask, incremental Cholesky/V
+        caches, last padded batch and frozen y*) — exactly what
+        :meth:`release` frees. The tuning server uses this to account for
+        evicted-vs-resident job engines."""
+        if getattr(self, "_released", False):
+            return 0
+        leaves = jax.tree_util.tree_leaves(
+            (self._pool_c, self._eval_mask, self._state,
+             self._last_batch, self._last_ystar))
+        return sum(int(getattr(a, "nbytes", 0)) for a in leaves)
+
+    def release(self) -> None:
+        """Evict this engine: drop every persistent device array and make
+        further observe/select/state_dict calls fail loudly. Preempting a
+        job must not keep its O(N) pool state resident — the owner takes
+        ``state_dict()`` first (the checkpoint), releases, and later
+        rebuilds a fresh engine via ``load_state_dict``. Idempotent."""
+        self._released = True
+        self._state = None
+        self._last_params = None
+        self._last_batch = None
+        self._last_ystar = None
+        self._eval_mask = None
+        self._pool_c = None
+        self.pool = None
+
     # -------------------------------------------- state (de)serialization
     def _base_state_dict(self) -> dict:
+        self._check_live()
         d = {
             "format": ENGINE_STATE_FORMAT,
             "kind": type(self).__name__,
@@ -796,6 +833,7 @@ class BOEngine(_EngineBase):
     # ------------------------------------------------------------- observe
     def observe(self, rows, y) -> None:
         """Append flow evaluations: pool rows + raw (minimized) metrics."""
+        self._check_live()
         rows = [int(r) for r in np.asarray(rows).reshape(-1)]
         y = np.atleast_2d(np.asarray(y, np.float32))
         if len(rows) != y.shape[0]:
@@ -819,6 +857,7 @@ class BOEngine(_EngineBase):
         ``sub_rows`` (optional [q] int) restricts the O(q³) joint frontier
         sampling, exactly like ``imoo_scores``'s ``frontier_cand``.
         """
+        self._check_live()
         if self._y is None or not self._rows:
             raise RuntimeError("select() before observe(): nothing to fit")
         if self.incremental:
@@ -848,6 +887,7 @@ class BOEngine(_EngineBase):
         the trailing pad region the next real round recomputes, so no
         fantasy value ever contaminates real posterior math.
         """
+        self._check_live()
         pending = [int(r) for r in pending]
         if q < 1:
             raise ValueError(f"select_q: q must be >= 1, got {q}")
@@ -1158,6 +1198,7 @@ class BatchedBOEngine(_EngineBase):
                 ) -> None:
         """Append per-scenario evaluations (lists of rows / [k,m] metrics).
         A scenario's entry may be empty (async fleets drain unevenly)."""
+        self._check_live()
         if len(rows_per_scenario) != self.S or len(ys_per_scenario) != self.S:
             raise ValueError(f"expected {self.S} per-scenario entries")
         scat_s, scat_r = [], []
@@ -1183,6 +1224,7 @@ class BatchedBOEngine(_EngineBase):
         ``keys`` [S, 2] per-scenario PRNG keys; ``sub_rows`` [S, q] optional
         per-scenario frontier subsets (None ⇒ whole pool).
         """
+        self._check_live()
         if any(y is None for y in self._ys):
             raise RuntimeError("select() before observe(): nothing to fit")
         if self.incremental:
@@ -1215,6 +1257,7 @@ class BatchedBOEngine(_EngineBase):
         sequential :meth:`BOEngine.select_q`, whose q picks are all
         consumed, keeps its strict capacity error instead).
         """
+        self._check_live()
         pending = ([[] for _ in range(self.S)] if pending is None
                    else [[int(r) for r in p] for p in pending])
         if len(pending) != self.S:

@@ -5,8 +5,10 @@ surrogate's ARD kernel (``core.gp``), TED initialization (``core.sampling``)
 and, through the GP, the IMOO acquisition — routes through
 :func:`pairdist_auto` instead of picking an implementation inline; Pareto
 dominance counting (``core.pareto``) routes through
-:func:`dominance_counts_auto` under the same dispatch rules with its own
-environment override (``REPRO_PARETO_BACKEND``). Dispatch:
+:func:`dominance_counts_auto` and batched SoC cost-model evaluation
+(``soc.flow.VLSIFlow``) through :func:`soc_metrics_auto`, each under the
+same dispatch rules with its own environment override
+(``REPRO_PARETO_BACKEND`` / ``REPRO_SYSTOLIC_BACKEND``). Dispatch:
 
 * ``"auto"``     — the ``REPRO_PAIRDIST_BACKEND`` environment variable if
   set (``xla`` / ``pallas`` / ``platform``), else ``"xla"``. XLA is the
@@ -39,10 +41,12 @@ from .pairdist.kernel import LANE, TILE_I, TILE_J, pairdist as _raw_pairdist
 __all__ = ["pairdist_auto", "pairdist_chunked", "auto_chunk",
            "resolve_backend", "sqdist_xla", "rbf_xla",
            "dominance_counts_auto", "resolve_pareto_backend",
-           "dominance_counts_xla"]
+           "dominance_counts_xla",
+           "soc_metrics_auto", "resolve_systolic_backend"]
 
 _ENV_VAR = "REPRO_PAIRDIST_BACKEND"
 _PARETO_ENV_VAR = "REPRO_PARETO_BACKEND"
+_SYSTOLIC_ENV_VAR = "REPRO_SYSTOLIC_BACKEND"
 _BACKENDS = ("auto", "platform", "pallas", "xla")
 
 #: default streaming budget for :func:`auto_chunk` (MB of f32 working set
@@ -163,6 +167,48 @@ def dominance_counts_auto(y: jnp.ndarray, *,
     from .pareto_count import ops as _ops
 
     return _ops.dominance_counts(y)
+
+
+# ------------------------------------------------------------ systolic_eval
+def resolve_systolic_backend(backend: str = "auto",
+                             n: int | None = None) -> str:
+    """Resolve the SoC cost-model backend for an [n, d] design batch — same
+    dispatch table as :func:`resolve_backend` with its own env override
+    (``REPRO_SYSTOLIC_BACKEND``): ``auto`` defaults to XLA everywhere (the
+    fidelity default — the reference ``repro.soc.model.soc_metrics``),
+    ``platform`` upgrades to the fused Pallas sweep kernel on TPU for
+    tile-worthy batch sizes."""
+    if backend == "auto":
+        backend = os.environ.get(_SYSTOLIC_ENV_VAR, "xla")
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown systolic backend {backend!r}; expected "
+                         f"one of {_BACKENDS}")
+    if backend in ("pallas", "xla"):
+        return backend
+    if jax.default_backend() != "tpu":
+        return "xla"
+    from .systolic_eval.kernel import TILE_N as _SE_TILE
+
+    if n is not None and n < _SE_TILE:
+        return "xla"
+    return "pallas"
+
+
+def soc_metrics_auto(vals: jnp.ndarray, layers: jnp.ndarray, *,
+                     backend: str = "auto") -> jnp.ndarray:
+    """Batched SoC metrics ``[N, 3]`` with automatic backend dispatch — the
+    ``systolic_eval`` member of the family: every ``soc_metrics`` consumer
+    (``VLSIFlow`` above all) routes here instead of choosing the reference
+    model or the Pallas sweep kernel inline. No tile-alignment requirement
+    on any path; the Pallas route pads the batch axis and slices back
+    inside ``systolic_eval.ops``."""
+    if resolve_systolic_backend(backend, vals.shape[0]) == "xla":
+        from repro.soc.model import soc_metrics as _soc_metrics
+
+        return _soc_metrics(vals, layers)
+    from .systolic_eval import ops as _ops
+
+    return _ops.soc_metrics(vals, layers)
 
 
 def auto_chunk(n: int, *, bytes_per_col: int = 4 * 3 * 256,

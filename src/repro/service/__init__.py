@@ -28,21 +28,38 @@ missing deployment layer on top of the incremental BO engine:
                    written flow results keyed by (workload, design point);
                    shared across fleet scenarios, service workers and runs;
                    ``gc()`` evicts LRU entries to a byte/age budget.
+- ``server``       :class:`TunerServer` + :func:`serve` — the multi-tenant
+                   job queue/scheduler: tuning jobs (:class:`JobSpec`)
+                   submitted over a JSON-lines TCP wire API are multiplexed
+                   onto ONE shared pool + flow cache as preemptible
+                   :class:`Job` state machines (pause/resume/cancel,
+                   priority admission, crash-restartable job table), each
+                   with the bitwise-identical trajectory it would have run
+                   alone.
+- ``jobs``         :class:`JobSpec` / :class:`Job` — the wire-serializable
+                   spec and the preemptible per-job state machine
+                   (checkpoint eviction through the ``state_dict`` codecs).
+- ``faults``       deterministic fault injection (:class:`FaultyFlow`,
+                   :class:`FaultyExecutor`) for the crash/retry test layer.
 - ``checkpoint``   versioned atomic snapshot files; ``soc_tuner`` /
-                   ``fleet_tuner`` / ``service_tuner`` / ``fleet_service``
-                   all write and resume from this one format.
+                   ``fleet_tuner`` / ``service_tuner`` / ``fleet_service`` /
+                   ``TunerServer`` jobs all write and resume from this one
+                   format.
 - ``cli``          the ``soc-service`` console driver (``run`` / ``fleet`` /
-                   ``cache-gc`` verbs).
+                   ``serve`` + wire clients / ``cache-gc`` verbs).
 
 See ``docs/service.md`` for the architecture, the checkpoint format, the
 cache layout and a worked async example.
 """
 from .checkpoint import (SNAPSHOT_VERSION, latest_snapshot, load_snapshot,
                          save_snapshot, snapshot_path)
+from .faults import FaultyExecutor, FaultyFlow, FlakyError
 from .fleet_runner import fleet_service
 from .flowcache import CachedFlow, FlowDiskCache
+from .jobs import Job, JobSpec
 from .pool import FlowPool, InlineExecutor
 from .runner import service_tuner
+from .server import TunerServer, request, serve
 
 __all__ = [
     "SNAPSHOT_VERSION", "save_snapshot", "load_snapshot", "latest_snapshot",
@@ -50,4 +67,6 @@ __all__ = [
     "FlowDiskCache", "CachedFlow",
     "FlowPool", "InlineExecutor",
     "service_tuner", "fleet_service",
+    "TunerServer", "serve", "request", "Job", "JobSpec",
+    "FaultyFlow", "FaultyExecutor", "FlakyError",
 ]

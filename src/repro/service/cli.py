@@ -1,6 +1,6 @@
 """``soc-service`` — command-line driver for the exploration service.
 
-Three verbs (a bare flag list keeps meaning the single-scenario run, so
+Verbs (a bare flag list keeps meaning the single-scenario run, so
 existing invocations are untouched):
 
 ``soc-service [run] --workload ...``
@@ -18,6 +18,20 @@ existing invocations are untouched):
     the async multi-scenario fleet (``fleet_service``): workloads × seeds
     scenarios over ONE shared worker pool, per-scenario deterministic
     trajectories, same checkpoint/resume story.
+
+``soc-service serve --port 7763 --checkpoint-dir runs/server ...``
+    the multi-tenant tuning server (``TunerServer`` + JSON-lines wire
+    API): jobs submitted over the wire (or seeded via ``--jobs-file``)
+    are multiplexed onto ONE shared worker pool + flow cache, each with
+    the same deterministic trajectory it would have alone. A SIGKILL'd
+    server restarted with ``--resume`` continues every job bit-exactly.
+
+``soc-service submit|status|pause|resume|cancel|shutdown --port ...``
+    one-shot wire clients for a running server::
+
+        soc-service submit --port 7763 --workload resnet50 --T 40 --q 4
+        soc-service status --port 7763
+        soc-service pause --port 7763 --job j0000
 
 ``soc-service cache-gc --cache-dir ... [--max-bytes N] [--max-age-days D]``
     LRU eviction for the content-addressed flow cache
@@ -41,6 +55,7 @@ import jax
 import numpy as np
 
 __all__ = ["main", "build_parser", "build_fleet_parser",
+           "build_serve_parser", "build_client_parser",
            "build_cache_gc_parser"]
 
 
@@ -145,6 +160,93 @@ def build_fleet_parser() -> argparse.ArgumentParser:
     return p
 
 
+def build_serve_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="soc-service serve",
+        description="multi-tenant tuning server over one shared worker "
+                    "pool (JSON-lines-over-TCP control plane)")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=0,
+                   help="TCP port for the wire API (0 = pick a free one)")
+    p.add_argument("--port-file", default=None,
+                   help="write the bound port here once listening (for "
+                        "--port 0 automation)")
+    p.add_argument("--n-pool", type=int, default=1024)
+    p.add_argument("--pool-seed", type=int, default=0,
+                   help="PRNG seed of the deterministic pool sample")
+    p.add_argument("--workers", type=int, default=4,
+                   help="shared pool workers")
+    p.add_argument("--executor", default="process",
+                   choices=("process", "thread", "inline"))
+    p.add_argument("--max-active", type=int, default=None,
+                   help="cap on concurrently RUNNING (engine-resident) "
+                        "jobs; default unlimited")
+    p.add_argument("--retries", type=int, default=0,
+                   help="per-design re-dispatch budget for failed flow "
+                        "evaluations")
+    p.add_argument("--cache-dir", default=None,
+                   help="content-addressed on-disk flow cache root")
+    p.add_argument("--checkpoint-dir", default=None,
+                   help="server manifest + per-job snapshot root (required "
+                        "for crash recovery)")
+    p.add_argument("--checkpoint-every", type=int, default=1)
+    p.add_argument("--resume", action="store_true",
+                   help="reload the job table from the manifest and resume "
+                        "every live job bit-exactly")
+    p.add_argument("--jobs-file", default=None,
+                   help="JSON list of job spec dicts to submit at startup "
+                        "(skipped when --resume finds an existing job "
+                        "table)")
+    p.add_argument("--drain-exit", action="store_true",
+                   help="exit once every submitted job has settled "
+                        "(DONE/FAILED/CANCELLED) instead of serving "
+                        "forever")
+    p.add_argument("--poll-s", type=float, default=0.05,
+                   help="idle wire-poll interval in seconds")
+    p.add_argument("--mock-flow-delay", type=float, default=None,
+                   help="wrap every flow in a per-call sleep of this many "
+                        "seconds (mock of a real flow's latency)")
+    p.add_argument("--out", default=None,
+                   help="write per-job results as JSON here on exit")
+    p.add_argument("--kill-after", type=int, default=None,
+                   help="test hook: SIGKILL right after the checkpoint "
+                        "covering this many TOTAL server evaluations")
+    p.add_argument("--quiet", action="store_true")
+    return p
+
+
+def build_client_parser(verb: str) -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog=f"soc-service {verb}",
+        description=f"send one '{verb}' request to a running server")
+    p.add_argument("--port", type=int, required=True)
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--timeout", type=float, default=120.0)
+    if verb in ("pause", "resume", "cancel"):
+        p.add_argument("--job", required=True)
+    elif verb == "status":
+        p.add_argument("--job", default=None)
+    elif verb == "submit":
+        p.add_argument("--spec", default=None,
+                       help="full JSON spec dict (overrides the flags "
+                            "below)")
+        p.add_argument("--workload", default="resnet50")
+        p.add_argument("--seed", type=int, default=0)
+        p.add_argument("--weights", default=None,
+                       help="comma-separated objective weights, e.g. "
+                            "'1,2,1'")
+        p.add_argument("--T", type=int, default=40)
+        p.add_argument("--q", type=int, default=1)
+        p.add_argument("--min-done", type=int, default=1)
+        p.add_argument("--fantasy", default="mean",
+                       choices=("mean", "cl_min", "cl_max"))
+        p.add_argument("--priority", type=int, default=0)
+        p.add_argument("--n", type=int, default=30)
+        p.add_argument("--b", type=int, default=20)
+        p.add_argument("--gp-steps", type=int, default=150)
+    return p
+
+
 def build_cache_gc_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="soc-service cache-gc",
@@ -215,6 +317,89 @@ def main_fleet(argv=None) -> int:
     return 0
 
 
+def main_serve(argv=None) -> int:
+    a = build_serve_parser().parse_args(argv)
+    from repro.core import make_space
+    from repro.soc import DelayedFlow, VLSIFlow
+    from .jobs import JobSpec
+    from .server import TunerServer, serve
+
+    space = make_space()
+    pool = np.asarray(space.sample(jax.random.PRNGKey(a.pool_seed), a.n_pool))
+    delay = a.mock_flow_delay
+    if delay is not None:
+        flow_factory = lambda wl: DelayedFlow(VLSIFlow(space, wl), delay)
+    else:
+        flow_factory = None
+
+    server = TunerServer(
+        space, pool, max_workers=a.workers, executor=a.executor,
+        flow_factory=flow_factory, cache_dir=a.cache_dir,
+        checkpoint_dir=a.checkpoint_dir, checkpoint_every=a.checkpoint_every,
+        max_active=a.max_active, retries=a.retries, resume=a.resume,
+        verbose=not a.quiet, _kill_after=a.kill_after)
+    if a.jobs_file and not server.jobs:
+        with open(a.jobs_file) as f:
+            for spec in json.load(f):
+                server.submit(JobSpec.from_dict(spec))
+
+    def ready(port):
+        if a.port_file:
+            tmp = a.port_file + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(str(port))
+            os.replace(tmp, a.port_file)
+
+    try:
+        serve(server, a.host, a.port, drain_exit=a.drain_exit,
+              poll_s=a.poll_s, ready_cb=ready)
+    finally:
+        server.close()
+
+    if not a.quiet:
+        for job in server.jobs.values():
+            print(f"[server] {job.label}: {job.status} "
+                  f"({job.done}/{job.spec.T} evaluations)")
+    if a.out:
+        os.makedirs(os.path.dirname(os.path.abspath(a.out)), exist_ok=True)
+        with open(a.out, "w") as f:
+            json.dump({
+                "jobs": {
+                    jid: {"label": job.label, "status": job.status,
+                          "error": job.error, **(job.result_dict() or {})}
+                    for jid, job in server.jobs.items()},
+                "status": server.status(),
+            }, f, indent=2)
+        if not a.quiet:
+            print(f"[server] results -> {a.out}")
+    return 0
+
+
+def main_client(verb: str, argv=None) -> int:
+    a = build_client_parser(verb).parse_args(argv)
+    from .server import request
+
+    req: dict = {"verb": verb}
+    if verb in ("pause", "resume", "cancel"):
+        req["job"] = a.job
+    elif verb == "status" and a.job is not None:
+        req["job"] = a.job
+    elif verb == "submit":
+        if a.spec is not None:
+            spec = json.loads(a.spec)
+        else:
+            spec = {"workload": a.workload, "seed": a.seed, "T": a.T,
+                    "q": a.q, "min_done": a.min_done, "fantasy": a.fantasy,
+                    "priority": a.priority, "n": a.n, "b": a.b,
+                    "gp_steps": a.gp_steps}
+            if a.weights is not None:
+                spec["weights"] = [float(w) for w in a.weights.split(",")]
+        req["spec"] = spec
+    reply = request(a.port, req, host=a.host, timeout=a.timeout)
+    print(json.dumps(reply, indent=2))
+    return 0 if reply.get("ok") else 1
+
+
 def main_cache_gc(argv=None) -> int:
     a = build_cache_gc_parser().parse_args(argv)
     from .flowcache import FlowDiskCache
@@ -234,6 +419,11 @@ def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] == "fleet":
         return main_fleet(argv[1:])
+    if argv and argv[0] == "serve":
+        return main_serve(argv[1:])
+    if argv and argv[0] in ("submit", "status", "pause", "resume",
+                            "cancel", "shutdown"):
+        return main_client(argv[0], argv[1:])
     if argv and argv[0] == "cache-gc":
         return main_cache_gc(argv[1:])
     if argv and argv[0] == "run":

@@ -81,12 +81,21 @@ class FlowPool:
     retired when its first ticket drains, and a FAILED evaluation never
     blocks resubmission), which together with the disk cache means
     concurrent scenarios never pay for the same design point twice.
+
+    ``retries`` re-dispatches a FAILED evaluation (worker death, flow
+    exception) up to that many times at wait time, transparently to the
+    ticket holder: every ticket riding the failed dispatch is repointed at
+    the retry, the in-flight dedup entry is replaced (never poisoned), and
+    only when the budget is exhausted does the failure surface from
+    :meth:`collect`/:meth:`drain`. :meth:`abandon` forgets tickets without
+    observing them (job preemption): running dispatches are left to finish
+    and their results still land in the disk cache.
     """
 
     def __init__(self, flow, *, workload: str = "workload",
                  max_workers: int = 4, executor="process",
                  cache: FlowDiskCache | str | None = None,
-                 mp_context: str = "spawn"):
+                 mp_context: str = "spawn", retries: int = 0):
         self.flow = flow
         self.workload = str(workload)
         self.cache = (None if cache is None else
@@ -106,16 +115,23 @@ class FlowPool:
                              "'process', 'thread', 'inline' or an Executor")
         else:
             self._ex = executor
+        self.retries = int(retries)
+        if self.retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
         self._next_ticket = 0
         self._rows: dict[int, int] = {}          # ticket -> pool row
         self._idx: dict[int, np.ndarray] = {}    # ticket -> design point
         self._wl: dict[int, str] = {}            # ticket -> workload
+        self._flowref: dict[int, object] = {}    # ticket -> flow callable
         self._futs: dict[int, cf.Future] = {}    # tickets on workers
         self._ready: dict[int, np.ndarray] = {}  # completed, unconsumed
         self._inflight: dict[str, cf.Future] = {}  # content key -> future
+        self._retry_counts: dict[str, int] = {}  # content key -> re-dispatches
         self.cache_hits = 0
         self.inflight_hits = 0
         self.dispatched = 0
+        self.retried = 0
+        self.abandoned = 0
 
     # ---------------------------------------------------------------- submit
     def _new_ticket(self, row: int) -> int:
@@ -155,6 +171,7 @@ class FlowPool:
         else:
             self.inflight_hits += 1
         self._futs[t] = fut
+        self._flowref[t] = fl
         return t
 
     def submit_resolved(self, row: int, y: np.ndarray) -> int:
@@ -171,6 +188,39 @@ class FlowPool:
         return len(self._rows)
 
     # ----------------------------------------------------------------- drain
+    def _wait(self, t: int, timeout: float | None = None) -> None:
+        """Block until ticket ``t``'s dispatch succeeds, re-dispatching a
+        failed evaluation up to ``self.retries`` times. Each retry replaces
+        the in-flight dedup entry and repoints EVERY ticket riding the
+        failed future, so sharers retry once collectively and a later
+        identical submit is never poisoned by the stale failure. Exhausted
+        budget re-raises the last failure to the caller."""
+        while True:
+            fut = self._futs[t]
+            try:
+                fut.result(timeout)
+                return
+            except cf.TimeoutError:
+                raise
+            except Exception as exc:
+                key = FlowDiskCache.key(self._wl[t], self._idx[t])
+                cur = self._inflight.get(key)
+                if cur is not None and cur is not fut:
+                    new = cur  # another waiter already re-dispatched
+                elif self._retry_counts.get(key, 0) >= self.retries:
+                    raise exc
+                else:
+                    self._retry_counts[key] = \
+                        self._retry_counts.get(key, 0) + 1
+                    self.retried += 1
+                    self.dispatched += 1
+                    new = self._ex.submit(_flow_task, self._flowref[t],
+                                          self._idx[t])
+                    self._inflight[key] = new
+                for t2, f2 in list(self._futs.items()):
+                    if f2 is fut:
+                        self._futs[t2] = new
+
     def _complete(self, t: int) -> None:
         fut = self._futs.pop(t)
         y = np.asarray(fut.result())
@@ -183,6 +233,7 @@ class FlowPool:
             # running) and owns the single disk write-back; tickets sharing
             # the future skip both.
             del self._inflight[key]
+            self._retry_counts.pop(key, None)
             if self.cache is not None:
                 self.cache.put(wl, self._idx[t], y)
         self._ready[t] = y
@@ -190,7 +241,46 @@ class FlowPool:
     def _pop(self, t: int) -> tuple[int, int, np.ndarray]:
         self._idx.pop(t, None)
         self._wl.pop(t, None)
+        self._flowref.pop(t, None)
         return t, self._rows.pop(t), self._ready.pop(t)
+
+    def abandon(self, tickets) -> int:
+        """Forget the listed tickets without observing their results.
+
+        Preempting a job must neither block on nor discard work already on
+        a worker: an abandoned ticket's dispatch keeps running, and when it
+        lands its result is still retired from the in-flight table and
+        written back to the disk cache by a done-callback (failures are
+        dropped — nobody is left to observe them), so a later resume turns
+        the re-dispatch into a cache hit. Unknown or already-drained
+        tickets are skipped (fail paths race with partially collected
+        drains). Returns the number of tickets actually abandoned."""
+        n = 0
+        for t in tickets:
+            t = int(t)
+            if t not in self._rows:
+                continue
+            n += 1
+            self._rows.pop(t)
+            self._ready.pop(t, None)
+            idx = self._idx.pop(t, None)
+            wl = self._wl.pop(t, None)
+            self._flowref.pop(t, None)
+            fut = self._futs.pop(t, None)
+            if fut is None or idx is None:
+                continue
+            if any(f is fut for f in self._futs.values()):
+                continue  # another live ticket still owns this dispatch
+            key = FlowDiskCache.key(wl, idx)
+            if self._inflight.get(key) is fut:
+                def _retire(f, key=key, fut=fut, wl=wl, idx=idx):
+                    if self._inflight.get(key) is fut:
+                        del self._inflight[key]
+                        if f.exception() is None and self.cache is not None:
+                            self.cache.put(wl, idx, np.asarray(f.result()))
+                fut.add_done_callback(_retire)
+        self.abandoned += n
+        return n
 
     def collect(self, tickets) -> list[tuple[int, int, np.ndarray]]:
         """Block until every listed ticket has completed and release exactly
@@ -208,7 +298,7 @@ class FlowPool:
                 raise KeyError(f"collect: unknown or already-drained "
                                f"ticket {t}")
             if t not in self._ready:
-                self._futs[t].result()
+                self._wait(t)
                 self._complete(t)
             out.append(self._pop(t))
         return out
@@ -232,7 +322,7 @@ class FlowPool:
             while self._rows and len(out) < min_done:
                 t = min(self._rows)
                 if t not in self._ready:
-                    self._futs[t].result(timeout)  # block on the oldest
+                    self._wait(t, timeout)  # block on the oldest
                     self._complete(t)
                 out.append(self._pop(t))
             return out
@@ -245,6 +335,8 @@ class FlowPool:
             done, _ = cf.wait(list(self._futs.values()), timeout=timeout,
                               return_when=cf.FIRST_COMPLETED)
             for t in [t for t, f in self._futs.items() if f in done]:
+                if self._futs[t].exception() is not None:
+                    self._wait(t)  # retry in place; raises when exhausted
                 self._complete(t)
         return out
 

@@ -21,7 +21,6 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.space import DesignSpace
-from .model import soc_metrics
 from .simplified import simplified_metrics
 from .workloads import get_workload
 
@@ -55,13 +54,14 @@ class VLSIFlow:
         self.calls += 1
         self.evaluated += idx.shape[0]
         vals = self.space.values(idx)
-        if self.use_kernel:
-            from repro.kernels.systolic_eval import ops as _ops
+        # use_kernel=True pins the Pallas sweep kernel; otherwise dispatch
+        # follows the shared backend table (env override, TPU platform
+        # upgrade) like every other kernel family.
+        from repro.kernels.backend import soc_metrics_auto
 
-            return np.asarray(_ops.soc_metrics(jnp.asarray(vals, jnp.float32),
-                                               self._layers_j))
-        return np.asarray(soc_metrics(jnp.asarray(vals, jnp.float32),
-                                      self._layers_j))
+        return np.asarray(soc_metrics_auto(
+            jnp.asarray(vals, jnp.float32), self._layers_j,
+            backend="pallas" if self.use_kernel else "auto"))
 
 
 class SimplifiedFlow(VLSIFlow):

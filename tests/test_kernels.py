@@ -171,6 +171,35 @@ def test_systolic_eval_sweep(workload, n):
                                rtol=1e-6, atol=1e-6)
 
 
+# -------------------------------------------- systolic_eval backend dispatch
+def test_systolic_backend_dispatch(monkeypatch):
+    """VLSIFlow routes through the unified kernels/backend dispatch point
+    (same pattern as pairdist/pareto_count): auto resolves to the reference
+    XLA cost model by default, ``use_kernel=True`` forces the Pallas sweep
+    kernel, and REPRO_SYSTOLIC_BACKEND upgrades every auto call."""
+    from repro.kernels import backend as kb
+    from repro.soc import VLSIFlow
+
+    space = make_space()
+    idx = np.asarray(space.sample(jax.random.PRNGKey(5), 21))
+    vals = jnp.asarray(space.values(idx), jnp.float32)
+    layers = jnp.asarray(get_workload("resnet50"), jnp.float32)
+    auto = np.asarray(kb.soc_metrics_auto(vals, layers))
+    # default resolution is the reference model on every platform, bit-equal
+    assert kb.resolve_systolic_backend("auto", vals.shape[0]) == "xla"
+    assert (auto == np.asarray(soc_metrics(vals, layers))).all()
+    assert (auto == np.asarray(VLSIFlow(space, "resnet50")(idx))).all()
+    # use_kernel pins the Pallas sweep; dispatch and inline kernel agree
+    forced = np.asarray(VLSIFlow(space, "resnet50", use_kernel=True)(idx))
+    assert (forced == np.asarray(se_ops.soc_metrics(vals, layers))).all()
+    np.testing.assert_allclose(forced, auto, rtol=1e-6, atol=1e-6)
+    monkeypatch.setenv("REPRO_SYSTOLIC_BACKEND", "pallas")
+    assert kb.resolve_systolic_backend("auto", vals.shape[0]) == "pallas"
+    assert (np.asarray(VLSIFlow(space, "resnet50")(idx)) == forced).all()
+    with pytest.raises(ValueError, match="systolic backend"):
+        kb.resolve_systolic_backend("bogus")
+
+
 # --------------------------------------------- pareto_count backend dispatch
 def test_pareto_backend_dispatch(monkeypatch):
     """core.pareto.dominance_counts routes through the unified

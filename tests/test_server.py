@@ -1,0 +1,631 @@
+"""Multi-tenant tuning server: scheduler, preemption, faults (ISSUE 6).
+
+The contract under test:
+- a job multiplexed with OTHER jobs on one shared ``FlowPool`` + disk
+  cache has the bitwise-identical trajectory it would have running alone
+  through ``fleet_service`` (the golden fixture
+  ``tests/golden/server_two_jobs.json`` pins the multiplexed side; the
+  acceptance test here pins the isolated side against the same fixture);
+- pause → resume (in memory, from disk, across a true SIGKILL of the
+  ``soc-service serve`` process) restores a job bit-exactly through the
+  existing ``state_dict`` codecs, and eviction actually frees the
+  engine's device arrays;
+- injected worker faults (``FaultyFlow`` / ``FaultyExecutor``) are
+  retried without poisoning the pool's in-flight dedup key and without
+  changing the trajectory; with no retry budget they isolate to a FAILED
+  job that resumes to the fault-free trajectory;
+- the scheduler's admission/stepping policy is deterministic, starvation-
+  free and budget-exact under arbitrary pause/resume/cancel interleavings
+  (seeded fuzz here; the Hypothesis twin lives in
+  ``test_server_properties.py``).
+"""
+import concurrent.futures as cf
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FleetScenario
+from repro.service import (FaultyExecutor, FaultyFlow, FlakyError, FlowPool,
+                           JobSpec, TunerServer, fleet_service, request,
+                           serve)
+from repro.soc import VLSIFlow
+
+from test_service import _ReversedBatchExecutor
+
+KW = dict(T=4, n=10, b=6, gp_steps=25)
+RESNET = dict(workload="resnet50", seed=0, q=2, min_done=1, **KW)
+TRANSF = dict(workload="transformer", seed=1, q=1, **KW)
+
+
+@pytest.fixture(scope="module")
+def pool96(space):
+    return np.asarray(space.sample(jax.random.PRNGKey(7), 96))
+
+
+def _isolated(space, pool, spec_kw, cache_dir=None):
+    """The reference: this job alone through fleet_service."""
+    sc = FleetScenario(spec_kw["workload"], seed=spec_kw["seed"])
+    kw = {k: v for k, v in spec_kw.items()
+          if k not in ("workload", "seed")}
+    return fleet_service(space, pool, [sc], executor="inline",
+                         cache_dir=cache_dir, **kw).results[0]
+
+
+@pytest.fixture(scope="module")
+def ref_resnet(space, pool96):
+    return _isolated(space, pool96, RESNET)
+
+
+@pytest.fixture(scope="module")
+def ref_transformer(space, pool96):
+    return _isolated(space, pool96, TRANSF)
+
+
+def _strip_wall(history):
+    return [{k: v for k, v in rec.items() if k != "wall_s"}
+            for rec in history]
+
+
+def _assert_same_trajectory(res, ref):
+    assert np.array_equal(res.evaluated_rows, ref.evaluated_rows)
+    assert np.array_equal(res.y, ref.y)
+    assert _strip_wall(res.history) == _strip_wall(ref.history)
+
+
+# ------------------------------------------------------------------ JobSpec
+def test_jobspec_validation_and_roundtrip():
+    spec = JobSpec(workload="resnet50", seed=3, weights=[1, 2, 1],
+                   T=7, q=3, min_done=2, priority=5)
+    assert spec.weights == (1.0, 2.0, 1.0)  # coerced to a float tuple
+    assert JobSpec.from_dict(spec.as_dict()) == spec
+    assert spec.scenario.label == "resnet50:s3:w1x2x1"
+    with pytest.raises(ValueError, match="T must be"):
+        JobSpec(T=0)
+    with pytest.raises(ValueError, match="q must be"):
+        JobSpec(q=0)
+    with pytest.raises(ValueError, match="min_done"):
+        JobSpec(q=2, min_done=3)
+    with pytest.raises(ValueError, match="incremental"):
+        JobSpec(q=2, incremental=False)
+    with pytest.raises(ValueError, match="fantasy"):
+        JobSpec(fantasy="nope")
+    with pytest.raises(ValueError, match="weights"):
+        JobSpec(weights=(1.0, 2.0))
+    with pytest.raises(ValueError, match="unknown JobSpec field"):
+        JobSpec.from_dict({"workload": "resnet50", "bogus": 1})
+
+
+# ------------------------------------------------- multi-tenant isolation
+def test_single_job_matches_fleet_service(space, pool96, ref_resnet):
+    with TunerServer(space, pool96, executor="inline") as srv:
+        jid = srv.submit(JobSpec(**RESNET))
+        srv.run_until_idle()
+        job = srv.job(jid)
+        assert job.status == "DONE"
+        assert job.done == KW["T"]
+        _assert_same_trajectory(job.result(), ref_resnet)
+
+
+def test_two_jobs_multiplexed_match_isolated(tmp_path, space, pool96):
+    """The acceptance shape: two jobs multiplexed over ONE pool + disk
+    cache vs the same two scenarios run in isolation sharing their own
+    disk cache — bitwise-identical trajectories."""
+    iso_r = _isolated(space, pool96, RESNET, cache_dir=str(tmp_path / "i"))
+    iso_t = _isolated(space, pool96, TRANSF, cache_dir=str(tmp_path / "i"))
+    with TunerServer(space, pool96, executor="inline",
+                     cache_dir=str(tmp_path / "m")) as srv:
+        jr = srv.submit(JobSpec(**RESNET))
+        jt = srv.submit(JobSpec(**TRANSF))
+        srv.run_until_idle()
+        _assert_same_trajectory(srv.job(jr).result(), iso_r)
+        _assert_same_trajectory(srv.job(jt).result(), iso_t)
+
+
+def test_golden_fixture_matches_isolated_fleet_runs(tmp_path):
+    """tests/golden/server_two_jobs.json pins the MULTIPLEXED trajectories
+    (replayed by test_golden.py); here the other half of the acceptance
+    criterion: two isolated fleet_service runs sharing a disk cache land
+    on the same pinned pick sequences."""
+    import importlib.util
+
+    from repro.core import make_space
+
+    tools = os.path.join(os.path.dirname(__file__), "..", "tools",
+                         "regen_golden.py")
+    spec = importlib.util.spec_from_file_location("regen_golden", tools)
+    rg = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(rg)
+
+    with open(os.path.join(os.path.dirname(__file__), "golden",
+                           "server_two_jobs.json")) as f:
+        pinned = json.load(f)
+    space = make_space()
+    pool = np.asarray(space.sample(jax.random.PRNGKey(rg.POOL_SEED),
+                                   rg.N_POOL))
+    cache = str(tmp_path / "fc")
+    for i, (wl, seed, extra) in enumerate(pinned["config"]["jobs"]):
+        res = _isolated(space, pool,
+                        dict(workload=wl, seed=seed, **extra, **rg.RUN_KW),
+                        cache_dir=cache)
+        label = f"j{i:04d}:{FleetScenario(wl, seed=seed).label}"
+        assert [int(r) for r in res.evaluated_rows] == \
+            pinned["trajectories"][label]["evaluated_rows"], (
+            f"{label}: isolated fleet_service run diverged from the "
+            "golden multiplexed trajectory")
+
+
+def test_reversed_completion_order_is_deterministic(space, pool96):
+    """Workers finishing in reverse order change nothing: the per-job
+    ticket-ordered exact-min_done drain pins the feedback order."""
+    kw = dict(RESNET, min_done=2)  # barrier drain: submissions arrive in
+    ref = _isolated(space, pool96, kw)  # pairs = the executor's batch size
+    with TunerServer(space, pool96,
+                     executor=_ReversedBatchExecutor(2)) as srv:
+        jid = srv.submit(JobSpec(**kw))
+        srv.run_until_idle()
+        _assert_same_trajectory(srv.job(jid).result(), ref)
+
+
+# ------------------------------------------------------ preemption / resume
+def test_pause_resume_bit_exact(space, pool96, ref_resnet):
+    with TunerServer(space, pool96, executor="inline") as srv:
+        jid = srv.submit(JobSpec(**RESNET))
+        srv.run_cycle()
+        srv.run_cycle()
+        srv.pause(jid)
+        job = srv.job(jid)
+        assert job.status == "PAUSED"
+        assert job.info()["engine_bytes"] == 0  # device arrays freed
+        assert job._engine is None
+        srv.resume_job(jid)
+        srv.run_until_idle()
+        assert srv.job(jid).status == "DONE"
+        _assert_same_trajectory(srv.job(jid).result(), ref_resnet)
+
+
+def test_pause_resume_from_disk_snapshot(tmp_path, space, pool96,
+                                         ref_resnet):
+    """The on-disk path: drop the in-memory eviction record so the resume
+    must reload through the versioned snapshot codec."""
+    with TunerServer(space, pool96, executor="inline",
+                     checkpoint_dir=str(tmp_path)) as srv:
+        jid = srv.submit(JobSpec(**RESNET))
+        srv.run_cycle()
+        srv.run_cycle()
+        srv.pause(jid)
+        job = srv.job(jid)
+        assert job._snap_mem is not None
+        job._snap_mem = None  # force the disk route
+        srv.resume_job(jid)
+        srv.run_until_idle()
+        assert srv.job(jid).status == "DONE"
+        _assert_same_trajectory(srv.job(jid).result(), ref_resnet)
+
+
+def test_pause_before_admission_and_cancel(space, pool96):
+    with TunerServer(space, pool96, executor="inline", max_active=1) as srv:
+        j0 = srv.submit(JobSpec(**RESNET))
+        j1 = srv.submit(JobSpec(**TRANSF))
+        srv.pause(j1)  # never admitted: pausing must not need an engine
+        assert srv.job(j1).status == "PAUSED"
+        srv.cancel(j1)
+        assert srv.job(j1).status == "CANCELLED"
+        with pytest.raises(ValueError, match="already CANCELLED"):
+            srv.cancel(j1)
+        srv.run_until_idle()
+        assert srv.job(j0).status == "DONE"
+        assert srv.job(j1).done == 0  # cancelled before any evaluation
+
+
+def test_server_kill_resume_in_process(tmp_path, space, pool96,
+                                       ref_resnet, ref_transformer):
+    """Abandon a live server object (the in-process stand-in for a crash)
+    and rebuild from its manifest: every job continues bit-exactly."""
+    srv = TunerServer(space, pool96, executor="inline",
+                      checkpoint_dir=str(tmp_path))
+    jr = srv.submit(JobSpec(**RESNET))
+    jt = srv.submit(JobSpec(**TRANSF))
+    srv.run_cycle()
+    srv.run_cycle()
+    for job in srv.jobs.values():  # what the serve() loop does on exit
+        if job.status == "RUNNING":
+            job.checkpoint()
+    srv._save_manifest()
+    del srv  # never closed — the "crash"
+
+    with TunerServer(space, pool96, executor="inline",
+                     checkpoint_dir=str(tmp_path), resume=True) as srv2:
+        assert set(srv2.jobs) == {jr, jt}
+        assert all(j.status == "PENDING" for j in srv2.jobs.values())
+        srv2.run_until_idle()
+        _assert_same_trajectory(srv2.job(jr).result(), ref_resnet)
+        _assert_same_trajectory(srv2.job(jt).result(), ref_transformer)
+
+
+def test_resume_rejects_different_pool(tmp_path, space, pool96):
+    with TunerServer(space, pool96, executor="inline",
+                     checkpoint_dir=str(tmp_path)) as srv:
+        srv.submit(JobSpec(**RESNET))
+    other = np.asarray(space.sample(jax.random.PRNGKey(8), 96))
+    with pytest.raises(ValueError, match="different.*pool"):
+        TunerServer(space, other, executor="inline",
+                    checkpoint_dir=str(tmp_path), resume=True)
+
+
+# -------------------------------------------------------------- scheduling
+def test_priority_admission_under_max_active(space, pool96):
+    """With one engine slot, the high-priority latecomer is admitted first
+    and runs to completion before the earlier low-priority job starts."""
+    with TunerServer(space, pool96, executor="inline", max_active=1) as srv:
+        lo = srv.submit(JobSpec(**dict(TRANSF, priority=0)))
+        hi = srv.submit(JobSpec(**dict(RESNET, priority=5)))
+        srv.run_cycle()
+        assert srv.job(hi).status == "RUNNING"
+        assert srv.job(lo).status == "PENDING"
+        srv.run_until_idle()
+        assert srv.job(hi).admit_seq < srv.job(lo).admit_seq
+        assert srv.job(hi).status == srv.job(lo).status == "DONE"
+
+
+def test_equal_priority_jobs_step_every_cycle(space, pool96):
+    """No starvation: every RUNNING job advances every cycle."""
+    with TunerServer(space, pool96, executor="inline") as srv:
+        a = srv.submit(JobSpec(**RESNET))
+        b = srv.submit(JobSpec(**TRANSF))
+        srv.run_cycle()
+        cyc = (srv.job(a).cycle, srv.job(b).cycle)
+        srv.run_cycle()
+        assert srv.job(a).cycle == cyc[0] + 1
+        assert srv.job(b).cycle == cyc[1] + 1
+
+
+# ------------------------------------------------------------------ faults
+def test_pool_retries_failed_dispatch(space, pool96):
+    flow = VLSIFlow(space, "resnet50")
+    inner = cf.ThreadPoolExecutor(2)
+    fpool = FlowPool(flow, executor=FaultyExecutor(inner,
+                                                   fail_submissions={0}),
+                     retries=1)
+    t = fpool.submit(0, pool96[0])
+    (_, row, y), = fpool.collect([t])
+    assert row == 0
+    assert np.array_equal(y, np.asarray(flow(pool96[0]))[0])
+    assert fpool.retried == 1 and fpool.dispatched == 2
+    fpool.close()
+    inner.shutdown()
+
+
+def test_pool_exhausted_retries_surface_without_poisoning_dedup(space,
+                                                                pool96):
+    flow = VLSIFlow(space, "resnet50")
+    inner = cf.ThreadPoolExecutor(2)
+    fpool = FlowPool(flow, executor=FaultyExecutor(inner,
+                                                   fail_submissions={0}),
+                     retries=0)
+    t = fpool.submit(0, pool96[0])
+    with pytest.raises(FlakyError):
+        fpool.collect([t])
+    # the failed dispatch must not poison the in-flight key: the same
+    # design point resubmits cleanly and evaluates
+    t2 = fpool.submit(0, pool96[0])
+    (_, _, y), = fpool.collect([t2])
+    assert np.array_equal(y, np.asarray(flow(pool96[0]))[0])
+    assert fpool.dispatched == 2 and fpool.retried == 0
+    fpool.close()
+    inner.shutdown()
+
+
+def test_trajectory_unchanged_under_retried_flow_fault(space, pool96,
+                                                       ref_resnet):
+    """The prologue is flow calls 0-1 (trial + init flush); call 2 is the
+    first BO evaluation — kill it, let the pool retry, and the job must
+    not be able to tell."""
+    faulty = {}
+
+    def factory(wl):
+        faulty[wl] = FaultyFlow(VLSIFlow(space, wl), fail_calls={2})
+        return faulty[wl]
+
+    with TunerServer(space, pool96, executor="thread", max_workers=1,
+                     flow_factory=factory, retries=1) as srv:
+        jid = srv.submit(JobSpec(**RESNET))
+        srv.run_until_idle()
+        job = srv.job(jid)
+        assert job.status == "DONE", job.error
+        assert faulty["resnet50"].calls > 3  # the fault did fire + retry
+        _assert_same_trajectory(job.result(), ref_resnet)
+
+
+def test_flow_fault_isolates_to_failed_job_and_resumes(tmp_path, space,
+                                                       pool96, ref_resnet,
+                                                       ref_transformer):
+    """retries=0: the fault surfaces as FAILED on ITS job only; the other
+    tenant is untouched, and resuming the failed job completes the
+    fault-free trajectory."""
+    def factory(wl):
+        flow = VLSIFlow(space, wl)
+        return FaultyFlow(flow, fail_calls={2}) if wl == "resnet50" else flow
+
+    with TunerServer(space, pool96, executor="thread", max_workers=1,
+                     flow_factory=factory, retries=0,
+                     checkpoint_dir=str(tmp_path)) as srv:
+        jr = srv.submit(JobSpec(**RESNET))
+        jt = srv.submit(JobSpec(**TRANSF))
+        srv.run_until_idle()
+        assert srv.job(jr).status == "FAILED"
+        assert "FlakyError" in srv.job(jr).error
+        assert srv.job(jt).status == "DONE"
+        _assert_same_trajectory(srv.job(jt).result(), ref_transformer)
+        srv.resume_job(jr)
+        srv.run_until_idle()
+        assert srv.job(jr).status == "DONE", srv.job(jr).error
+        _assert_same_trajectory(srv.job(jr).result(), ref_resnet)
+
+
+# ---------------------------------------------------------- engine release
+def test_engine_release_guards():
+    from repro.core.engine import BOEngine
+
+    rng = np.random.default_rng(0)
+    eng = BOEngine(rng.normal(size=(32, 5)).astype(np.float32), gp_steps=5)
+    eng.observe(list(range(6)), rng.uniform(size=(6, 3)).astype(np.float32))
+    snap = eng.state_dict()
+    assert eng.device_bytes() > 0
+    eng.release()
+    assert eng.device_bytes() == 0
+    for fail in (lambda: eng.observe([7], rng.uniform(size=(1, 3))),
+                 lambda: eng.select(jax.random.PRNGKey(0)),
+                 lambda: eng.state_dict()):
+        with pytest.raises(RuntimeError, match="released"):
+            fail()
+    # the documented recovery: a fresh engine + the pre-release snapshot
+    eng2 = BOEngine(rng.normal(size=(32, 5)).astype(np.float32), gp_steps=5)
+    eng2.load_state_dict(snap)
+    int(eng2.select(jax.random.PRNGKey(0)))
+
+
+# -------------------------------------------------------------- wire layer
+def _serve_in_thread(srv):
+    got = {}
+    ready = threading.Event()
+    th = threading.Thread(
+        target=serve, args=(srv,),
+        kwargs=dict(ready_cb=lambda p: (got.update(port=p), ready.set())),
+        daemon=True)
+    th.start()
+    assert ready.wait(30)
+    return th, got["port"]
+
+
+def test_wire_api_roundtrip(space, pool96):
+    srv = TunerServer(space, pool96, executor="inline")
+    th, port = _serve_in_thread(srv)
+    try:
+        r = request(port, {"verb": "submit", "spec": TRANSF})
+        assert r["ok"] and r["job"] == "j0000"
+        deadline = time.time() + 300
+        while time.time() < deadline:
+            s = request(port, {"verb": "status", "job": "j0000"})
+            assert s["ok"]
+            if s["status"]["status"] == "DONE":
+                break
+            time.sleep(0.1)
+        assert s["status"]["done"] == KW["T"]
+        full = request(port, {"verb": "status"})
+        assert full["status"]["jobs"]["j0000"]["status"] == "DONE"
+        assert full["status"]["total_done"] == KW["T"]
+        # error replies, not crashes:
+        assert not request(port, {"verb": "bogus"})["ok"]
+        assert "unknown job" in request(
+            port, {"verb": "pause", "job": "zzz"})["error"]
+        assert not request(  # JobSpec validation reaches the wire
+            port, {"verb": "submit", "spec": {"q": 0}})["ok"]
+        assert request(port, {"verb": "shutdown"})["ok"]
+        th.join(30)
+        assert not th.is_alive()
+    finally:
+        srv.close()
+
+
+def _cli_env():
+    env = os.environ.copy()
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return env
+
+
+def test_serve_cli_sigkill_resume_bit_exact(tmp_path):
+    """Satellite 4: a true SIGKILL of the `soc-service serve` process; the
+    --resume restart must finish every job with the exact rows/metrics of
+    an uninterrupted server."""
+    jobs_file = tmp_path / "jobs.json"
+    jobs_file.write_text(json.dumps([
+        {"workload": "resnet50", "seed": 0, "q": 2, "min_done": 1, **KW},
+        {"workload": "transformer", "seed": 1, "q": 1, **KW}]))
+    base = [sys.executable, "-m", "repro.service.cli", "serve",
+            "--n-pool", "96", "--pool-seed", "7", "--executor", "thread",
+            "--workers", "2", "--jobs-file", str(jobs_file),
+            "--drain-exit", "--quiet"]
+    env = _cli_env()
+
+    ref = subprocess.run(
+        base + ["--checkpoint-dir", str(tmp_path / "ck_ref"),
+                "--cache-dir", str(tmp_path / "fc_ref"),
+                "--out", str(tmp_path / "ref.json")],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert ref.returncode == 0, ref.stderr
+
+    killed = subprocess.run(
+        base + ["--checkpoint-dir", str(tmp_path / "ck"),
+                "--cache-dir", str(tmp_path / "fc"), "--kill-after", "3",
+                "--out", str(tmp_path / "never.json")],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert killed.returncode == -signal.SIGKILL, (killed.returncode,
+                                                  killed.stderr)
+    assert not (tmp_path / "never.json").exists()
+    assert (tmp_path / "ck" / "server.json").exists()
+
+    resumed = subprocess.run(
+        base + ["--checkpoint-dir", str(tmp_path / "ck"),
+                "--cache-dir", str(tmp_path / "fc"), "--resume",
+                "--out", str(tmp_path / "res.json")],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert resumed.returncode == 0, resumed.stderr
+
+    want = json.loads((tmp_path / "ref.json").read_text())["jobs"]
+    got = json.loads((tmp_path / "res.json").read_text())["jobs"]
+    assert want.keys() == got.keys()
+    for jid in want:
+        assert got[jid]["status"] == "DONE"
+        assert got[jid]["evaluated_rows"] == want[jid]["evaluated_rows"], jid
+        assert got[jid]["y"] == want[jid]["y"], jid
+
+
+# ------------------------------------------------------------- seeded fuzz
+class _StubJob:
+    """Duck-typed Job for scheduler-policy tests: deterministic fake
+    trajectory (one completion per step), full lifecycle surface, step
+    counting. Shared with test_server_properties.py."""
+
+    def __init__(self, job_id, spec, *, space=None, pool_idx=None,
+                 disk=None, checkpoint_dir=None, checkpoint_every=1,
+                 reference_front=None, verbose=False):
+        self.id, self.spec = str(job_id), spec
+        self.checkpoint_dir = checkpoint_dir
+        self.status, self.error = "PENDING", None
+        self.submit_seq = self.admit_seq = None
+        self.done = self.cycle = 0
+        self.steps_per_cycle: list = []
+        self._snap_mem = None
+        self._pending: list = []
+
+    label = property(lambda self: f"{self.id}:{self.spec.workload}")
+
+    def start(self, fpool, flow, *, resume=False):
+        self.status = "RUNNING"
+
+    def step(self, fpool):
+        assert self.status == "RUNNING", \
+            f"stepped a {self.status} job — settled jobs must never run"
+        self.cycle += 1
+        self.steps_per_cycle.append(self.cycle)
+        if self.done < self.spec.T:
+            self.done += 1
+        if self.done >= self.spec.T:
+            self.status = "DONE"
+            return 1 if self.done else 0
+        return 1
+
+    def pause(self, fpool):
+        if self.status != "RUNNING":
+            raise ValueError(f"pause: {self.status}")
+        self.status = "PAUSED"
+
+    def cancel(self, fpool):
+        if self.status in ("DONE", "CANCELLED"):
+            raise ValueError(f"cancel: already {self.status}")
+        self.status = "CANCELLED"
+
+    def checkpoint(self):
+        pass
+
+    def info(self):
+        return {"id": self.id, "status": self.status, "done": self.done}
+
+
+@pytest.fixture()
+def stub_server(space, monkeypatch):
+    import repro.service.server as server_mod
+
+    monkeypatch.setattr(server_mod, "Job", _StubJob)
+
+    def build(**kw):
+        return TunerServer(space, np.zeros((4, 2)),
+                           executor="inline",
+                           flow_factory=lambda wl: None, **kw)
+    return build
+
+
+def test_scheduler_policy_fuzz(stub_server):
+    """Randomized pause/resume/cancel interleavings against the stubbed
+    scheduler: budget exact, no starvation, settled jobs never re-step,
+    admission never exceeds max_active."""
+    for seed in (0, 1, 2):
+        rng = np.random.default_rng(seed)
+        srv = stub_server(max_active=int(rng.integers(1, 4)))
+        jids = [srv.submit(JobSpec(workload="resnet50", seed=i,
+                                   T=int(rng.integers(1, 6)),
+                                   priority=int(rng.integers(0, 3))))
+                for i in range(4)]
+        cancelled = set()
+        for _ in range(200):
+            if all(srv.job(j).status in ("DONE", "FAILED", "CANCELLED")
+                   for j in jids):
+                break
+            op = rng.random()
+            running = [j for j in jids if srv.job(j).status == "RUNNING"]
+            paused = [j for j in jids if srv.job(j).status == "PAUSED"]
+            if op < 0.15 and running:
+                srv.pause(str(rng.choice(running)))
+            elif op < 0.25 and paused:
+                srv.resume_job(str(rng.choice(paused)))
+            elif op < 0.28 and running and len(cancelled) < 2:
+                j = str(rng.choice(running))
+                srv.cancel(j)
+                cancelled.add(j)
+            else:
+                before = {j: (srv.job(j).status, srv.job(j).cycle)
+                          for j in jids}
+                srv.run_cycle()
+                nrun = sum(srv.job(j).status == "RUNNING" for j in jids)
+                assert nrun <= srv.max_active
+                for j in jids:
+                    status, cyc = before[j]
+                    stepped = srv.job(j).cycle - cyc
+                    if status == "RUNNING":
+                        # no starvation AND no double service
+                        assert stepped == 1
+                    elif status == "PENDING":
+                        # may be admitted-and-stepped this cycle, once
+                        assert stepped in (0, 1)
+                    else:
+                        # settled/paused jobs must never run again
+                        assert stepped == 0
+        # drain: resume anything paused, run to completion
+        for j in jids:
+            if srv.job(j).status == "PAUSED":
+                srv.resume_job(j)
+        srv.run_until_idle(max_cycles=100)
+        for j in jids:
+            job = srv.job(j)
+            if j in cancelled:
+                assert job.status == "CANCELLED"
+            else:
+                assert job.status == "DONE"
+                assert job.done == job.spec.T  # budget exactly spent
+        srv.close()
+
+
+def test_scheduler_admission_order(stub_server):
+    srv = stub_server(max_active=2)
+    j_lo = srv.submit(JobSpec(workload="a", T=3, priority=0))
+    j_mid = srv.submit(JobSpec(workload="b", T=3, priority=1))
+    j_hi = srv.submit(JobSpec(workload="c", T=3, priority=2))
+    srv.run_cycle()
+    assert srv.job(j_hi).status == "RUNNING"
+    assert srv.job(j_mid).status == "RUNNING"
+    assert srv.job(j_lo).status == "PENDING"
+    assert srv.job(j_hi).admit_seq == 0
+    assert srv.job(j_mid).admit_seq == 1
+    srv.run_until_idle(max_cycles=50)
+    assert all(srv.job(j).status == "DONE" for j in (j_lo, j_mid, j_hi))
+    srv.close()

@@ -37,6 +37,14 @@ CASES = {
     "fleet_tuner_incremental": {
         "driver": "fleet_tuner", "incremental": True,
         "scenarios": [["resnet50", 0], ["transformer", 1]]},
+    # two jobs multiplexed on one TunerServer: each trajectory must be
+    # bitwise what fleet_service produces for that scenario alone (the
+    # multi-tenant isolation guarantee; different workloads so the shared
+    # disk cache cannot re-partition the prologue flush batches).
+    "server_two_jobs": {
+        "driver": "tuner_server",
+        "jobs": [["resnet50", 0, {"q": 2, "min_done": 1}],
+                 ["transformer", 1, {"q": 1}]]},
 }
 
 #: shared tiny-run knobs (trajectory-defining; part of every fixture).
@@ -77,7 +85,22 @@ def run_case(name: str) -> dict:
 
     cfg = CASES[name]
     space, pool = _setup()
-    if cfg["driver"] == "soc_tuner":
+    if cfg["driver"] == "tuner_server":
+        from repro.service import JobSpec, TunerServer
+
+        with TunerServer(space, pool, executor="inline") as srv:
+            jids = []
+            for wl, seed, extra in cfg["jobs"]:
+                spec = JobSpec(workload=wl, seed=seed, **extra, **RUN_KW)
+                jids.append(srv.submit(
+                    spec, reference_front=_reference_front(space, pool, wl)))
+            srv.run_until_idle()
+            results = {}
+            for jid in jids:
+                job = srv.job(jid)
+                assert job.status == "DONE", (jid, job.status, job.error)
+                results[job.label] = job.result()
+    elif cfg["driver"] == "soc_tuner":
         ref = _reference_front(space, pool, cfg["workload"])
         res = soc_tuner(space, pool, VLSIFlow(space, cfg["workload"]),
                         key=jax.random.PRNGKey(cfg["seed"]),

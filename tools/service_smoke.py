@@ -15,9 +15,16 @@ pool), SIGKILLed after an early checkpoint and resumed — every scenario's
 trajectory must match the uninterrupted reference bit-exactly — and the
 cache-gc verb is exercised on the populated flow cache.
 
+``--server`` runs the ISSUE 6 multi-tenant variant: a 2-job
+``soc-service serve --drain-exit`` run (shared pool + flow cache),
+SIGKILLed after an early checkpoint and resumed with ``--resume`` — every
+job must finish with the exact trajectory of the uninterrupted server —
+plus one wire round-trip (submit/status/shutdown) against a live serve
+process.
+
 Run from the repo root (a scratch directory is created and removed)::
 
-    PYTHONPATH=src python tools/service_smoke.py [--fleet]
+    PYTHONPATH=src python tools/service_smoke.py [--fleet | --server]
 """
 from __future__ import annotations
 
@@ -98,6 +105,91 @@ def main_fleet() -> int:
     return 0
 
 
+def main_server() -> int:
+    env = _env()
+    base = ["serve", "--n-pool", "96", "--pool-seed", "7", "--executor",
+            "thread", "--workers", "2", "--drain-exit", "--quiet"]
+    jobs = [{"workload": "resnet50", "seed": 0, "q": 2, "min_done": 1,
+             "T": 3, "n": 10, "b": 8, "gp_steps": 15},
+            {"workload": "transformer", "seed": 1, "q": 1,
+             "T": 3, "n": 10, "b": 8, "gp_steps": 15}]
+    with tempfile.TemporaryDirectory() as td:
+        jobs_file = os.path.join(td, "jobs.json")
+        with open(jobs_file, "w") as f:
+            json.dump(jobs, f)
+        base += ["--jobs-file", jobs_file]
+        ref = os.path.join(td, "ref.json")
+        ck = os.path.join(td, "ckpt")
+        cache = os.path.join(td, "flowcache")
+        res = os.path.join(td, "res.json")
+
+        print("[smoke:server] uninterrupted 2-job reference server ...")
+        run_cli(base + ["--cache-dir", os.path.join(td, "fc_ref"),
+                        "--out", ref], env)
+
+        print("[smoke:server] SIGKILL after the 3-evaluation checkpoint ...")
+        killed = run_cli(base + ["--checkpoint-dir", ck, "--cache-dir",
+                                 cache, "--kill-after", "3",
+                                 "--out", os.path.join(td, "dead.json")],
+                         env, check=False)
+        assert killed.returncode == -signal.SIGKILL, killed.returncode
+        assert not os.path.exists(os.path.join(td, "dead.json")), \
+            "killed server must not have produced a result"
+        assert os.path.exists(os.path.join(ck, "server.json")), \
+            "killed server left no manifest"
+
+        print("[smoke:server] resume the whole job table ...")
+        run_cli(base + ["--checkpoint-dir", ck, "--cache-dir", cache,
+                        "--resume", "--out", res], env)
+        a, b = json.load(open(ref)), json.load(open(res))
+        assert a["jobs"].keys() == b["jobs"].keys()
+        for jid in a["jobs"]:
+            ja, jb = a["jobs"][jid], b["jobs"][jid]
+            assert jb["status"] == "DONE", (jid, jb["status"], jb["error"])
+            assert ja["evaluated_rows"] == jb["evaluated_rows"], \
+                (jid, ja["evaluated_rows"], jb["evaluated_rows"])
+            assert ja["y"] == jb["y"], \
+                f"{jid}: resumed metrics differ from reference"
+        n_evals = sum(len(j["evaluated_rows"]) for j in a["jobs"].values())
+        print(f"[smoke:server] resume bit-exact over {n_evals} evaluations "
+              f"across {len(a['jobs'])} jobs")
+
+        print("[smoke:server] wire round-trip against a live server ...")
+        port_file = os.path.join(td, "port")
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.service.cli", "serve",
+             "--n-pool", "96", "--pool-seed", "7", "--executor", "thread",
+             "--workers", "2", "--port-file", port_file, "--quiet"],
+            env=env, cwd=ROOT)
+        try:
+            import time
+            for _ in range(600):
+                if os.path.exists(port_file):
+                    break
+                time.sleep(0.1)
+            port = open(port_file).read().strip()
+            sub = run_cli(["submit", "--port", port, "--workload",
+                           "resnet50", "--T", "2", "--n", "10", "--b", "8",
+                           "--gp-steps", "15"], env, capture=True)
+            jid = json.loads(sub.stdout)["job"]
+            for _ in range(600):
+                stat = run_cli(["status", "--port", port, "--job", jid],
+                               env, capture=True)
+                if json.loads(stat.stdout)["status"]["status"] == "DONE":
+                    break
+                time.sleep(0.5)
+            else:
+                raise AssertionError("wire job never completed")
+            run_cli(["shutdown", "--port", port], env)
+            assert proc.wait(timeout=60) == 0, proc.returncode
+            print(f"[smoke:server] wire job {jid} DONE, clean shutdown")
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+    print("[smoke:server] PASS")
+    return 0
+
+
 def main() -> int:
     env = _env()
     base = ["--workload", "resnet50", "--n-pool", "96", "--T", "4",
@@ -146,4 +238,6 @@ def main() -> int:
 
 
 if __name__ == "__main__":
+    if "--server" in sys.argv[1:]:
+        raise SystemExit(main_server())
     raise SystemExit(main_fleet() if "--fleet" in sys.argv[1:] else main())
