@@ -88,6 +88,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import NamedTuple, Sequence
 
 import jax
@@ -96,13 +97,15 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
-from repro.kernels.backend import auto_chunk
+from repro.kernels.backend import (auto_chunk, resolve_round_backend,
+                                   round_score_auto)
 
 from .acquisition import imoo_scores, imoo_scores_batch, mes_information_gain
 from .gp import (JITTER, PAD_BUCKET, GPParams, _default_params, _fit, _kernel,
                  _standardize, fit_gp, fit_gp_batch, pad_training)
 
-__all__ = ["BOEngine", "BatchedBOEngine", "EngineStats", "FANTASY_MODES"]
+__all__ = ["BOEngine", "BatchedBOEngine", "EngineStats", "FANTASY_MODES",
+           "PROFILE_STAGES"]
 
 #: supported imputation rules for fantasy (q-batch / pending) selection:
 #: ``"mean"`` — posterior mean at the pick (kriging believer); ``"cl_min"`` /
@@ -126,14 +129,28 @@ class EngineStats:
     fantasy_steps: int = 0   # rank-1 fantasy appends (q-batch / pending)
     frontier_resamples: int = 0  # O(q³) joint frontier draws (1/refill)
     last_drift: float = 0.0  # max |params − params_ref| at the last round
+    #: cumulative per-stage wall seconds of profiled rounds (only populated
+    #: by ``BOEngine(profile_stages=True)``): keys "fit", "factor",
+    #: "v_update", "frontier", "moments", "score", "argmax" plus
+    #: "round_total" measured around the whole staged sequence.
+    stage_wall_s: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
 
     @classmethod
     def from_dict(cls, d: dict) -> "EngineStats":
+        """Build from a (possibly old or newer) snapshot dict: unknown keys
+        are dropped, missing keys keep their defaults — so checkpoints
+        written before a stats field existed (and ones written after a field
+        this build doesn't know about) both load."""
         fields = {f.name for f in dataclasses.fields(cls)}
-        return cls(**{k: v for k, v in d.items() if k in fields})
+        kept = {k: v for k, v in d.items() if k in fields}
+        if kept.get("stage_wall_s") is not None:
+            # defensive copy: never alias the caller's (checkpoint) dict
+            kept["stage_wall_s"] = {str(k): float(v)
+                                    for k, v in kept["stage_wall_s"].items()}
+        return cls(**kept)
 
 
 class EngineState(NamedTuple):
@@ -342,11 +359,13 @@ def _beta_ystar(params_ref: GPParams, L, x, yn, y_mean, y_std, pool_c,
     return beta, ystar
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "s", "s0", "select"),
+@functools.partial(jax.jit,
+                   static_argnames=("steps", "s", "s0", "select", "fused"),
                    donate_argnames=("state",))
 def _round_seq(state: EngineState, rows_pad, y_pad, mask, pool_c, evalm_c,
                base, sub_rows, key, force_refactor, drift_tol, weights, *,
-               steps: int, s: int, s0: int, select: bool = True):
+               steps: int, s: int, s0: int, select: bool = True,
+               fused: bool = False):
     """One full BO round as a single XLA dispatch: warm fit → drift check →
     block-update-or-refactor (``lax.cond``) → frontier sample →
     chunk-scanned score + argmax.
@@ -357,7 +376,16 @@ def _round_seq(state: EngineState, rows_pad, y_pad, mask, pool_c, evalm_c,
     q-batch path uses it when in-flight evaluations must be fantasized
     before the round's first real pick is taken. The sampled frontier
     ``ystar`` is returned either way: it is the ONE sample the whole
-    refill's fantasy chain re-scores under (frozen y*)."""
+    refill's fantasy chain re-scores under (frozen y*).
+
+    ``fused=True`` (static — resolved per call by the engine from
+    ``REPRO_ROUND_BACKEND``, see ``kernels.backend.resolve_round_backend``)
+    replaces the staged V-update scan + scoring scan with ONE fused Pallas
+    launch per pool chunk (``kernels/round_fused``) that keeps the V update,
+    posterior moments, MES scores and the running argmax in VMEM. It selects
+    the identical candidate (first-index-wins ties included — pinned by
+    ``tests/test_kernels.py``); ``fused=False`` keeps the historical HLO
+    byte-identical, which is what the golden trajectory fixtures pin."""
     nc, C, d = pool_c.shape
     pool_flat = pool_c.reshape(nc * C, d)
     x = pool_flat[rows_pad] + 10.0 * mask[:, None]  # pad_training's x rule
@@ -380,6 +408,25 @@ def _round_seq(state: EngineState, rows_pad, y_pad, mask, pool_c, evalm_c,
             lambda: _chol_refactor(params_ref, x, mask),
             lambda: _chol_block(params_ref, state.L, x, mask, s0))
 
+    if fused and select:
+        # Fused round: beta/y* first (independent of V), then one Pallas
+        # launch per chunk does V-update + moments + MES + argmax in VMEM.
+        beta, ystar = _beta_ystar(params_ref, L, x, yn, y_mean, y_std,
+                                  pool_c, sub_rows, key, s=s)
+
+        def _fused(s0f):
+            return round_score_auto(params_ref, L, state.V, x, beta, ystar,
+                                    pool_c, evalm_c, base, y_mean, y_std,
+                                    weights, s0=s0f, backend="pallas")
+
+        if s0 <= 0:
+            V, nxt = _fused(0)
+        else:
+            V, nxt = jax.lax.cond(do_ref, lambda: _fused(0),
+                                  lambda: _fused(s0))
+        return EngineState(params, params_ref, L, V), nxt, do_ref, drift, \
+            ystar
+
     def vstep(_, inp):
         Vc_old, pc = inp
         if s0 <= 0:
@@ -398,6 +445,74 @@ def _round_seq(state: EngineState, rows_pad, y_pad, mask, pool_c, evalm_c,
     else:
         nxt = jnp.asarray(-1, jnp.int32)
     return EngineState(params, params_ref, L, V), nxt, do_ref, drift, ystar
+
+
+# ------------------------------------------------- staged round (profiler)
+# ``BOEngine(profile_stages=True)`` replaces the one-dispatch ``_round_seq``
+# with these separately-jitted stages so each stage's wall time can be
+# measured with ``block_until_ready`` (accumulated in
+# ``EngineStats.stage_wall_s``; surfaced by ``engine_bench --profile``).
+# This is a MEASUREMENT mode: the staged math is the same formula set, but
+# splitting the dispatch changes XLA's fusion schedule, so a profiled
+# trajectory is allclose — not bitwise — to the fused-dispatch one.
+def _stage_fit_impl(params, params_ref, pool_flat, rows_pad, y_pad, mask, *,
+                    steps: int):
+    x = pool_flat[rows_pad] + 10.0 * mask[:, None]
+    yn, y_mean, y_std = _standardize(y_pad, mask)
+    p2 = _fit(params, x, yn, mask, steps=steps)
+    return p2, _drift(p2, params_ref), x, yn, y_mean, y_std
+
+
+def _stage_v_impl(params_ref, L, V, x, pool_c, *, s0: int):
+    if s0 <= 0:
+        _, Vn = jax.lax.scan(
+            lambda _, pc: (None, _v_chunk_refactor(params_ref, L, x, pc)),
+            None, pool_c)
+    else:
+        _, Vn = jax.lax.scan(
+            lambda _, inp: (None, _v_chunk_block(params_ref, L, inp[0], x,
+                                                 inp[1], s0)),
+            None, (V, pool_c))
+    return Vn
+
+
+def _stage_moments_impl(params_ref, beta, V):
+    _, ms = jax.lax.scan(
+        lambda _, Vc: (None, jax.vmap(_col_moments)(params_ref.log_var,
+                                                    beta, Vc)),
+        None, V)
+    return ms  # (mean [nc, m, C], std [nc, m, C])
+
+
+def _stage_score_impl(mean, std, y_mean, y_std, ystar, evalm_c, weights):
+    def one(_, inp):
+        mn, sd, em = inp
+        sc = mes_information_gain(mn.T * y_std + y_mean, sd.T * y_std,
+                                  ystar, weights)
+        return None, jnp.where(em, -jnp.inf, sc)
+
+    _, scores = jax.lax.scan(one, None, (mean, std, evalm_c))
+    return scores  # [nc, C]
+
+
+def _stage_argmax_impl(scores):
+    # chunks are laid out contiguously (base[j] = j·C), so the flat argmax
+    # IS the global first-index-wins pick of the scanned running-max carry
+    return jnp.argmax(scores.reshape(-1)).astype(jnp.int32)
+
+
+_stage_fit = jax.jit(_stage_fit_impl, static_argnames=("steps",))
+_stage_chol_refactor = jax.jit(_chol_refactor)
+_stage_chol_block = jax.jit(_chol_block, static_argnames=("s0",))
+_stage_v = jax.jit(_stage_v_impl, static_argnames=("s0",))
+_stage_frontier = jax.jit(_beta_ystar, static_argnames=("s",))
+_stage_moments = jax.jit(_stage_moments_impl)
+_stage_score = jax.jit(_stage_score_impl)
+_stage_argmax = jax.jit(_stage_argmax_impl)
+
+#: stage keys a profiled select round populates, in execution order.
+PROFILE_STAGES = ("fit", "factor", "v_update", "frontier", "moments",
+                  "score", "argmax")
 
 
 # ------------------------------------------------------- fantasy (q-batch)
@@ -460,17 +575,33 @@ def _fantasy_append(params_ref: GPParams, L, V, rows_pad, yn, mask, pool_c,
     return L2, V2, rows2, mask2, yn2
 
 
+def _fused_rescore(params_ref: GPParams, L, V, rows_pad, mask, pool_c,
+                   evalm_c, base, weights, y_mean, y_std, ystar, beta):
+    """Score-only fused launch (``s0 = P``): re-rank the pool under an
+    already-updated V cache — the fantasy chain's fused re-score."""
+    nc, C, d = pool_c.shape
+    x = pool_c.reshape(nc * C, d)[rows_pad] + 10.0 * mask[:, None]
+    _, nxt = round_score_auto(params_ref, L, V, x, beta, ystar, pool_c,
+                              evalm_c, base, y_mean, y_std, weights,
+                              s0=V.shape[-2], backend="pallas")
+    return nxt
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("s0", "liar", "return_pick"),
+                   static_argnames=("s0", "liar", "return_pick", "fused"),
                    donate_argnames=("L", "V"))
 def _fantasy_step(params_ref: GPParams, L, V, rows_pad, yn, mask, pool_c,
                   evalm_c, base, weights, y_mean, y_std, ystar, pick, pos, *,
-                  s0: int, liar: str, return_pick: bool):
+                  s0: int, liar: str, return_pick: bool,
+                  fused: bool = False):
     """One sequential fantasy append (+ optional re-score under the frozen
     ``ystar`` sampled by the refill's round — no per-step frontier resample).
     ``return_pick=False`` skips the O(N) scoring scan (used while fantasizing
     pending in-flight evaluations that are not the last before a new pick).
     L and V are donated — the fantasy chain reuses one set of buffers.
+    ``fused=True`` routes the re-score through the score-only fused Pallas
+    launch (the append itself stays staged — a rank-1 trailing update has no
+    inter-stage pool traffic to fuse away).
     """
     nc, C, _ = pool_c.shape
     L2, V2, rows2, mask2, yn2 = _fantasy_append(
@@ -479,8 +610,13 @@ def _fantasy_step(params_ref: GPParams, L, V, rows_pad, yn, mask, pool_c,
     evalm2 = evalm_c.at[pick // C, pick % C].set(True)
     if return_pick:
         beta2 = _train_beta(L2, yn2)
-        nxt = _select_chunks(params_ref, beta2, ystar, V2, y_mean, y_std,
-                             evalm2, base, weights)
+        if fused:
+            nxt = _fused_rescore(params_ref, L2, V2, rows2, mask2, pool_c,
+                                 evalm2, base, weights, y_mean, y_std, ystar,
+                                 beta2)
+        else:
+            nxt = _select_chunks(params_ref, beta2, ystar, V2, y_mean, y_std,
+                                 evalm2, base, weights)
     else:
         nxt = jnp.asarray(-1, jnp.int32)
     return L2, V2, rows2, mask2, yn2, evalm2, nxt
@@ -489,7 +625,7 @@ def _fantasy_step(params_ref: GPParams, L, V, rows_pad, yn, mask, pool_c,
 def _fantasy_batch_impl(params_ref: GPParams, L, V, rows_pad, yn, mask,
                         pool_c, evalm_c, base, weights, y_mean, y_std, ystar,
                         pick, pos, active, *, s0: int, liar: str,
-                        return_pick: bool):
+                        return_pick: bool, fused: bool = False):
     """Batched fantasy step: every scenario appends (or skips) one fantasy
     row in lockstep, then (optionally) re-scores under its frozen ``ystar``.
 
@@ -513,7 +649,11 @@ def _fantasy_batch_impl(params_ref: GPParams, L, V, rows_pad, yn, mask,
         yn2, em2 = sel(yn2, yni), sel(em2, emi)
         if return_pick:
             beta2 = _train_beta(L2, yn2)
-            nxt = _select_chunks(p, beta2, yst, V2, ym, ys, em2, bi, wi)
+            if fused:
+                nxt = _fused_rescore(p, L2, V2, rows2, mask2, pci, em2, bi,
+                                     wi, ym, ys, yst, beta2)
+            else:
+                nxt = _select_chunks(p, beta2, yst, V2, ym, ys, em2, bi, wi)
         else:
             nxt = jnp.asarray(-1, jnp.int32)
         return L2, V2, rows2, mask2, yn2, em2, nxt
@@ -525,7 +665,8 @@ def _fantasy_batch_impl(params_ref: GPParams, L, V, rows_pad, yn, mask,
 
 # L/V donated: one set of buffers serves the whole batched fantasy chain.
 _fantasy_batch = jax.jit(_fantasy_batch_impl,
-                         static_argnames=("s0", "liar", "return_pick"),
+                         static_argnames=("s0", "liar", "return_pick",
+                                          "fused"),
                          donate_argnames=("L", "V"))
 
 
@@ -545,9 +686,17 @@ def _phase1_batch_impl(params, params_ref, pool_flat, rows_pad, y_pad, mask,
 
 def _refactor_select_batch_impl(params, x, mask, pool_c, base, yn, y_mean,
                                 y_std, sub_rows, evalm_c, keys, weights, *,
-                                s: int, select: bool = True):
+                                s: int, select: bool = True,
+                                fused: bool = False):
     def one(p, xi, mi, pci, bi, yni, ym, ys, sr, em, k, w):
         L = _chol_refactor(p, xi, mi)
+        if fused and select:
+            nc, C, _ = pci.shape
+            beta, ystar = _beta_ystar(p, L, xi, yni, ym, ys, pci, sr, k, s=s)
+            V0 = jnp.zeros((nc, L.shape[0], L.shape[1], C), jnp.float32)
+            V, nxt = round_score_auto(p, L, V0, xi, beta, ystar, pci, em, bi,
+                                      ym, ys, w, s0=0, backend="pallas")
+            return L, V, nxt, ystar
         _, V = jax.lax.scan(
             lambda _, pc: (None, _v_chunk_refactor(p, L, xi, pc)), None, pci)
         beta, ystar = _beta_ystar(p, L, xi, yni, ym, ys, pci, sr, k, s=s)
@@ -563,9 +712,17 @@ def _refactor_select_batch_impl(params, x, mask, pool_c, base, yn, y_mean,
 
 def _update_select_batch_impl(params_ref, L, V, x, mask, pool_c, base, yn,
                               y_mean, y_std, sub_rows, evalm_c, keys, weights,
-                              *, s: int, s0: int, select: bool = True):
+                              *, s: int, s0: int, select: bool = True,
+                              fused: bool = False):
     def one(p, Li, Vi, xi, mi, pci, bi, yni, ym, ys, sr, em, k, w):
         Ln = _chol_block(p, Li, xi, mi, s0)
+        if fused and select:
+            beta, ystar = _beta_ystar(p, Ln, xi, yni, ym, ys, pci, sr, k,
+                                      s=s)
+            Vn, nxt = round_score_auto(p, Ln, Vi, xi, beta, ystar, pci, em,
+                                       bi, ym, ys, w, s0=s0,
+                                       backend="pallas")
+            return Ln, Vn, nxt, ystar
         _, Vn = jax.lax.scan(
             lambda _, inp: (None, _v_chunk_block(p, Ln, inp[0], xi, inp[1],
                                                  s0)),
@@ -583,11 +740,11 @@ def _update_select_batch_impl(params_ref, L, V, x, mask, pool_c, base, yn,
 
 _phase1_batch = jax.jit(_phase1_batch_impl, static_argnames=("steps",))
 _refactor_select_batch = jax.jit(_refactor_select_batch_impl,
-                                 static_argnames=("s", "select"))
+                                 static_argnames=("s", "select", "fused"))
 # L/V are donated: the batched block update writes into the old buckets'
 # storage (same no-second-V-copy property as the sequential _round_seq).
 _update_select_batch = jax.jit(_update_select_batch_impl,
-                               static_argnames=("s", "s0", "select"),
+                               static_argnames=("s", "s0", "select", "fused"),
                                donate_argnames=("L", "V"))
 
 
@@ -811,7 +968,8 @@ class BOEngine(_EngineBase):
                  warm_start: bool | None = None, gp_steps: int = 150,
                  warm_steps: int | None = None, drift_tol: float = 1.0,
                  bucket: int = PAD_BUCKET, s_frontiers: int = 10,
-                 weights=None, pool_chunk: int | str | None = None):
+                 weights=None, pool_chunk: int | str | None = None,
+                 profile_stages: bool = False):
         self.pool = jnp.asarray(pool_icd, jnp.float32)      # [N, d], once
         self.N, self.d = self.pool.shape
         self._configure(incremental=incremental, warm_start=warm_start,
@@ -819,6 +977,15 @@ class BOEngine(_EngineBase):
                         drift_tol=drift_tol, bucket=bucket,
                         s_frontiers=s_frontiers, weights=weights)
         self._setup_chunks(pool_chunk)
+        # profile_stages: run select rounds as separately-timed stage
+        # dispatches instead of one fused program; per-stage wall seconds
+        # accumulate in ``stats.stage_wall_s`` (measurement mode — allclose,
+        # not bitwise, to the one-dispatch round; see the staged-round
+        # section above). Requires incremental=True to mean anything.
+        if profile_stages and not incremental:
+            raise ValueError("profile_stages requires incremental=True: the "
+                             "exact historical path has no staged round")
+        self.profile_stages = bool(profile_stages)
 
         self._rows: list[int] = []
         self._y: np.ndarray | None = None       # [k, m] raw minimized metrics
@@ -927,6 +1094,7 @@ class BOEngine(_EngineBase):
                    else self.weights)
         s0 = (n // self.bucket) * self.bucket
         L, V, evalm = state.L, state.V, self._evalm_chunks()
+        fused = resolve_round_backend("auto", self.N) == "pallas"
 
         picks: list[int] = [] if pending else [int(pick0)]
         to_append = list(pending)
@@ -942,7 +1110,7 @@ class BOEngine(_EngineBase):
                     self._pool_c, evalm, self._base, weights, y_mean, y_std,
                     ystar, jnp.asarray(row, jnp.int32),
                     jnp.asarray(n + appended, jnp.int32),
-                    s0=s0, liar=fantasy, return_pick=need_pick)
+                    s0=s0, liar=fantasy, return_pick=need_pick, fused=fused)
                 appended += 1
                 self.stats.fantasy_steps += 1
                 self.stats.dispatches += 1
@@ -1008,11 +1176,22 @@ class BOEngine(_EngineBase):
             (self._n_at_last_select // self.bucket) * self.bucket
         state = self._alloc_state(params0, P, first or grew)
 
-        state, nxt, did_ref, drift, ystar = _round_seq(
-            state, rows_pad, y_pad, mask, self._pool_c, self._evalm_chunks(),
-            self._base, jnp.asarray(sub), key, bool(first or grew),
-            self.drift_tol, weights, steps=steps, s=self.s_frontiers, s0=s0,
-            select=do_select)
+        if self.profile_stages:
+            state, nxt, did_ref, drift, ystar = self._round_staged(
+                state, rows_pad, y_pad, mask, jnp.asarray(sub), key,
+                bool(first or grew), weights, steps=steps, s0=s0,
+                select=do_select)
+            # the shared bookkeeping below counts 1 dispatch per round; a
+            # staged round launches one program per stage instead
+            self.stats.dispatches += (len(PROFILE_STAGES) if do_select
+                                      else len(PROFILE_STAGES) - 3) - 1
+        else:
+            fused = resolve_round_backend("auto", self.N) == "pallas"
+            state, nxt, did_ref, drift, ystar = _round_seq(
+                state, rows_pad, y_pad, mask, self._pool_c,
+                self._evalm_chunks(), self._base, jnp.asarray(sub), key,
+                bool(first or grew), self.drift_tol, weights, steps=steps,
+                s=self.s_frontiers, s0=s0, select=do_select, fused=fused)
 
         self._state = state
         self._P = P
@@ -1028,6 +1207,59 @@ class BOEngine(_EngineBase):
         else:
             self.stats.block_updates += 1
         return int(nxt)
+
+    def _round_staged(self, state, rows_pad, y_pad, mask, sub, key,
+                      force_refactor: bool, weights, *, steps: int, s0: int,
+                      select: bool):
+        """One round as separately-timed stage dispatches (profile mode).
+
+        Mirrors ``_round_seq``'s math and refactor policy stage by stage;
+        every stage is timed with ``block_until_ready`` and accumulated into
+        ``stats.stage_wall_s`` (plus ``"round_total"`` around the whole
+        sequence, so ``sum(stages) / round_total`` reports the host-side
+        orchestration overhead the fused dispatch avoids)."""
+        t_round = time.perf_counter()
+
+        def timed(name, fn, *args, **kw):
+            t0 = time.perf_counter()
+            out = fn(*args, **kw)
+            jax.block_until_ready(out)
+            acc = self.stats.stage_wall_s
+            acc[name] = acc.get(name, 0.0) + (time.perf_counter() - t0)
+            return out
+
+        pool_flat = self._pool_c.reshape(self._N_pad, self.d)
+        params, drift, x, yn, y_mean, y_std = timed(
+            "fit", _stage_fit, state.params, state.params_ref, pool_flat,
+            jnp.asarray(rows_pad), jnp.asarray(y_pad), jnp.asarray(mask),
+            steps=steps)
+        # host-side twin of _round_seq's in-graph refactor decision
+        do_ref = (force_refactor or s0 <= 0
+                  or float(drift) > self.drift_tol)
+        params_ref = params if do_ref else state.params_ref
+        mask_j = jnp.asarray(mask)
+        if do_ref:
+            L = timed("factor", _stage_chol_refactor, params_ref, x, mask_j)
+        else:
+            L = timed("factor", _stage_chol_block, params_ref, state.L, x,
+                      mask_j, s0=s0)
+        V = timed("v_update", _stage_v, params_ref, L, state.V, x,
+                  self._pool_c, s0=0 if do_ref else s0)
+        beta, ystar = timed("frontier", _stage_frontier, params_ref, L, x,
+                            yn, y_mean, y_std, self._pool_c, sub, key,
+                            s=self.s_frontiers)
+        if select:
+            mean, std = timed("moments", _stage_moments, params_ref, beta, V)
+            scores = timed("score", _stage_score, mean, std, y_mean, y_std,
+                           ystar, self._evalm_chunks(), weights)
+            nxt = timed("argmax", _stage_argmax, scores)
+        else:
+            nxt = jnp.asarray(-1, jnp.int32)
+        acc = self.stats.stage_wall_s
+        acc["round_total"] = (acc.get("round_total", 0.0)
+                              + (time.perf_counter() - t_round))
+        return (EngineState(params, params_ref, L, V), nxt,
+                jnp.asarray(do_ref), drift, ystar)
 
     # ------------------------------------------------------------- helpers
     @staticmethod
@@ -1302,6 +1534,7 @@ class BatchedBOEngine(_EngineBase):
                    if self.weights is None else self.weights)
         s0 = (self._n_at_last_select // self.bucket) * self.bucket
         L, V, evalm = state.L, state.V, self._evalm_chunks()
+        fused = resolve_round_backend("auto", self.N) == "pallas"
 
         # Per-scenario chains, front-padded to the fleet-wide max: inactive
         # steps leave a scenario untouched, so its first pick lands on the
@@ -1324,7 +1557,8 @@ class BatchedBOEngine(_EngineBase):
                 need_pick = step >= k_max - 1
                 L, V, rows_pad, mask_j, yn, evalm, nxt = self._dispatch(
                     "fantasy", _fantasy_batch_impl, _fantasy_batch,
-                    {"s0": s0, "liar": fantasy, "return_pick": need_pick},
+                    {"s0": s0, "liar": fantasy, "return_pick": need_pick,
+                     "fused": fused},
                     state.params_ref, L, V, rows_pad, yn, mask_j,
                     self._pool_c, evalm, self._base, weights, y_mean, y_std,
                     ystar, jnp.asarray(rows_arr), jnp.asarray(pos),
@@ -1416,11 +1650,12 @@ class BatchedBOEngine(_EngineBase):
         s0 = 0 if (first or grew) else \
             (self._n_at_last_select // self.bucket) * self.bucket
         do_ref = first or grew or s0 <= 0 or max_drift > self.drift_tol
+        fused = resolve_round_backend("auto", self.N) == "pallas"
         if do_ref:
             L, V, picks, ystar = self._dispatch(
                 "refactor_select", _refactor_select_batch_impl,
                 _refactor_select_batch,
-                {"s": self.s_frontiers, "select": do_select},
+                {"s": self.s_frontiers, "select": do_select, "fused": fused},
                 params, x, jnp.asarray(mask), self._pool_c, self._base, yn,
                 y_mean, y_std, jnp.asarray(sub), self._evalm_chunks(),
                 jnp.asarray(keys), weights)
@@ -1430,7 +1665,8 @@ class BatchedBOEngine(_EngineBase):
             L, V, picks, ystar = self._dispatch(
                 "update_select", _update_select_batch_impl,
                 _update_select_batch,
-                {"s": self.s_frontiers, "s0": s0, "select": do_select},
+                {"s": self.s_frontiers, "s0": s0, "select": do_select,
+                 "fused": fused},
                 state.params_ref, state.L, state.V, x, jnp.asarray(mask),
                 self._pool_c, self._base, yn, y_mean, y_std,
                 jnp.asarray(sub), self._evalm_chunks(), jnp.asarray(keys),

@@ -187,6 +187,7 @@ def soc_tuner(
     warm_steps: int | None = None,
     drift_tol: float = 1.0,
     pool_chunk: int | str | None = None,
+    profile_stages: bool = False,
     q: int = 1,
     fantasy: str = "mean",
     checkpoint_dir: str | None = None,
@@ -215,7 +216,10 @@ def soc_tuner(
     ``pool_chunk`` (int | ``"auto"``; requires ``incremental=True``) streams
     the engine's O(N) pool state in column chunks so ``n_pool`` can grow to
     10⁵–10⁶ candidates — identical selections at any chunk size; see
-    ``docs/scaling.md``.
+    ``docs/scaling.md``. ``profile_stages`` (requires ``incremental=True``)
+    times every round stage separately and accumulates the wall seconds in
+    the result's ``engine_stats["stage_wall_s"]`` (surfaced by
+    ``engine_bench --profile``).
 
     ``q`` (requires ``incremental=True`` when > 1) selects q candidates per
     round via fantasy updates (``BOEngine.select_q``; ``fantasy`` picks the
@@ -297,7 +301,8 @@ def soc_tuner(
                       warm_start=warm_start, gp_steps=gp_steps,
                       warm_steps=warm_steps, drift_tol=drift_tol,
                       s_frontiers=s_frontiers, weights=w,
-                      pool_chunk=pool_chunk)
+                      pool_chunk=pool_chunk,
+                      profile_stages=profile_stages)
     if snap is None:
         engine.observe(evaluated, y)
     else:

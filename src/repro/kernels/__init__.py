@@ -6,9 +6,11 @@
 - ``pairdist``      tiled ||xi-xj||^2 with fused RBF (TED + GP kernel matrices)
 - ``pareto_count``  tiled Pareto dominance counting
 - ``systolic_eval`` batched SoC cost-model evaluation (the "VLSI flow" on TPU)
+- ``round_fused``   fused BO acquisition round: V-update → moments → MES →
+                    masked argmax in one launch per pool chunk
 - ``flash_attn``    causal flash attention (LM prefill hot loop)
 """
 from . import common  # noqa: F401
 
 __all__ = ["common", "backend", "pairdist", "pareto_count", "systolic_eval",
-           "flash_attn"]
+           "round_fused", "flash_attn"]

@@ -5,10 +5,12 @@ surrogate's ARD kernel (``core.gp``), TED initialization (``core.sampling``)
 and, through the GP, the IMOO acquisition — routes through
 :func:`pairdist_auto` instead of picking an implementation inline; Pareto
 dominance counting (``core.pareto``) routes through
-:func:`dominance_counts_auto` and batched SoC cost-model evaluation
-(``soc.flow.VLSIFlow``) through :func:`soc_metrics_auto`, each under the
-same dispatch rules with its own environment override
-(``REPRO_PARETO_BACKEND`` / ``REPRO_SYSTOLIC_BACKEND``). Dispatch:
+:func:`dominance_counts_auto`, batched SoC cost-model evaluation
+(``soc.flow.VLSIFlow``) through :func:`soc_metrics_auto`, and the BO
+engine's fused acquisition round (``core.engine``) through
+:func:`round_score_auto`, each under the same dispatch rules with its own
+environment override (``REPRO_PARETO_BACKEND`` / ``REPRO_SYSTOLIC_BACKEND``
+/ ``REPRO_ROUND_BACKEND``). Dispatch:
 
 * ``"auto"``     — the ``REPRO_PAIRDIST_BACKEND`` environment variable if
   set (``xla`` / ``pallas`` / ``platform``), else ``"xla"``. XLA is the
@@ -42,12 +44,31 @@ __all__ = ["pairdist_auto", "pairdist_chunked", "auto_chunk",
            "resolve_backend", "sqdist_xla", "rbf_xla",
            "dominance_counts_auto", "resolve_pareto_backend",
            "dominance_counts_xla",
-           "soc_metrics_auto", "resolve_systolic_backend"]
+           "soc_metrics_auto", "resolve_systolic_backend",
+           "round_score_auto", "resolve_round_backend"]
 
 _ENV_VAR = "REPRO_PAIRDIST_BACKEND"
 _PARETO_ENV_VAR = "REPRO_PARETO_BACKEND"
 _SYSTOLIC_ENV_VAR = "REPRO_SYSTOLIC_BACKEND"
+_ROUND_ENV_VAR = "REPRO_ROUND_BACKEND"
 _BACKENDS = ("auto", "platform", "pallas", "xla")
+
+
+def _resolve(kind: str, env_var: str, backend: str, tile_ok) -> str:
+    """Shared resolver behind every ``resolve_*_backend``: env-var parse →
+    validate → explicit pallas/xla passthrough → off-TPU ⇒ XLA →
+    tile-worthiness check (``tile_ok`` is lazy — kernel tile constants are
+    only imported when a TPU ``platform`` resolution actually needs them)."""
+    if backend == "auto":
+        backend = os.environ.get(env_var, "xla")  # fidelity default
+    if backend not in _BACKENDS:
+        raise ValueError(
+            f"unknown {kind} backend {backend!r}; expected one of {_BACKENDS}")
+    if backend in ("pallas", "xla"):
+        return backend
+    if jax.default_backend() != "tpu":
+        return "xla"
+    return "pallas" if tile_ok() else "xla"
 
 #: default streaming budget for :func:`auto_chunk` (MB of f32 working set
 #: per column block) — small enough to stay cache-resident on a CPU host,
@@ -58,20 +79,13 @@ DEFAULT_CHUNK_BUDGET_MB = 64
 def resolve_backend(backend: str = "auto", n: int | None = None,
                     m: int | None = None) -> str:
     """Resolve ``"auto"``/``"platform"`` to a concrete backend for an
-    [n,·]×[m,·] problem (see the module docstring for the dispatch table)."""
-    if backend == "auto":
-        backend = os.environ.get(_ENV_VAR, "xla")  # fidelity default
-    if backend not in _BACKENDS:
-        raise ValueError(
-            f"unknown pairdist backend {backend!r}; expected one of {_BACKENDS}")
-    if backend in ("pallas", "xla"):
-        return backend
-    if jax.default_backend() != "tpu":
-        return "xla"
-    # Below one output tile the pad-to-128 overhead dominates any VMEM win.
-    if n is not None and m is not None and (n < TILE_I or m < TILE_J):
-        return "xla"
-    return "pallas"
+    [n,·]×[m,·] problem (see the module docstring for the dispatch table).
+
+    Below one output tile the pad-to-128 overhead dominates any VMEM win."""
+    return _resolve(
+        "pairdist", _ENV_VAR, backend,
+        lambda: not (n is not None and m is not None
+                     and (n < TILE_I or m < TILE_J)))
 
 
 def sqdist_xla(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -132,20 +146,13 @@ def resolve_pareto_backend(backend: str = "auto",
     fidelity default — bit-identical to the historical inline broadcast
     form), ``platform`` upgrades to the Pallas kernel on TPU for
     tile-worthy row counts."""
-    if backend == "auto":
-        backend = os.environ.get(_PARETO_ENV_VAR, "xla")
-    if backend not in _BACKENDS:
-        raise ValueError(f"unknown pareto backend {backend!r}; expected one "
-                         f"of {_BACKENDS}")
-    if backend in ("pallas", "xla"):
-        return backend
-    if jax.default_backend() != "tpu":
-        return "xla"
-    from .pareto_count.kernel import TILE_I as _PC_TILE
 
-    if n is not None and n < _PC_TILE:
-        return "xla"
-    return "pallas"
+    def tile_ok():
+        from .pareto_count.kernel import TILE_I as _PC_TILE
+
+        return n is None or n >= _PC_TILE
+
+    return _resolve("pareto", _PARETO_ENV_VAR, backend, tile_ok)
 
 
 def dominance_counts_xla(y: jnp.ndarray) -> jnp.ndarray:
@@ -178,20 +185,13 @@ def resolve_systolic_backend(backend: str = "auto",
     fidelity default — the reference ``repro.soc.model.soc_metrics``),
     ``platform`` upgrades to the fused Pallas sweep kernel on TPU for
     tile-worthy batch sizes."""
-    if backend == "auto":
-        backend = os.environ.get(_SYSTOLIC_ENV_VAR, "xla")
-    if backend not in _BACKENDS:
-        raise ValueError(f"unknown systolic backend {backend!r}; expected "
-                         f"one of {_BACKENDS}")
-    if backend in ("pallas", "xla"):
-        return backend
-    if jax.default_backend() != "tpu":
-        return "xla"
-    from .systolic_eval.kernel import TILE_N as _SE_TILE
 
-    if n is not None and n < _SE_TILE:
-        return "xla"
-    return "pallas"
+    def tile_ok():
+        from .systolic_eval.kernel import TILE_N as _SE_TILE
+
+        return n is None or n >= _SE_TILE
+
+    return _resolve("systolic", _SYSTOLIC_ENV_VAR, backend, tile_ok)
 
 
 def soc_metrics_auto(vals: jnp.ndarray, layers: jnp.ndarray, *,
@@ -209,6 +209,68 @@ def soc_metrics_auto(vals: jnp.ndarray, layers: jnp.ndarray, *,
     from .systolic_eval import ops as _ops
 
     return _ops.soc_metrics(vals, layers)
+
+
+# ------------------------------------------------------------- round_fused
+def resolve_round_backend(backend: str = "auto",
+                          n: int | None = None) -> str:
+    """Resolve the fused acquisition-round backend for an n-candidate pool —
+    same dispatch table as :func:`resolve_backend` with its own env override
+    (``REPRO_ROUND_BACKEND``): ``auto`` defaults to XLA everywhere (the
+    fidelity default — the engine's staged chunk-scanned round, whose HLO
+    the golden trajectory fixtures pin byte-for-byte), ``platform`` upgrades
+    to the fused Pallas round kernel on TPU for tile-worthy pools."""
+
+    def tile_ok():
+        from .round_fused.kernel import TILE_C as _RF_TILE
+
+        return n is None or n >= _RF_TILE
+
+    return _resolve("round", _ROUND_ENV_VAR, backend, tile_ok)
+
+
+def round_score_auto(params_ref, L, V, x, beta, ystar, pool_c, evalm_c, base,
+                     y_mean, y_std, weights, *, s0: int,
+                     backend: str = "auto"):
+    """One acquisition round's scoring half — trailing V-cache update,
+    posterior moments, MES scoring, never-re-evaluate masking, global
+    first-index-wins argmax — with automatic backend dispatch: the
+    ``round_fused`` member of the family. Returns ``(V_new, best_idx)``.
+
+    The XLA route IS the engine's staged math (``_v_chunk_refactor`` /
+    ``_v_chunk_block`` scan + ``_select_chunks``), so ``auto``'s fidelity
+    default is bit-identical to the engine rounds by construction; the
+    Pallas route fuses all four stages into one launch per pool chunk
+    (``round_fused.kernel``) and selects the identical candidate
+    (pinned by ``tests/test_kernels.py``). ``s0`` rows of V are reused
+    (``0`` = full refactor, ``>= P`` = score-only fantasy re-score);
+    ``params_ref`` is the engine's ``GPParams`` factorization snapshot.
+    """
+    nc, C, _ = pool_c.shape
+    P = L.shape[-1]
+    if resolve_round_backend(backend, nc * C) == "xla":
+        from repro.core.engine import (_select_chunks, _v_chunk_block,
+                                       _v_chunk_refactor)
+
+        if s0 >= P:
+            V_new = V
+        elif s0 <= 0:
+            _, V_new = jax.lax.scan(
+                lambda _, pc: (None, _v_chunk_refactor(params_ref, L, x, pc)),
+                None, pool_c)
+        else:
+            _, V_new = jax.lax.scan(
+                lambda _, inp: (None, _v_chunk_block(params_ref, L, inp[0],
+                                                     x, inp[1], s0)),
+                None, (V, pool_c))
+        nxt = _select_chunks(params_ref, beta, ystar, V_new, y_mean, y_std,
+                             evalm_c, base, weights)
+        return V_new, nxt
+    from .round_fused import ops as _ops
+
+    return _ops.round_select(
+        jnp.exp(params_ref.log_ls), jnp.exp(params_ref.log_var), L, V, x,
+        beta, ystar, pool_c, evalm_c, y_mean, y_std, weights, s0=s0)
 
 
 def auto_chunk(n: int, *, bytes_per_col: int = 4 * 3 * 256,

@@ -1,0 +1,3 @@
+"""Fused acquisition-round kernel: V-update → moments → MES → argmax in one
+Pallas launch (see :mod:`.kernel` for the fusion layout and
+:mod:`repro.kernels.backend.round_score_auto` for the dispatch point)."""

@@ -1,0 +1,200 @@
+"""Fused BO acquisition-round kernel (TPU Pallas, interpret-validated).
+
+One launch replaces the four staged pool passes of
+``core/engine.py::_round_seq``'s scoring half: for every 128-wide column
+tile of every pool chunk it
+
+1. recomputes the trailing rows of the cached whitening
+   ``V = L⁻¹·K(train_pad, pool)`` — the streamed pairdist block against the
+   training rows plus a forward substitution on the trailing Cholesky block
+   ``L22`` (``s0 = 0`` is a full refactor of the tile's V column,
+   ``s0 = P`` skips the update entirely: the score-only fantasy re-score);
+2. accumulates the posterior moments in the SAME fixed order as
+   ``engine._col_moments`` (sequential ``fori_loop`` over the P train rows,
+   never a width-dependent GEMV reduction — the chunk-size bit-parity of
+   the engine rests on that order);
+3. de-standardizes and scores the tile with the closed-form MES information
+   gain (``core.acquisition.mes_information_gain``), averaged over the S
+   frozen frontier samples and weighted per objective;
+4. masks already-evaluated candidates to ``-inf`` and folds the tile into a
+   running global argmax held in a ``(1, 1)`` output block that every grid
+   step revisits (the sequential-grid accumulation idiom of
+   ``pareto_count``). Strict ``>`` keeps the earliest tile and in-tile
+   ``argmax`` keeps the first column — composed over the row-major
+   ``(chunk, tile)`` grid this reproduces the engine's monolithic
+   first-index-wins tie semantics exactly.
+
+Everything between the pool-chunk HBM read and the scalar pick index stays
+in VMEM: no ``[P, N]`` kernel product, ``[N]`` score vector or
+``[S, N, m]`` MES broadcast ever round-trips through HBM. The updated V
+tile is the only O(N) output (the engine carries V across rounds).
+
+Objective count ``m`` and frontier count ``S`` are compile-time Python
+loops — both are single digits in every workload.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: pool-column tile width (TPU lane count) — the grid's inner axis.
+TILE_C = 128
+#: feature-axis alignment required by the raw kernel (ops pads).
+LANE = 128
+
+
+def _round_body(x_ref, ls_ref, scal_ref, L_ref, beta_ref, ystar_ref, pc_ref,
+                vold_ref, evalm_ref, vnew_ref, bestv_ref, besti_ref, *,
+                s0: int, c_orig: int, write_v: bool):
+    j = pl.program_id(0)          # pool chunk
+    t = pl.program_id(1)          # 128-wide column tile within the chunk
+
+    @pl.when(jnp.logical_and(j == 0, t == 0))
+    def _init():
+        bestv_ref[0, 0] = -jnp.inf
+        besti_ref[0, 0] = 0
+
+    P = x_ref.shape[0]
+    m = L_ref.shape[0]
+    S = ystar_ref.shape[0]
+    B = P - s0                    # trailing rows to recompute
+    pc = pc_ref[0]                # [TILE_C, d]
+    scores = jnp.zeros((1, TILE_C), jnp.float32)
+    for i in range(m):
+        ls = ls_ref[i]            # [d] ARD lengthscales (already exp'd)
+        y_mean = scal_ref[0, i]
+        y_std = scal_ref[1, i]
+        w = scal_ref[2, i]
+        var_i = scal_ref[3, i]    # exp(log_var)
+        if B > 0:
+            # -- streamed pairdist block + RBF: K(x[s0:], tile)  [B, TILE_C]
+            xb = x_ref[s0:, :] / ls[None, :]
+            pcs = pc / ls[None, :]
+            bb = jnp.sum(xb * xb, axis=-1)[:, None]
+            cc = jnp.sum(pcs * pcs, axis=-1)[None, :]
+            cross = jax.lax.dot_general(
+                xb, pcs, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            d2 = jnp.maximum(bb + cc - 2.0 * cross, 0.0)
+            Ksb = var_i * jnp.exp(-0.5 * d2)
+            # -- trailing triangular solve: V[s0:] = L22⁻¹(Ksb − L21·V[:s0])
+            if s0 > 0:
+                L21 = L_ref[i, s0:, :s0]
+                Vtop = vold_ref[0, i, :s0, :]
+                rhs = Ksb - jnp.dot(L21, Vtop,
+                                    preferred_element_type=jnp.float32)
+            else:
+                rhs = Ksb
+            L22 = L_ref[i, s0:, s0:]
+
+            def fwd(r, Vb):
+                # row r of L22 is zero at columns > r, so the full-width dot
+                # against the partially-filled Vb is exactly the prefix sum
+                lrow = jax.lax.dynamic_slice(L22, (r, 0), (1, B))
+                acc = jnp.dot(lrow, Vb, preferred_element_type=jnp.float32)
+                rhs_r = jax.lax.dynamic_slice(rhs, (r, 0), (1, TILE_C))
+                diag = jax.lax.dynamic_index_in_dim(lrow[0], r, 0,
+                                                    keepdims=False)
+                val = (rhs_r - acc) / diag
+                return jax.lax.dynamic_update_slice(Vb, val, (r, 0))
+
+            Vb = jax.lax.fori_loop(0, B, fwd,
+                                   jnp.zeros((B, TILE_C), jnp.float32))
+            Vi = jnp.concatenate([Vtop, Vb], 0) if s0 > 0 else Vb
+        else:
+            Vi = vold_ref[0, i]   # score-only: cached V is current
+        if write_v:
+            vnew_ref[0, i] = Vi
+        # -- posterior moments, _col_moments' exact accumulation order
+        beta_i = beta_ref[i]
+
+        def mom(p, acc):
+            mu, ss = acc
+            vrow = jax.lax.dynamic_slice(Vi, (p, 0), (1, TILE_C))
+            bp = jax.lax.dynamic_index_in_dim(beta_i, p, 0, keepdims=False)
+            return mu + bp * vrow, ss + vrow * vrow
+
+        v0 = Vi[0:1, :]
+        mu, ss = jax.lax.fori_loop(1, P, mom, (beta_i[0] * v0, v0 * v0))
+        std = jnp.sqrt(jnp.maximum(var_i - ss, 1e-10))
+        mean_d = mu * y_std + y_mean          # de-standardized
+        std_d = std * y_std
+        # -- MES information gain over the S frozen frontier samples
+        af = jnp.zeros((1, TILE_C), jnp.float32)
+        for si in range(S):
+            gamma = (ystar_ref[si, i] - mean_d) / std_d
+            pdf = jax.scipy.stats.norm.pdf(gamma)
+            cdf = jnp.clip(jax.scipy.stats.norm.cdf(gamma), 1e-9, 1.0)
+            af = af + (gamma * pdf / (2.0 * cdf) - jnp.log(cdf))
+        scores = scores + w * (af / S)
+    # -- never-re-evaluate mask + running global argmax
+    scores = jnp.where(evalm_ref[0:1, :], -jnp.inf, scores)
+    local_max = jnp.max(scores)
+    local_idx = jnp.argmax(scores, axis=1)[0].astype(jnp.int32)
+
+    @pl.when(local_max > bestv_ref[0, 0])
+    def _take():
+        bestv_ref[0, 0] = local_max
+        besti_ref[0, 0] = j * c_orig + t * TILE_C + local_idx
+
+
+def round_fused(x, ls, scal, L, beta, ystar, pool_c, v_old, evalm, *,
+                s0: int, c_orig: int | None = None, interpret: bool = False):
+    """Raw fused round kernel — tile-aligned shapes required (use
+    ``ops.round_select`` for arbitrary shapes).
+
+    Args: ``x`` [P, d] padded train rows; ``ls`` [m, d] lengthscales
+    (``exp(log_ls)``); ``scal`` [4, m] rows = (y_mean, y_std, weights,
+    ``exp(log_var)``); ``L`` [m, P, P]; ``beta`` [m, P]; ``ystar`` [S, m];
+    ``pool_c`` [nc, C, d]; ``v_old`` [nc, m, P, C]; ``evalm`` [nc, C] bool.
+    ``s0`` rows of V are reused; ``s0 >= P`` scores the cached V without
+    updating it. ``c_orig`` is the UNPADDED chunk width the global pick
+    index is built from (defaults to C).
+
+    Returns ``(v_new [nc, m, P, C], best_idx [1,1] int32)``.
+    """
+    nc, C, d = pool_c.shape
+    m, P, _ = L.shape
+    S = ystar.shape[0]
+    if C % TILE_C:
+        raise ValueError(f"C={C} must be a multiple of TILE_C={TILE_C}")
+    if d % LANE:
+        raise ValueError(f"D={d} must be a multiple of LANE={LANE}")
+    if x.shape != (P, d) or ls.shape != (m, d):
+        raise ValueError(f"x/ls feature dims must match pool: x={x.shape}, "
+                         f"ls={ls.shape}, pool d={d}, P={P}")
+    if v_old.shape != (nc, m, P, C):
+        raise ValueError(f"v_old shape {v_old.shape} != {(nc, m, P, C)}")
+    s0 = int(s0)
+    write_v = s0 < P
+    out_shape = [jax.ShapeDtypeStruct((nc, m, P, C), jnp.float32),
+                 jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                 jax.ShapeDtypeStruct((1, 1), jnp.int32)]
+    v_new, _, best_idx = pl.pallas_call(
+        functools.partial(_round_body, s0=min(s0, P),
+                          c_orig=int(C if c_orig is None else c_orig),
+                          write_v=write_v),
+        grid=(nc, C // TILE_C),
+        in_specs=[
+            pl.BlockSpec((P, d), lambda j, t: (0, 0)),          # x
+            pl.BlockSpec((m, d), lambda j, t: (0, 0)),          # ls
+            pl.BlockSpec((4, m), lambda j, t: (0, 0)),          # scalars
+            pl.BlockSpec((m, P, P), lambda j, t: (0, 0, 0)),    # L
+            pl.BlockSpec((m, P), lambda j, t: (0, 0)),          # beta
+            pl.BlockSpec((S, m), lambda j, t: (0, 0)),          # ystar
+            pl.BlockSpec((1, TILE_C, d), lambda j, t: (j, t, 0)),
+            pl.BlockSpec((1, m, P, TILE_C), lambda j, t: (j, 0, 0, t)),
+            pl.BlockSpec((1, TILE_C), lambda j, t: (j, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m, P, TILE_C), lambda j, t: (j, 0, 0, t)),
+            pl.BlockSpec((1, 1), lambda j, t: (0, 0)),          # running max
+            pl.BlockSpec((1, 1), lambda j, t: (0, 0)),          # running idx
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, ls, scal, L, beta, ystar, pool_c, v_old, evalm)
+    if not write_v:
+        v_new = v_old
+    return v_new, best_idx

@@ -1,0 +1,49 @@
+"""Shape-robust wrapper around the raw fused round kernel.
+
+Pads the pool-column axis to ``TILE_C`` (pad columns masked ``-inf``) and
+the feature axis to ``LANE`` (zero-padded rows/columns; lengthscales padded
+with 1 so the extra features contribute zero distance), launches the
+kernel, and slices V back — callers never see tile-multiple requirements.
+"""
+import jax.numpy as jnp
+
+from ..common import use_interpret
+from .kernel import LANE, TILE_C, round_fused
+
+
+def round_select(ls, var, L, V, x, beta, ystar, pool_c, evalm_c,
+                 y_mean, y_std, weights, *, s0: int,
+                 interpret: bool | None = None):
+    """Fused round over the chunked pool: ``(V_new, best_idx int32 scalar)``.
+
+    Argument convention matches ``ref.round_select_ref``: ``ls`` [m, d] and
+    ``var`` [m] are the exp'd hyperparameters, ``V`` [nc, m, P, C] the
+    cached whitened cross-covariance, ``s0`` the reusable row count
+    (``0`` = full refactor of V, ``>= P`` = score-only re-use).
+    """
+    nc, C, d = pool_c.shape
+    m = L.shape[0]
+    pad_c = (-C) % TILE_C
+    pad_d = (-d) % LANE
+    if pad_c:
+        pool_c = jnp.pad(pool_c, ((0, 0), (0, pad_c), (0, 0)))
+        evalm_c = jnp.pad(evalm_c, ((0, 0), (0, pad_c)),
+                          constant_values=True)
+        V_in = jnp.pad(V, ((0, 0), (0, 0), (0, 0), (0, pad_c)))
+    else:
+        V_in = V
+    if pad_d:
+        pool_c = jnp.pad(pool_c, ((0, 0), (0, 0), (0, pad_d)))
+        x = jnp.pad(x, ((0, 0), (0, pad_d)))
+        ls = jnp.pad(ls, ((0, 0), (0, pad_d)), constant_values=1.0)
+    scal = jnp.stack([jnp.asarray(y_mean, jnp.float32),
+                      jnp.asarray(y_std, jnp.float32),
+                      jnp.asarray(weights, jnp.float32),
+                      jnp.asarray(var, jnp.float32)])       # [4, m]
+    v_new, best_idx = round_fused(
+        x, ls, scal, L, beta, ystar, pool_c, V_in, evalm_c,
+        s0=s0, c_orig=C,
+        interpret=use_interpret() if interpret is None else interpret)
+    if pad_c:
+        v_new = v_new[..., :C]
+    return v_new, best_idx[0, 0]

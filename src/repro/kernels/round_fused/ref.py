@@ -1,0 +1,79 @@
+"""Pure-jnp staged oracle for the fused round kernel.
+
+Mirrors the engine's staged scoring half exactly — chunk-scanned trailing
+V update (``solve_triangular``), fixed-order posterior moments, closed-form
+MES, ``-inf`` masking, online running-argmax carry with strict-``>``
+first-index-wins ties — but is self-contained (no ``core.engine`` import),
+so the kernel tests can sweep it independently of engine state plumbing.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def _col_moments(var_i, beta_i, Vi):
+    """Fixed-order sequential moments — bit-identical accumulation order to
+    ``engine._col_moments`` (takes ``var = exp(log_var)`` directly)."""
+
+    def body(p, acc):
+        mu, ss = acc
+        return mu + beta_i[p] * Vi[p], ss + Vi[p] * Vi[p]
+
+    mu, ss = jax.lax.fori_loop(
+        1, Vi.shape[0], body, (beta_i[0] * Vi[0], Vi[0] * Vi[0]))
+    return mu, jnp.sqrt(jnp.maximum(var_i - ss, 1e-10))
+
+
+def round_select_ref(ls, var, L, V, x, beta, ystar, pool_c, evalm_c,
+                     y_mean, y_std, weights, *, s0: int):
+    """Staged reference: ``(V_new [nc, m, P, C], best_idx int32 scalar)``.
+
+    Same argument convention as ``ops.round_select`` — ``ls``/``var`` are
+    the exp'd hyperparameters, ``s0`` rows of V are reused (``s0 = 0`` full
+    refactor, ``s0 >= P`` score-only).
+    """
+    nc, C, d = pool_c.shape
+    m, P, _ = L.shape
+    s0 = int(min(s0, P))
+
+    def v_chunk(Vc, pc):
+        def one(lsi, vi, Li, Vci):
+            if s0 >= P:
+                return Vci
+            xs = x[s0:] / lsi
+            ps = pc / lsi
+            d2 = jnp.maximum(
+                jnp.sum(xs * xs, -1)[:, None] + jnp.sum(ps * ps, -1)[None, :]
+                - 2.0 * (xs @ ps.T), 0.0)
+            Ksb = vi * jnp.exp(-0.5 * d2)
+            L21, L22 = Li[s0:, :s0], Li[s0:, s0:]
+            Vb = jax.scipy.linalg.solve_triangular(
+                L22, Ksb - L21 @ Vci[:s0], lower=True)
+            return Vci.at[s0:].set(Vb)
+
+        return jax.vmap(one)(ls, var, L, Vc)
+
+    _, V_new = jax.lax.scan(lambda _, inp: (None, v_chunk(*inp)), None,
+                            (V, pool_c))
+
+    def score(carry, inp):
+        best_val, best_idx = carry
+        Vc, em, b0 = inp
+        mean, std = jax.vmap(_col_moments)(var, beta, Vc)
+        mean_d = mean.T * y_std + y_mean
+        std_d = std.T * y_std
+        gamma = (ystar[:, None, :] - mean_d[None]) / std_d[None]
+        pdf = jax.scipy.stats.norm.pdf(gamma)
+        cdf = jnp.clip(jax.scipy.stats.norm.cdf(gamma), 1e-9, 1.0)
+        af = gamma * pdf / (2.0 * cdf) - jnp.log(cdf)
+        sc = jnp.sum(jnp.mean(af, axis=0) * weights[None, :], -1)
+        sc = jnp.where(em, -jnp.inf, sc)
+        v = jnp.max(sc)
+        i = jnp.argmax(sc).astype(jnp.int32)
+        take = v > best_val
+        return (jnp.where(take, v, best_val),
+                jnp.where(take, b0 + i, best_idx)), None
+
+    base = jnp.arange(nc, dtype=jnp.int32) * C
+    init = (jnp.asarray(-jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32))
+    (_, nxt), _ = jax.lax.scan(score, init, (V_new, evalm_c, base))
+    return V_new, nxt

@@ -179,3 +179,69 @@ def test_merge_trial_evals_dedup_and_alignment():
     # disabled reuse: untouched
     ev2, y2 = merge_trial_evals([3, 7], y_init, trial_rows, trial_y, False)
     assert ev2 == [3, 7] and y2.shape == (2, 3)
+
+
+def test_engine_stats_dict_roundtrip_compat():
+    """from_dict tolerates PR 6-era snapshots (no stage_wall_s), newer
+    snapshots with unknown keys, and never aliases the caller's dict."""
+    from repro.core.engine import EngineStats
+
+    # forward compat: a pre-profiler checkpoint dict loads with defaults
+    old = {"rounds": 4, "refactors": 2, "block_updates": 2, "dispatches": 9,
+           "fantasy_steps": 0, "frontier_resamples": 1, "last_drift": 0.25}
+    st = EngineStats.from_dict(old)
+    assert st.rounds == 4 and st.last_drift == 0.25
+    assert st.stage_wall_s == {}
+    # backward compat: keys from a future build are dropped, not fatal
+    fut = dict(old, stage_wall_s={"fit": 1.5, "round_total": 2.0},
+               some_future_counter=7, another_unknown="x")
+    st2 = EngineStats.from_dict(fut)
+    assert st2.stage_wall_s == {"fit": 1.5, "round_total": 2.0}
+    assert "some_future_counter" not in st2.as_dict()
+    # defensive copy: mutating the source dict must not leak into the stats
+    fut["stage_wall_s"]["fit"] = 99.0
+    assert st2.stage_wall_s["fit"] == 1.5
+    # round trip through as_dict is stable
+    assert EngineStats.from_dict(st2.as_dict()) == st2
+
+
+def test_profile_stages_accounts_for_round_wall():
+    """profile_stages=True runs select rounds as separately-timed stages:
+    every stage key appears, the per-stage sum explains most of the measured
+    round total (conservative 70% bound — CI noise), and the engine still
+    returns valid picks."""
+    from repro.core.engine import PROFILE_STAGES
+
+    rng = np.random.default_rng(5)
+    pool = rng.normal(size=(64, 5)).astype(np.float32)
+    W = rng.normal(size=(5, 3))
+
+    def f(rows):
+        return np.tanh(pool[np.asarray(rows)] @ W).astype(np.float32)
+
+    eng = BOEngine(pool, incremental=True, gp_steps=20, warm_steps=5,
+                   drift_tol=5.0, profile_stages=True)
+    init = list(range(10))
+    eng.observe(init, f(init))
+    key = jax.random.PRNGKey(0)
+    picks = []
+    for _ in range(3):
+        key, k = jax.random.split(key)
+        nxt = eng.select(k, sub_rows=np.arange(64, dtype=np.int32))
+        picks.append(int(nxt))
+        eng.observe([nxt], f([nxt]))
+    assert len(set(picks)) == 3 and all(0 <= p < 64 for p in picks)
+    wall = eng.stats.stage_wall_s
+    assert set(PROFILE_STAGES) | {"round_total"} == set(wall)
+    assert all(v > 0.0 for v in wall.values())
+    stage_sum = sum(v for k, v in wall.items() if k != "round_total")
+    assert stage_sum <= wall["round_total"]
+    assert stage_sum >= 0.7 * wall["round_total"]
+
+
+def test_profile_stages_requires_incremental():
+    import pytest
+
+    with pytest.raises(ValueError, match="profile_stages"):
+        BOEngine(np.zeros((16, 4), np.float32), incremental=False,
+                 profile_stages=True)

@@ -184,6 +184,7 @@ def test_systolic_backend_dispatch(monkeypatch):
     idx = np.asarray(space.sample(jax.random.PRNGKey(5), 21))
     vals = jnp.asarray(space.values(idx), jnp.float32)
     layers = jnp.asarray(get_workload("resnet50"), jnp.float32)
+    monkeypatch.delenv("REPRO_SYSTOLIC_BACKEND", raising=False)
     auto = np.asarray(kb.soc_metrics_auto(vals, layers))
     # default resolution is the reference model on every platform, bit-equal
     assert kb.resolve_systolic_backend("auto", vals.shape[0]) == "xla"
@@ -200,6 +201,232 @@ def test_systolic_backend_dispatch(monkeypatch):
         kb.resolve_systolic_backend("bogus")
 
 
+# ------------------------------------------------------------- round_fused
+def _round_problem(nc, C, d, P, m, S, seed=0):
+    """One synthetic fused-round problem: SPD Cholesky factors, a consistent
+    V cache (so s0 > 0 reuses genuinely correct leading rows), frontier
+    samples, and a few already-evaluated pool columns."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    ls = jnp.exp(0.3 * jax.random.normal(ks[0], (m, d)))
+    var = jnp.exp(0.2 * jax.random.normal(ks[1], (m,)))
+    x = jax.random.normal(ks[2], (P, d))
+    pool_c = jax.random.normal(ks[3], (nc, C, d))
+    A = jax.random.normal(ks[4], (m, P, P)) / np.sqrt(P)
+    K = A @ jnp.swapaxes(A, -1, -2) + 0.5 * jnp.eye(P)
+    L = jnp.linalg.cholesky(K)
+    beta = jax.random.normal(ks[5], (m, P))
+    ystar = jax.random.normal(ks[6], (S, m))
+    evalm_c = jnp.zeros((nc, C), bool).at[0, : min(3, C)].set(True)
+    y_mean = jnp.asarray(np.linspace(-1.0, 1.0, m), jnp.float32)
+    y_std = jnp.asarray(np.linspace(0.5, 2.0, m), jnp.float32)
+    weights = jnp.asarray(np.linspace(0.2, 1.0, m), jnp.float32)
+    # a V cache whose rows are the true whitened cross-covariance, so any
+    # s0 split reuses valid leading rows
+    from repro.kernels.round_fused.ref import round_select_ref
+
+    V0 = jnp.zeros((nc, m, P, C), jnp.float32)
+    V, _ = round_select_ref(ls, var, L, V0, x, beta, ystar, pool_c, evalm_c,
+                            y_mean, y_std, weights, s0=0)
+    return dict(ls=ls, var=var, L=L, V=V, x=x, beta=beta, ystar=ystar,
+                pool_c=pool_c, evalm_c=evalm_c, y_mean=y_mean, y_std=y_std,
+                weights=weights)
+
+
+@pytest.mark.parametrize("nc,C,d,P,m,S,s0", [
+    (2, 130, 5, 24, 3, 10, 16),   # unaligned C and d, partial reuse
+    (1, 48, 26, 8, 2, 5, 0),      # full refactor, sub-tile chunk
+    (3, 7, 3, 16, 3, 10, 8),      # tiny ragged chunks
+    (2, 64, 5, 24, 3, 10, 24),    # s0 == P: score-only, V untouched
+    (1, 1024, 26, 32, 2, 10, 16),  # one wide chunk, many tiles
+])
+def test_round_fused_ops_vs_ref(nc, C, d, P, m, S, s0):
+    """The padded Pallas launch picks the identical candidate to the staged
+    pure-jnp oracle and reproduces its V update to f32 tolerance."""
+    from repro.kernels.round_fused import ops as rf_ops
+    from repro.kernels.round_fused.ref import round_select_ref
+
+    prob = _round_problem(nc, C, d, P, m, S, seed=nc * C + d + s0)
+    want_v, want_i = round_select_ref(**prob, s0=s0)
+    got_v, got_i = rf_ops.round_select(**prob, s0=s0)
+    assert int(got_i) == int(want_i)
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v),
+                               rtol=2e-5, atol=2e-5)
+    if s0 >= P:  # score-only must hand V back untouched
+        np.testing.assert_array_equal(np.asarray(got_v),
+                                      np.asarray(prob["V"]))
+
+
+def test_round_fused_tie_first_index_wins():
+    """Duplicated pool columns across chunk AND tile boundaries score
+    bit-identically in the kernel; the online strict-> reduction must keep
+    the earliest global index, exactly like a monolithic argmax."""
+    from repro.kernels.round_fused import ops as rf_ops
+    from repro.kernels.round_fused.ref import round_select_ref
+
+    prob = _round_problem(2, 130, 5, 16, 3, 8, seed=11)
+    _, ref_i = round_select_ref(**prob, s0=0)
+    j, c = divmod(int(ref_i), 130)
+    # plant duplicates of the winner later in the same chunk and in the next
+    pc = prob["pool_c"]
+    win = pc[j, c]
+    pc = pc.at[j, (c + 1) % 130].set(win) if c + 1 < 130 else pc
+    pc = pc.at[(j + 1) % 2, 5].set(win)
+    prob["pool_c"] = pc
+    prob["V"], _ = round_select_ref(**{**prob, "V": jnp.zeros_like(prob["V"])},
+                                    s0=0)
+    want_v, want_i = round_select_ref(**prob, s0=0)
+    got_v, got_i = rf_ops.round_select(**prob, s0=0)
+    assert int(got_i) == int(want_i)
+    # mask the winner: both paths must now agree on the NEXT duplicate too
+    em = prob["evalm_c"].reshape(-1).at[int(got_i)].set(True).reshape(2, 130)
+    prob["evalm_c"] = em
+    _, want_i2 = round_select_ref(**prob, s0=0)
+    _, got_i2 = rf_ops.round_select(**prob, s0=0)
+    assert int(got_i2) == int(want_i2) != int(got_i)
+
+
+def test_round_fused_raw_kernel_rejects_bad_shapes():
+    from repro.kernels.round_fused.kernel import round_fused
+
+    x = jnp.zeros((8, 128))
+    ls = jnp.ones((2, 128))
+    scal = jnp.ones((4, 2))
+    L = jnp.eye(8)[None].repeat(2, 0)
+    beta = jnp.zeros((2, 8))
+    ystar = jnp.zeros((4, 2))
+    ok_pool = jnp.zeros((1, 128, 128))
+    v = jnp.zeros((1, 2, 8, 128))
+    em = jnp.zeros((1, 128), bool)
+    with pytest.raises(ValueError, match="C=100"):
+        round_fused(x, ls, scal, L, beta, ystar, jnp.zeros((1, 100, 128)),
+                    jnp.zeros((1, 2, 8, 100)), jnp.zeros((1, 100), bool),
+                    s0=0)
+    with pytest.raises(ValueError, match="D=26"):
+        round_fused(jnp.zeros((8, 26)), jnp.ones((2, 26)), scal, L, beta,
+                    ystar, jnp.zeros((1, 128, 26)), v, em, s0=0)
+    with pytest.raises(ValueError, match="v_old shape"):
+        round_fused(x, ls, scal, L, beta, ystar, ok_pool,
+                    jnp.zeros((1, 2, 9, 128)), em, s0=0)
+
+
+def test_round_backend_dispatch(monkeypatch):
+    """auto resolves to the staged XLA round unless REPRO_ROUND_BACKEND
+    upgrades it (fidelity default — golden trajectories pin the staged
+    HLO); platform stays XLA off-TPU; bogus names are named in the error."""
+    from repro.kernels import backend as kb
+
+    monkeypatch.delenv("REPRO_ROUND_BACKEND", raising=False)
+    assert kb.resolve_round_backend("auto", 4096) == "xla"
+    monkeypatch.setenv("REPRO_ROUND_BACKEND", "pallas")
+    assert kb.resolve_round_backend("auto", 4096) == "pallas"
+    monkeypatch.setenv("REPRO_ROUND_BACKEND", "platform")
+    if jax.default_backend() != "tpu":
+        assert kb.resolve_round_backend("auto", 4096) == "xla"
+    monkeypatch.delenv("REPRO_ROUND_BACKEND")
+    assert kb.resolve_round_backend("pallas", 4) == "pallas"
+    assert kb.resolve_round_backend("xla") == "xla"
+    with pytest.raises(ValueError, match="unknown round backend"):
+        kb.resolve_round_backend("cuda")
+
+
+# ------------------------------------- round_fused engine-level pick parity
+def _engine_pool(n, d=5, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _engine_flow(pool, m=3):
+    W = np.random.default_rng(99).normal(size=(pool.shape[1], m))
+
+    def f(rows):
+        x = pool[np.asarray(rows)]
+        return (np.tanh(x @ W)
+                + 0.1 * np.sin(x.sum(1))[:, None]).astype(np.float32)
+
+    return f
+
+
+def _engine_picks(pool, pool_chunk, *, rounds, q=0, n_init=12, gp_steps=25,
+                  seed=3):
+    """Drive one incremental engine; return select picks (+ one q-batch)."""
+    from repro.core import BOEngine
+
+    f = _engine_flow(pool)
+    eng = BOEngine(pool, incremental=True, gp_steps=gp_steps, warm_steps=5,
+                   drift_tol=5.0, pool_chunk=pool_chunk)
+    init = list(range(n_init))
+    eng.observe(init, f(init))
+    key = jax.random.PRNGKey(seed)
+    picks = []
+    for _ in range(rounds):
+        key, k = jax.random.split(key)
+        nxt = eng.select(k, sub_rows=np.arange(pool.shape[0],
+                                               dtype=np.int32))
+        picks.append(int(nxt))
+        eng.observe([nxt], f([nxt]))
+    if q:
+        key, k = jax.random.split(key)
+        picks.append([int(r) for r in eng.select_q(k, q=q)])
+    return picks
+
+
+@pytest.mark.parametrize("n_pool,pool_chunk,rounds", [
+    (48, None, 6),      # crosses the first bucket growth (refactor + update)
+    (64, 7, 6),         # odd chunk, ragged tail
+    (1024, "auto", 2),  # many auto chunks
+])
+def test_round_fused_engine_picks_match_xla(monkeypatch, n_pool, pool_chunk,
+                                            rounds):
+    """Bit-identical pick sequences (selects AND the fantasy q-batch) from
+    the staged XLA round vs the fused Pallas round forced via the env var —
+    with duplicate pool rows planted at chunk boundaries so ties exercise
+    the first-index-wins reduction."""
+    pool = _engine_pool(n_pool, seed=n_pool)
+    pool[min(41, n_pool - 1)] = pool[min(37, n_pool - 2)] = pool[5]
+    monkeypatch.delenv("REPRO_ROUND_BACKEND", raising=False)
+    ref = _engine_picks(pool, pool_chunk, rounds=rounds, q=2)
+    monkeypatch.setenv("REPRO_ROUND_BACKEND", "pallas")
+    got = _engine_picks(pool, pool_chunk, rounds=rounds, q=2)
+    assert got == ref
+
+
+def test_round_fused_batched_engine_picks_match_xla(monkeypatch):
+    """Same pin for the vmapped fleet engine (fused launches vmapped over
+    the scenario axis), including its batched fantasy q-selection."""
+    from repro.core import BatchedBOEngine
+
+    pool0 = _engine_pool(96, seed=4)
+    pool0[:, 3] = pool0[:, 1]  # correlated features, duplicate-ish columns
+    pools = np.stack([pool0, pool0[::-1].copy()])
+    pools[0][51] = pools[0][17]  # tie pair crossing the chunk-40 boundary
+    flows = [_engine_flow(pools[0]), _engine_flow(pools[1])]
+
+    def drive():
+        eng = BatchedBOEngine(pools, incremental=True, gp_steps=25,
+                              warm_steps=5, drift_tol=5.0, pool_chunk=40)
+        init = list(range(10))
+        eng.observe([init, init], [flows[0](init), flows[1](init)])
+        key = jax.random.PRNGKey(7)
+        out = []
+        for _ in range(3):
+            key, k0, k1 = jax.random.split(key, 3)
+            sub = np.tile(np.arange(96, dtype=np.int32), (2, 1))
+            picks = eng.select(jnp.stack([k0, k1]), sub_rows=sub)
+            out.append([int(p) for p in picks])
+            eng.observe([[int(picks[0])], [int(picks[1])]],
+                        [flows[0]([int(picks[0])]),
+                         flows[1]([int(picks[1])])])
+        key, k = jax.random.split(key)
+        qp = eng.select_q(jnp.stack(jax.random.split(k, 2)), q=2)
+        out.append([[int(r) for r in row] for row in np.asarray(qp)])
+        return out
+
+    monkeypatch.delenv("REPRO_ROUND_BACKEND", raising=False)
+    ref = drive()
+    monkeypatch.setenv("REPRO_ROUND_BACKEND", "pallas")
+    got = drive()
+    assert got == ref
+
+
 # --------------------------------------------- pareto_count backend dispatch
 def test_pareto_backend_dispatch(monkeypatch):
     """core.pareto.dominance_counts routes through the unified
@@ -209,6 +436,7 @@ def test_pareto_backend_dispatch(monkeypatch):
     from repro.core.pareto import dominance_counts
     from repro.kernels import backend as kb
 
+    monkeypatch.delenv("REPRO_PARETO_BACKEND", raising=False)
     rng = np.random.default_rng(3)
     y = jnp.asarray(rng.uniform(0.0, 1.0, (37, 3)), jnp.float32)
     auto = np.asarray(dominance_counts(y))
