@@ -152,6 +152,26 @@ class EngineStats:
                                     for k, v in kept["stage_wall_s"].items()}
         return cls(**kept)
 
+    def fold_into(self, registry, *, prefix: str = "engine") -> None:
+        """Accumulate this run's counters into an
+        :class:`repro.obs.MetricsRegistry` (duck-typed — anything with
+        ``counter(name, help).inc(v, **labels)``). Call ONCE per finished
+        engine (the stats are cumulative over its lifetime); the
+        ``stage_wall_s`` breakdown lands as
+        ``engine_stage_seconds_total{stage=...}``."""
+        for k in ("rounds", "refactors", "block_updates", "dispatches",
+                  "fantasy_steps", "frontier_resamples"):
+            v = float(getattr(self, k))
+            if v:
+                registry.counter(f"{prefix}_{k}_total",
+                                 f"engine {k.replace('_', ' ')}").inc(v)
+        for stage, s in (self.stage_wall_s or {}).items():
+            registry.counter(
+                f"{prefix}_stage_seconds_total",
+                "profiled per-stage wall seconds"
+                " (profile_stages=True rounds only)",
+            ).inc(float(s), stage=str(stage))
+
 
 class EngineState(NamedTuple):
     """Device-resident carry between rounds (a pytree).

@@ -51,7 +51,7 @@ from .pareto import pareto_mask
 from .sampling import soc_init
 from .space import DesignSpace
 from .tuner import (TunerResult, frontier_subset_rows, icd_trial_rows,
-                    merge_trial_evals, round_record)
+                    merge_trial_evals)
 
 __all__ = ["FleetScenario", "FleetResult", "FlowEvalCache", "fleet_tuner",
            "fleet_prologue"]
@@ -285,14 +285,12 @@ class _ScenarioState:
 
 def _log_round(st: _ScenarioState, i: int, label: str,
                reference_front: np.ndarray | None, verbose: bool,
-               tag: str = "fleet", wall_s: float | None = None) -> None:
-    rec = round_record(st.y, len(st.evaluated), i, reference_front,
-                       wall_s=wall_s)
-    st.history.append(rec)
-    if verbose:
-        print(f"[{tag}] {label:<24s} round {i:3d} evals={rec['evaluations']:4d} "
-              f"front={rec['pareto_size']:3d}"
-              + (f" adrs={rec['adrs']:.4f}" if "adrs" in rec else ""))
+               tag: str = "fleet", wall_s: float | None = None,
+               events=None) -> None:
+    from repro.obs import log_progress  # deferred: obs imports core.tuner
+    log_progress(st.history, st.y, len(st.evaluated), i, reference_front,
+                 verbose=verbose, tag=tag, label=label, wall_s=wall_s,
+                 events=events)
 
 
 def fleet_prologue(space: DesignSpace, pool_idx: np.ndarray,
@@ -425,7 +423,7 @@ def fleet_tuner(
     bit-exactly — the resumed prologue is rebuilt from the checkpointed
     importance vectors without re-paying any flow evaluation.
     """
-    t0 = time.time()
+    t0 = time.monotonic()
     scenarios = list(scenarios)
     pool_idx = np.asarray(pool_idx)
     N = pool_idx.shape[0]
@@ -536,7 +534,7 @@ def fleet_tuner(
             save_checkpoint(it + 1)
 
     # ---- package per-scenario results in soc_tuner's own layout.
-    wall = time.time() - t0
+    wall = time.monotonic() - t0
     results = []
     for st in states:
         rows = np.asarray(st.evaluated)

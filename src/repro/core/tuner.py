@@ -230,7 +230,7 @@ def soc_tuner(
     killed run from the latest snapshot *bit-exactly*, without re-paying any
     flow evaluation (see ``docs/service.md``).
     """
-    t0 = time.time()
+    t0 = time.monotonic()
     key = jax.random.PRNGKey(0) if key is None else key
     pool_idx = np.asarray(pool_idx)
     N = pool_idx.shape[0]
@@ -274,20 +274,18 @@ def soc_tuner(
         y = np.asarray(snap["y"], np.float32)
         key = jnp.asarray(snap["key"])
 
+    from repro.obs import log_progress  # deferred: obs imports this module
+
     history: list[dict] = [] if snap is None else list(snap["history"])
-    t_round = time.time()
+    t_round = time.monotonic()
 
     def log_round(i: int):
         nonlocal t_round
-        now = time.time()
-        rec = round_record(y, len(evaluated), i, reference_front,
-                           wall_s=now - t_round)
+        now = time.monotonic()
+        log_progress(history, y, len(evaluated), i, reference_front,
+                     verbose=verbose, tag="soc-tuner",
+                     wall_s=now - t_round)
         t_round = now
-        history.append(rec)
-        if verbose:
-            print(f"[soc-tuner] round {i:3d} evals={rec['evaluations']:4d} "
-                  f"front={rec['pareto_size']:3d}"
-                  + (f" adrs={rec['adrs']:.4f}" if "adrs" in rec else ""))
 
     start_round = 0 if snap is None else int(snap["round"])
     if snap is None:
@@ -342,4 +340,4 @@ def soc_tuner(
     return TunerResult(
         space=pruned, v=np.asarray(v), evaluated_rows=rows, y=y,
         pareto_rows=rows[front], pareto_y=y[front], history=history,
-        wall_s=time.time() - t0, engine_stats=engine.stats.as_dict())
+        wall_s=time.monotonic() - t0, engine_stats=engine.stats.as_dict())

@@ -26,11 +26,12 @@ existing invocations are untouched):
     the same deterministic trajectory it would have alone. A SIGKILL'd
     server restarted with ``--resume`` continues every job bit-exactly.
 
-``soc-service submit|status|pause|resume|cancel|shutdown --port ...``
+``soc-service submit|status|metrics|pause|resume|cancel|shutdown --port ..``
     one-shot wire clients for a running server::
 
         soc-service submit --port 7763 --workload resnet50 --T 40 --q 4
         soc-service status --port 7763
+        soc-service metrics --port 7763 --prom   # Prometheus text format
         soc-service pause --port 7763 --job j0000
 
 ``soc-service cache-gc --cache-dir ... [--max-bytes N] [--max-age-days D]``
@@ -100,6 +101,12 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--mock-flow-delay", type=float, default=None,
                    help="wrap the flow in a per-call sleep of this many "
                         "seconds (mock of a real flow's latency)")
+    p.add_argument("--events", default=None,
+                   help="append telemetry events (JSON lines) to this "
+                        "file; render with tools/trace_report.py")
+    p.add_argument("--profile-stages", action="store_true",
+                   help="profile the engine's per-round stage walls "
+                        "(folded into the metrics registry)")
     p.add_argument("--out", default=None,
                    help="write the result (rows, metrics, history, stats) "
                         "as JSON here")
@@ -151,6 +158,9 @@ def build_fleet_parser() -> argparse.ArgumentParser:
     p.add_argument("--mock-flow-delay", type=float, default=None,
                    help="wrap every flow in a per-call sleep of this many "
                         "seconds (mock of a real flow's latency)")
+    p.add_argument("--events", default=None,
+                   help="append telemetry events (JSON lines) to this "
+                        "file; render with tools/trace_report.py")
     p.add_argument("--out", default=None,
                    help="write per-scenario results as JSON here")
     p.add_argument("--kill-after", type=int, default=None,
@@ -206,6 +216,9 @@ def build_serve_parser() -> argparse.ArgumentParser:
     p.add_argument("--mock-flow-delay", type=float, default=None,
                    help="wrap every flow in a per-call sleep of this many "
                         "seconds (mock of a real flow's latency)")
+    p.add_argument("--events", default=None,
+                   help="append telemetry events (JSON lines) to this "
+                        "file; a resumed server appends a new generation")
     p.add_argument("--out", default=None,
                    help="write per-job results as JSON here on exit")
     p.add_argument("--kill-after", type=int, default=None,
@@ -226,6 +239,10 @@ def build_client_parser(verb: str) -> argparse.ArgumentParser:
         p.add_argument("--job", required=True)
     elif verb == "status":
         p.add_argument("--job", default=None)
+    elif verb == "metrics":
+        p.add_argument("--prom", action="store_true",
+                       help="render the snapshot as Prometheus text "
+                            "exposition format instead of JSON")
     elif verb == "submit":
         p.add_argument("--spec", default=None,
                        help="full JSON spec dict (overrides the flags "
@@ -289,7 +306,7 @@ def main_fleet(argv=None) -> int:
         pool_chunk=pool_chunk, flow_factory=flow_factory,
         cache_dir=a.cache_dir, checkpoint_dir=a.checkpoint_dir,
         checkpoint_every=a.checkpoint_every, resume=a.resume,
-        verbose=not a.quiet, _kill_after=a.kill_after)
+        verbose=not a.quiet, events=a.events, _kill_after=a.kill_after)
 
     if not a.quiet:
         for sc, res in zip(fr.scenarios, fr.results):
@@ -337,7 +354,7 @@ def main_serve(argv=None) -> int:
         flow_factory=flow_factory, cache_dir=a.cache_dir,
         checkpoint_dir=a.checkpoint_dir, checkpoint_every=a.checkpoint_every,
         max_active=a.max_active, retries=a.retries, resume=a.resume,
-        verbose=not a.quiet, _kill_after=a.kill_after)
+        verbose=not a.quiet, events=a.events, _kill_after=a.kill_after)
     if a.jobs_file and not server.jobs:
         with open(a.jobs_file) as f:
             for spec in json.load(f):
@@ -396,6 +413,13 @@ def main_client(verb: str, argv=None) -> int:
                 spec["weights"] = [float(w) for w in a.weights.split(",")]
         req["spec"] = spec
     reply = request(a.port, req, host=a.host, timeout=a.timeout)
+    if verb == "metrics" and getattr(a, "prom", False) and reply.get("ok"):
+        # the snapshot IS the wire payload; Prometheus text is a pure
+        # client-side rendering of it.
+        from repro.obs import render_prometheus
+
+        print(render_prometheus(reply["metrics"]), end="")
+        return 0
     print(json.dumps(reply, indent=2))
     return 0 if reply.get("ok") else 1
 
@@ -421,8 +445,8 @@ def main(argv=None) -> int:
         return main_fleet(argv[1:])
     if argv and argv[0] == "serve":
         return main_serve(argv[1:])
-    if argv and argv[0] in ("submit", "status", "pause", "resume",
-                            "cancel", "shutdown"):
+    if argv and argv[0] in ("submit", "status", "metrics", "pause",
+                            "resume", "cancel", "shutdown"):
         return main_client(argv[0], argv[1:])
     if argv and argv[0] == "cache-gc":
         return main_cache_gc(argv[1:])
@@ -457,7 +481,8 @@ def main(argv=None) -> int:
         incremental=not a.no_incremental, bucket=a.bucket,
         pool_chunk=pool_chunk, cache_dir=a.cache_dir,
         checkpoint_dir=a.checkpoint_dir, checkpoint_every=a.checkpoint_every,
-        resume=a.resume, verbose=not a.quiet, _kill_after=a.kill_after)
+        resume=a.resume, verbose=not a.quiet, events=a.events,
+        profile_stages=a.profile_stages, _kill_after=a.kill_after)
 
     if not a.quiet:
         print(f"[service] {len(res.evaluated_rows)} evaluations, "

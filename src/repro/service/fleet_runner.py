@@ -46,6 +46,7 @@ from repro.core.fleet import (FleetResult, FlowEvalCache, _log_round,
 from repro.core.pareto import pareto_mask
 from repro.core.tuner import (TunerResult, _pool_fingerprint,
                               frontier_subset_rows)
+from repro.obs import EventLog, MetricsRegistry
 
 from .checkpoint import (load_latest_validated, prune_snapshots,
                          save_snapshot, snapshot_path)
@@ -89,6 +90,8 @@ def fleet_service(
     checkpoint_every: int = 1,
     resume: bool = False,
     verbose: bool = False,
+    metrics: MetricsRegistry | None = None,
+    events: EventLog | str | None = None,
     _kill_after: int | None = None,
 ) -> FleetResult:
     """Explore every scenario of a fleet asynchronously over one worker pool.
@@ -106,8 +109,17 @@ def fleet_service(
     :func:`repro.core.fleet.fleet_tuner`. ``_kill_after`` is a test hook:
     SIGKILL this process right after the checkpoint covering that many
     TOTAL (fleet-wide) BO evaluations.
+
+    Telemetry (host-side only, zero trajectory perturbation — see
+    ``repro.obs``): ``metrics`` joins an existing registry (one is created
+    otherwise); ``events`` is an :class:`repro.obs.EventLog` or a path to
+    open one (a path is closed on exit; a resumed run appends a new
+    generation).
     """
-    t0 = time.time()
+    t0 = time.monotonic()
+    metrics = MetricsRegistry() if metrics is None else metrics
+    _ev_owned = isinstance(events, str)
+    ev = EventLog(events, run="fleet_service") if _ev_owned else events
     scenarios = list(scenarios)
     S = len(scenarios)
     if S < 1:
@@ -199,7 +211,7 @@ def fleet_service(
 
     done = ([0] * S if snap is None else [int(x) for x in snap["done"]])
     cycle = 0 if snap is None else int(snap["cycle"])
-    t_cycle = time.time()
+    t_cycle = time.monotonic()
 
     # One shared pool serves the whole fleet; per-pick workload/flow routing,
     # in-flight dedup and the disk cache live inside it.
@@ -207,7 +219,13 @@ def fleet_service(
         max_workers = max(1, min(q * S, os.cpu_count() or 1))
     fpool = FlowPool(next(iter(flows.values())),
                      workload=scenarios[0].workload,
-                     max_workers=max_workers, executor=executor, cache=disk)
+                     max_workers=max_workers, executor=executor, cache=disk,
+                     metrics=metrics, events=ev)
+    if disk is not None:
+        disk.bind_metrics(metrics)
+    g_memo = metrics.gauge("fleet_cache_memo_hits",
+                           "fleet memo (FlowEvalCache) peek hits")
+    metrics.add_collector(lambda: g_memo.set(cache.peek_hits))
 
     def submit_pick(si: int, row: int) -> int:
         wl = scenarios[si].workload
@@ -283,7 +301,7 @@ def fleet_service(
                 obs_rows,
                 [np.stack(ys) if ys else np.zeros((0, 3), np.float32)
                  for ys in obs_ys])
-            now = time.time()
+            now = time.monotonic()
             for si, sc in enumerate(scenarios):
                 st = states[si]
                 for row, y_row in zip(obs_rows[si], obs_ys[si]):
@@ -292,9 +310,12 @@ def fleet_service(
                     done[si] += 1
                     _log_round(st, done[si], sc.label,
                                reference_fronts.get(sc.workload), verbose,
-                               "fleet-svc", wall_s=now - t_cycle)
+                               "fleet-svc", wall_s=now - t_cycle, events=ev)
             t_cycle = now
             cycle += 1
+            if ev is not None:
+                ev.instant("cycle", cat="fleet", track="fleet",
+                           cycle=cycle, done=sum(done))
             if checkpoint_dir and any(obs_rows) and \
                     (cycle % checkpoint_every == 0
                      or all(d >= T for d in done)):
@@ -321,6 +342,8 @@ def fleet_service(
                     os.kill(os.getpid(), signal.SIGKILL)
     finally:
         fpool.close()
+        if ev is not None and _ev_owned:
+            ev.close()
 
     if verbose:
         for si, sc in enumerate(scenarios):
@@ -329,7 +352,8 @@ def fleet_service(
                       f"{T} evaluations — candidate pool exhausted")
 
     # ---- package per-scenario results in soc_tuner's own layout.
-    wall = time.time() - t0
+    wall = time.monotonic() - t0
+    engine.stats.fold_into(metrics)
     stats = engine.stats.as_dict()
     stats["service"] = {
         "pool_dispatched": fpool.dispatched,

@@ -36,6 +36,8 @@ class FlowDiskCache:
         self.hits = 0
         self.misses = 0
         self.puts = 0
+        self.gc_removed = 0        # cumulative across gc() calls
+        self.gc_removed_bytes = 0
 
     @staticmethod
     def key(workload: str, idx_row) -> str:
@@ -149,6 +151,9 @@ class FlowDiskCache:
             removed += 1
             removed_bytes += sz
             kept_bytes -= sz
+        if not dry_run:
+            self.gc_removed += removed
+            self.gc_removed_bytes += removed_bytes
         return {"scanned": len(entries), "removed": removed,
                 "removed_bytes": removed_bytes,
                 "kept": len(entries) - removed, "kept_bytes": kept_bytes}
@@ -157,6 +162,36 @@ class FlowDiskCache:
     @property
     def requests(self) -> int:
         return self.hits + self.misses
+
+    def counters(self) -> dict:
+        """Plain-int counter snapshot (the ``status()`` wire shape)."""
+        return {"hits": self.hits, "misses": self.misses,
+                "puts": self.puts, "gc_removed": self.gc_removed,
+                "gc_removed_bytes": self.gc_removed_bytes}
+
+    def bind_metrics(self, registry, prefix: str = "flow_disk") -> None:
+        """Mirror this cache's plain counters into ``registry`` gauges via
+        a snapshot-time collector. The cache itself never holds a registry
+        reference — it must stay picklable (it travels to process-pool
+        workers inside :class:`CachedFlow`)."""
+        gauges = {
+            "hits": registry.gauge(
+                f"{prefix}_hits", "disk-cache lookups served"),
+            "misses": registry.gauge(
+                f"{prefix}_misses", "disk-cache lookups missed"),
+            "puts": registry.gauge(
+                f"{prefix}_puts", "disk-cache entries written"),
+            "gc_removed": registry.gauge(
+                f"{prefix}_gc_removed", "entries evicted by gc"),
+            "gc_removed_bytes": registry.gauge(
+                f"{prefix}_gc_removed_bytes", "bytes evicted by gc"),
+        }
+
+        def collect(cache=self, gauges=gauges):
+            for k, v in cache.counters().items():
+                gauges[k].set(v)
+
+        registry.add_collector(collect)
 
     def summary(self) -> str:
         hr = self.hits / max(self.requests, 1)

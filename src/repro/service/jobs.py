@@ -45,6 +45,7 @@ from repro.core.fleet import (FleetScenario, FlowEvalCache, _log_round,
 from repro.core.pareto import pareto_mask
 from repro.core.tuner import (TunerResult, _pool_fingerprint,
                               frontier_subset_rows)
+from repro.obs import MetricsRegistry
 
 from .checkpoint import (latest_snapshot, load_latest_validated,
                          load_snapshot, prune_snapshots, save_snapshot,
@@ -168,7 +169,7 @@ class Job:
     def __init__(self, job_id: str, spec: JobSpec, *, space, pool_idx,
                  disk=None, checkpoint_dir: str | None = None,
                  checkpoint_every: int = 1, reference_front=None,
-                 verbose: bool = False):
+                 verbose: bool = False, metrics=None, events=None):
         self.id = str(job_id)
         self.spec = spec
         self.space = space
@@ -194,8 +195,26 @@ class Job:
         self._pending: list[tuple[int, int]] = []   # (ticket, row)
         self._result: TunerResult | None = None
         self._snap_mem: dict | None = None   # eviction record (pause)
-        self._t_start = None
+        self._t_start = None                 # monotonic; None while not RUNNING
         self._t_cycle = None
+        # Telemetry (host-side, zero perturbation — see repro.obs): shared
+        # with the owning server; both optional.
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self.events = events
+        self._memo_hits = 0                  # survives engine teardown
+        self._m_transitions = self.metrics.counter(
+            "job_transitions_total", "job state-machine transitions")
+
+    def _set_status(self, new: str) -> None:
+        """The ONE place a job changes state: bumps the per-transition
+        counter and emits the event-log record."""
+        old = self.status
+        self.status = new
+        if old != new:
+            self._m_transitions.inc(**{"from": old, "to": new})
+        if self.events is not None:
+            self.events.instant("job.state", cat="job", track=self.id,
+                                **{"from": old, "to": new})
 
     @property
     def label(self) -> str:
@@ -260,9 +279,9 @@ class Job:
             for r in (int(r) for r in snap["pending"]["0"]):
                 self._pending.append((self._submit(fpool, r), r))
         self._snap_mem = None
-        self.status = RUNNING
+        self._set_status(RUNNING)
         self.error = None
-        self._t_start = self._t_cycle = time.time()
+        self._t_start = self._t_cycle = time.monotonic()
 
     def _submit(self, fpool, row: int) -> int:
         y = self._cache.peek(self.spec.workload, row)
@@ -279,6 +298,17 @@ class Job:
         evaluation fails past the pool's retry budget."""
         if self.status != RUNNING:
             raise RuntimeError(f"step() on {self.status} job {self.id}")
+        if self.events is not None:
+            self.events.begin("job.step", cat="job", track=self.id,
+                              cycle=self.cycle)
+        try:
+            return self._step(fpool)
+        finally:
+            if self.events is not None:
+                self.events.end("job.step", cat="job", track=self.id,
+                                done=self.done, status=self.status)
+
+    def _step(self, fpool) -> int:
         sp, st, pending = self.spec, self._st, self._pending
         if not self._active():
             self._finish()
@@ -316,13 +346,14 @@ class Job:
         self._engine.observe(
             [obs_rows],
             [np.stack(obs_ys) if obs_ys else np.zeros((0, 3), np.float32)])
-        now = time.time()
+        now = time.monotonic()
         for row, y_row in zip(obs_rows, obs_ys):
             st.evaluated.append(row)
             st.y = np.concatenate([st.y, y_row[None]], axis=0)
             self.done += 1
             _log_round(st, self.done, self.label, self.reference_front,
-                       self.verbose, "server", wall_s=now - self._t_cycle)
+                       self.verbose, "server", wall_s=now - self._t_cycle,
+                       events=self.events)
         self._t_cycle = now
         self.cycle += 1
         finished = not self._active()
@@ -345,7 +376,7 @@ class Job:
         if self.checkpoint_dir:
             self._write_snapshot(self._snap_mem)
         self._evict(fpool)
-        self.status = PAUSED
+        self._set_status(PAUSED)
 
     def cancel(self, fpool) -> None:
         if self.status in (DONE, CANCELLED):
@@ -353,25 +384,25 @@ class Job:
                              f"{self.status}")
         if self.status == RUNNING:
             self._evict(fpool)
-        self.status = CANCELLED
+        self._set_status(CANCELLED)
 
     def _evict(self, fpool) -> None:
         fpool.abandon([t for t, _ in self._pending])
         self._pending = []
         if self._t_start is not None:
-            self.wall_s += time.time() - self._t_start
+            self.wall_s += time.monotonic() - self._t_start
             self._t_start = None
         self._teardown_engine()
 
     def _fail(self, fpool, exc: BaseException) -> None:
         self.error = f"{type(exc).__name__}: {exc}"
         self._evict(fpool)
-        self.status = FAILED
+        self._set_status(FAILED)
 
     def _finish(self) -> None:
         st = self._st
         if self._t_start is not None:
-            self.wall_s += time.time() - self._t_start
+            self.wall_s += time.monotonic() - self._t_start
             self._t_start = None
         rows = np.asarray(st.evaluated)
         front = np.asarray(
@@ -381,15 +412,29 @@ class Job:
             y=st.y, pareto_rows=rows[front], pareto_y=st.y[front],
             history=st.history, wall_s=self.wall_s,
             engine_stats=self._engine.stats.as_dict())
+        # Fold the finished engine's counters (incl. any stage_wall_s
+        # breakdown) into the registry ONCE, at the terminal transition —
+        # pause/resume restores cumulative stats, so folding at eviction
+        # would double-count.
+        self._engine.stats.fold_into(self.metrics)
         self._teardown_engine()
-        self.status = DONE
+        self._set_status(DONE)
 
     def _teardown_engine(self) -> None:
         if self._engine is not None:
             self._engine.release()
+        if self._cache is not None:
+            self._memo_hits = self._cache.peek_hits
         self._engine = None
         self._cache = None
         self._flow = None
+
+    @property
+    def memo_hits(self) -> int:
+        """Fleet-memo (``FlowEvalCache.peek``) hits — reads the live cache
+        while the job runs, the value frozen at teardown otherwise."""
+        return (self._cache.peek_hits if self._cache is not None
+                else self._memo_hits)
 
     # ----------------------------------------------------------- checkpoint
     def _snapshot_record(self) -> dict:
@@ -459,6 +504,7 @@ class Job:
                 "priority": self.spec.priority, "T": self.spec.T,
                 "done": self.done, "cycle": self.cycle,
                 "in_flight": len(self._pending),
+                "memo_hits": self.memo_hits,
                 "engine_bytes": (0 if self._engine is None
                                  else self._engine.device_bytes()),
                 "error": self.error}

@@ -30,9 +30,12 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import multiprocessing
+import time
 from typing import Callable
 
 import numpy as np
+
+from repro.obs import MetricsRegistry
 
 from .flowcache import FlowDiskCache
 
@@ -95,7 +98,8 @@ class FlowPool:
     def __init__(self, flow, *, workload: str = "workload",
                  max_workers: int = 4, executor="process",
                  cache: FlowDiskCache | str | None = None,
-                 mp_context: str = "spawn", retries: int = 0):
+                 mp_context: str = "spawn", retries: int = 0,
+                 metrics: MetricsRegistry | None = None, events=None):
         self.flow = flow
         self.workload = str(workload)
         self.cache = (None if cache is None else
@@ -132,12 +136,53 @@ class FlowPool:
         self.dispatched = 0
         self.retried = 0
         self.abandoned = 0
+        # --- telemetry (host-side only; see repro.obs) ------------------
+        # The plain int attributes above stay the source of truth for
+        # status()/stats; the registry mirrors them as counters plus a
+        # submit->drain latency histogram, and `events` (an
+        # obs.EventLog or None) gets one instant per submit/complete so
+        # every flow evaluation shows as its own bar in the Chrome trace.
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self.events = events
+        m = self.metrics
+        self._m_dispatched = m.counter(
+            "pool_dispatched_total", "flow evaluations sent to a worker")
+        self._m_cache_hits = m.counter(
+            "pool_cache_hits_total", "submits served by the disk cache")
+        self._m_inflight_hits = m.counter(
+            "pool_inflight_hits_total",
+            "submits sharing an already-running identical dispatch")
+        self._m_resolved = m.counter(
+            "pool_resolved_total",
+            "submits resolved by the caller's own memo")
+        self._m_retried = m.counter(
+            "pool_retried_total", "failed dispatches re-dispatched")
+        self._m_abandoned = m.counter(
+            "pool_abandoned_total", "tickets forgotten by preemption")
+        self._m_completed = m.counter(
+            "pool_completed_total", "tickets drained back to a caller")
+        self._m_latency = m.histogram(
+            "pool_latency_seconds", "ticket submit -> drain latency")
+        g_out = m.gauge("pool_outstanding",
+                        "tickets submitted and not yet drained")
+        g_inf = m.gauge("pool_in_flight",
+                        "distinct dispatches currently on workers")
+        m.add_collector(lambda: (g_out.set(self.outstanding),
+                                 g_inf.set(len(self._inflight))))
+        self._t_sub: dict[int, float] = {}   # ticket -> submit monotonic
+        self._src: dict[int, str] = {}       # ticket -> latency source label
 
     # ---------------------------------------------------------------- submit
-    def _new_ticket(self, row: int) -> int:
+    def _ev(self, name: str, **fields) -> None:
+        if self.events is not None:
+            self.events.instant(name, cat="pool", track="pool", **fields)
+
+    def _new_ticket(self, row: int, src: str) -> int:
         t = self._next_ticket
         self._next_ticket += 1
         self._rows[t] = int(row)
+        self._t_sub[t] = time.monotonic()
+        self._src[t] = src
         return t
 
     def submit(self, row: int, idx_row: np.ndarray, *,
@@ -148,7 +193,7 @@ class FlowPool:
         service passes them per call (one pool, many scenarios)."""
         wl = self.workload if workload is None else str(workload)
         fl = self.flow if flow is None else flow
-        t = self._new_ticket(row)
+        t = self._new_ticket(row, "worker")
         idx_row = np.asarray(idx_row)
         self._idx[t] = idx_row
         self._wl[t] = wl
@@ -156,7 +201,11 @@ class FlowPool:
             y = self.cache.get(wl, idx_row)
             if y is not None:
                 self.cache_hits += 1
+                self._m_cache_hits.inc()
+                self._src[t] = "cache"
                 self._ready[t] = np.asarray(y)
+                self._ev("pool.submit", ticket=t, row=int(row),
+                         workload=wl, src="cache")
                 return t
         key = FlowDiskCache.key(wl, idx_row)
         fut = self._inflight.get(key)
@@ -166,12 +215,17 @@ class FlowPool:
             # stays owned by the tickets that already hold it).
         if fut is None:
             self.dispatched += 1
+            self._m_dispatched.inc()
             fut = self._ex.submit(_flow_task, fl, idx_row)
             self._inflight[key] = fut
         else:
             self.inflight_hits += 1
+            self._m_inflight_hits.inc()
+            self._src[t] = "shared"
         self._futs[t] = fut
         self._flowref[t] = fl
+        self._ev("pool.submit", ticket=t, row=int(row), workload=wl,
+                 src=self._src[t])
         return t
 
     def submit_resolved(self, row: int, y: np.ndarray) -> int:
@@ -179,8 +233,10 @@ class FlowPool:
         caller's own memo (e.g. the fleet's in-memory evaluation cache)
         resolved this design point, but drains must still see it in ticket
         order."""
-        t = self._new_ticket(row)
+        t = self._new_ticket(row, "resolved")
         self._ready[t] = np.asarray(y)
+        self._m_resolved.inc()
+        self._ev("pool.submit", ticket=t, row=int(row), src="resolved")
         return t
 
     @property
@@ -214,6 +270,11 @@ class FlowPool:
                         self._retry_counts.get(key, 0) + 1
                     self.retried += 1
                     self.dispatched += 1
+                    self._m_retried.inc()
+                    self._m_dispatched.inc()
+                    self._ev("pool.retry", ticket=t,
+                             workload=self._wl.get(t),
+                             attempt=self._retry_counts[key])
                     new = self._ex.submit(_flow_task, self._flowref[t],
                                           self._idx[t])
                     self._inflight[key] = new
@@ -242,6 +303,12 @@ class FlowPool:
         self._idx.pop(t, None)
         self._wl.pop(t, None)
         self._flowref.pop(t, None)
+        t_sub = self._t_sub.pop(t, None)
+        src = self._src.pop(t, "worker")
+        if t_sub is not None:
+            self._m_latency.observe(time.monotonic() - t_sub, source=src)
+        self._m_completed.inc()
+        self._ev("pool.complete", ticket=t, src=src)
         return t, self._rows.pop(t), self._ready.pop(t)
 
     def abandon(self, tickets) -> int:
@@ -263,6 +330,9 @@ class FlowPool:
             n += 1
             self._rows.pop(t)
             self._ready.pop(t, None)
+            self._t_sub.pop(t, None)
+            self._src.pop(t, None)
+            self._ev("pool.abandon", ticket=t)
             idx = self._idx.pop(t, None)
             wl = self._wl.pop(t, None)
             self._flowref.pop(t, None)
@@ -280,6 +350,8 @@ class FlowPool:
                             self.cache.put(wl, idx, np.asarray(f.result()))
                 fut.add_done_callback(_retire)
         self.abandoned += n
+        if n:
+            self._m_abandoned.inc(n)
         return n
 
     def collect(self, tickets) -> list[tuple[int, int, np.ndarray]]:

@@ -45,7 +45,8 @@ import numpy as np
 from repro.core.engine import BOEngine, FANTASY_MODES
 from repro.core.tuner import (TunerResult, _front, _pool_fingerprint,
                               _prologue_from_v, explore_prologue,
-                              frontier_subset_rows, round_record)
+                              frontier_subset_rows)
+from repro.obs import EventLog, MetricsRegistry, log_progress
 
 from .checkpoint import (load_latest_validated, prune_snapshots,
                          save_snapshot, snapshot_path)
@@ -91,6 +92,9 @@ def service_tuner(
     checkpoint_every: int = 1,
     resume: bool = False,
     verbose: bool = False,
+    metrics: MetricsRegistry | None = None,
+    events: EventLog | str | None = None,
+    profile_stages: bool = False,
     _kill_after: int | None = None,
 ) -> TunerResult:
     """Run the exploration service; returns ``soc_tuner``'s result layout.
@@ -106,8 +110,18 @@ def service_tuner(
     jit-cache pad bucket (larger buckets = fewer recompiles on long runs).
     ``_kill_after`` is a test hook: SIGKILL this process right after the
     checkpoint that covers that many BO evaluations (exercises crash-resume).
+
+    Telemetry (all host-side, zero trajectory perturbation — see
+    ``repro.obs``): ``metrics`` joins an existing registry (one is created
+    otherwise), ``events`` is an :class:`repro.obs.EventLog` or a path to
+    open one (a path is closed on exit; a resumed run appends a new
+    generation), ``profile_stages`` enables the engine's per-stage
+    profiler and folds its wall breakdown into the registry.
     """
-    t0 = time.time()
+    t0 = time.monotonic()
+    metrics = MetricsRegistry() if metrics is None else metrics
+    _ev_owned = isinstance(events, str)
+    ev = EventLog(events, run="service_tuner") if _ev_owned else events
     if q < 1:
         raise ValueError(f"q must be >= 1, got {q}")
     if q > 1 and not incremental:
@@ -168,7 +182,8 @@ def service_tuner(
     engine_kw = dict(incremental=incremental, warm_start=warm_start,
                      gp_steps=gp_steps, warm_steps=warm_steps,
                      drift_tol=drift_tol, s_frontiers=s_frontiers,
-                     weights=w, pool_chunk=pool_chunk)
+                     weights=w, pool_chunk=pool_chunk,
+                     profile_stages=profile_stages)
     if bucket is not None:
         engine_kw["bucket"] = int(bucket)
     engine = BOEngine(pool_icd, **engine_kw)
@@ -179,26 +194,25 @@ def service_tuner(
 
     history: list[dict] = [] if snap is None else list(snap["history"])
     done = 0 if snap is None else int(snap["done"])
-    t_round = time.time()
+    t_round = time.monotonic()
 
     def log_round(i: int) -> None:
         nonlocal t_round
-        now = time.time()
-        rec = round_record(y, len(evaluated), i, reference_front,
-                           wall_s=now - t_round)
+        now = time.monotonic()
+        log_progress(history, y, len(evaluated), i, reference_front,
+                     verbose=verbose, tag="service", word="eval",
+                     wall_s=now - t_round, events=ev, track=workload)
         t_round = now
-        history.append(rec)
-        if verbose:
-            print(f"[service] eval {i:4d} evals={rec['evaluations']:4d} "
-                  f"front={rec['pareto_size']:3d}"
-                  + (f" adrs={rec['adrs']:.4f}" if "adrs" in rec else ""))
 
     if snap is None:
         log_round(0)
 
     fpool = FlowPool(flow, workload=workload,
                      max_workers=q if max_workers is None else max_workers,
-                     executor=executor, cache=disk)
+                     executor=executor, cache=disk,
+                     metrics=metrics, events=ev)
+    if disk is not None:
+        disk.bind_metrics(metrics)
     pending: list[tuple[int, int]] = []  # (ticket, pool row), ticket order
     try:
         if snap is not None:  # re-dispatch what was in flight at the kill
@@ -236,13 +250,19 @@ def service_tuner(
                     "pending": np.asarray([r for _, r in pending], np.int64),
                     "engine": engine.state_dict()})
                 prune_snapshots(checkpoint_dir)
+                if ev is not None:
+                    ev.instant("checkpoint", cat="service", track=workload,
+                               done=done)
                 if _kill_after is not None and done >= _kill_after:
                     os.kill(os.getpid(), signal.SIGKILL)
     finally:
         fpool.close()
+        if ev is not None and _ev_owned:
+            ev.close()
 
     front = _front(y)
     rows = np.asarray(evaluated)
+    engine.stats.fold_into(metrics)
     stats = engine.stats.as_dict()
     stats["service"] = {
         "pool_dispatched": fpool.dispatched,
@@ -253,4 +273,4 @@ def service_tuner(
     return TunerResult(
         space=pruned, v=np.asarray(v), evaluated_rows=rows, y=y,
         pareto_rows=rows[front], pareto_y=y[front], history=history,
-        wall_s=time.time() - t0, engine_stats=stats)
+        wall_s=time.monotonic() - t0, engine_stats=stats)

@@ -29,8 +29,9 @@ and tuning jobs come and go:
   every job bit-exactly.
 
 :func:`serve` adds the wire layer: a JSON-lines-over-TCP control plane
-(``submit``/``status``/``pause``/``resume``/``cancel``/``shutdown``) whose
-mutating verbs are applied by the scheduler thread *between* cycles — the
+(``submit``/``status``/``metrics``/``pause``/``resume``/``cancel``/
+``shutdown``) whose mutating verbs are applied by the scheduler thread
+*between* cycles — the
 wire can re-order operator requests, but never a job's trajectory.
 :func:`request` is the matching one-shot client.
 """
@@ -42,10 +43,12 @@ import queue
 import signal
 import socket
 import threading
+import time
 
 import numpy as np
 
 from repro.core.tuner import _pool_fingerprint
+from repro.obs import EventLog, MetricsRegistry
 
 from .flowcache import FlowDiskCache
 from .jobs import (DONE, FAILED, PAUSED, PENDING, RUNNING, SETTLED, Job,
@@ -75,7 +78,10 @@ class TunerServer:
                  checkpoint_dir: str | None = None,
                  checkpoint_every: int = 1, max_active: int | None = None,
                  retries: int = 0, resume: bool = False,
-                 verbose: bool = False, _kill_after: int | None = None):
+                 verbose: bool = False,
+                 metrics: MetricsRegistry | None = None,
+                 events: EventLog | str | None = None,
+                 _kill_after: int | None = None):
         if max_active is not None and max_active < 1:
             raise ValueError(f"max_active must be >= 1, got {max_active}")
         self.space = space
@@ -92,15 +98,58 @@ class TunerServer:
             flow_factory = lambda wl: VLSIFlow(space, wl)
         self._flow_factory = flow_factory
         self._flows: dict = {}
+        # Telemetry (host-side only — see repro.obs). The registry is
+        # shared by the pool, the disk cache, every job and the scheduler;
+        # the wire `metrics` verb ships its snapshot. `events` may be an
+        # EventLog or a path (a path is opened here, closed in close();
+        # reopening an existing log — e.g. after SIGKILL — appends a new
+        # generation).
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        self._ev_owned = isinstance(events, str)
+        self.events = (EventLog(events, run="tuner_server")
+                       if self._ev_owned else events)
         # flow=None: every submit carries its job's flow explicitly.
         self._fpool = FlowPool(None, max_workers=max_workers,
                                executor=executor, cache=self.disk,
-                               retries=retries)
+                               retries=retries, metrics=self.metrics,
+                               events=self.events)
+        if self.disk is not None:
+            self.disk.bind_metrics(self.metrics)
         self._jobs: dict[str, Job] = {}
         self._seq = 0
         self._admit_seq = 0
         self.total_done = 0
         self.cycles = 0
+        self.admissions = 0
+        m = self.metrics
+        self._m_cycles = m.counter("scheduler_cycles_total",
+                                   "scheduler cycles driven")
+        self._m_admissions = m.counter("scheduler_admissions_total",
+                                       "job admissions (prologue paid)")
+        self._m_evals = m.counter("scheduler_evals_total",
+                                  "completions fed back to jobs")
+        self._m_cycle_wall = m.histogram("scheduler_cycle_seconds",
+                                         "run_cycle wall seconds")
+        g_state = m.gauge("server_jobs", "jobs by state")
+        g_bytes = m.gauge("engine_device_bytes",
+                          "device bytes held by live job engines")
+        g_memo = m.gauge("fleet_cache_memo_hits",
+                         "fleet memo (FlowEvalCache) hits across jobs")
+
+        def _collect():
+            by_state: dict[str, int] = {}
+            bts = memo = 0
+            for j in self._jobs.values():
+                by_state[j.status] = by_state.get(j.status, 0) + 1
+                if getattr(j, "_engine", None) is not None:
+                    bts += j._engine.device_bytes()
+                memo += getattr(j, "memo_hits", 0)
+            for s, n in by_state.items():
+                g_state.set(n, state=s)
+            g_bytes.set(bts)
+            g_memo.set(memo)
+
+        m.add_collector(_collect)
         if resume:
             self._load_manifest()
 
@@ -141,6 +190,9 @@ class TunerServer:
                "pool": _pool_fingerprint(self.pool_idx),
                "seq": self._seq, "admit_seq": self._admit_seq,
                "total_done": self.total_done,
+               **({"events": {"path": self.events.path,
+                              "generation": self.events.generation}}
+                  if self.events is not None else {}),
                "jobs": [{"id": j.id, "spec": j.spec.as_dict(),
                          "status": j.status, "submit_seq": j.submit_seq,
                          "admit_seq": j.admit_seq, "done": j.done,
@@ -196,7 +248,8 @@ class TunerServer:
         job = Job(job_id, spec, space=self.space, pool_idx=self.pool_idx,
                   disk=self.disk, checkpoint_dir=self._job_ckpt_dir(job_id),
                   checkpoint_every=self.checkpoint_every,
-                  reference_front=reference_front, verbose=self.verbose)
+                  reference_front=reference_front, verbose=self.verbose,
+                  metrics=self.metrics, events=self.events)
         job._needs_resume = False
         return job
 
@@ -213,6 +266,10 @@ class TunerServer:
         self._seq += 1
         self._jobs[jid] = job
         self._save_manifest()
+        if self.events is not None:
+            self.events.instant("job.submit", cat="server", track=jid,
+                                workload=spec.workload,
+                                priority=spec.priority, T=spec.T)
         if self.verbose:
             print(f"[server] submit {job.label} (priority "
                   f"{spec.priority}, T={spec.T})")
@@ -221,7 +278,7 @@ class TunerServer:
     def pause(self, job_id: str) -> None:
         job = self._get(job_id)
         if job.status == PENDING:
-            job.status = PAUSED  # not yet admitted: nothing to evict
+            job._set_status(PAUSED)  # not yet admitted: nothing to evict
         else:
             job.pause(self._fpool)
         self._save_manifest()
@@ -233,7 +290,7 @@ class TunerServer:
         if job.status not in (PAUSED, FAILED):
             raise ValueError(f"resume: job {job_id} is {job.status}, not "
                              "PAUSED/FAILED")
-        job.status = PENDING
+        job._set_status(PENDING)
         job._needs_resume = (job._snap_mem is not None
                              or job.checkpoint_dir is not None)
         self._save_manifest()
@@ -249,12 +306,21 @@ class TunerServer:
             "jobs": {j.id: j.info()
                      for j in self._ordered(self._jobs.values())},
             "total_done": self.total_done, "cycles": self.cycles,
+            "scheduler": {"cycles": self.cycles,
+                          "admissions": self.admissions},
             "pool": {"dispatched": self._fpool.dispatched,
                      "cache_hits": self._fpool.cache_hits,
                      "inflight_hits": self._fpool.inflight_hits,
                      "retried": self._fpool.retried,
                      "abandoned": self._fpool.abandoned,
-                     "outstanding": self._fpool.outstanding}}
+                     "outstanding": self._fpool.outstanding},
+            "cache": (None if self.disk is None else self.disk.counters())}
+
+    def metrics_snapshot(self) -> dict:
+        """The wire ``metrics`` verb's payload: one JSON-able registry
+        snapshot (collectors run first — see
+        :meth:`repro.obs.MetricsRegistry.snapshot`)."""
+        return self.metrics.snapshot()
 
     # ------------------------------------------------------------ scheduler
     @staticmethod
@@ -274,6 +340,11 @@ class TunerServer:
             try:
                 job.start(self._fpool, self._flow(job.spec.workload),
                           resume=job._needs_resume)
+                self.admissions += 1
+                self._m_admissions.inc()
+                if self.events is not None:
+                    self.events.instant("job.admit", cat="server",
+                                        track=job.id, resume=job._needs_resume)
             except Exception as exc:  # a prologue flow failure
                 job.error = f"{type(exc).__name__}: {exc}"
                 job.status = FAILED
@@ -283,6 +354,10 @@ class TunerServer:
     def run_cycle(self) -> int:
         """Admit what fits, then step every RUNNING job once in priority
         order. Returns the number of completions fed back this cycle."""
+        t_cycle = time.monotonic()
+        if self.events is not None:
+            self.events.begin("cycle", cat="scheduler", track="scheduler",
+                              cycle=self.cycles)
         self._admit()
         total = 0
         for job in self._ordered(j for j in self._jobs.values()
@@ -296,6 +371,20 @@ class TunerServer:
                 self._save_manifest()
                 os.kill(os.getpid(), signal.SIGKILL)
         self.cycles += 1
+        self._m_cycles.inc()
+        if total:
+            self._m_evals.inc(total)
+        self._m_cycle_wall.observe(time.monotonic() - t_cycle)
+        if self.events is not None:
+            self.events.end("cycle", cat="scheduler", track="scheduler",
+                            done=total)
+            # One cumulative-counter record per cycle: the SIGKILL-resume
+            # test reads these back and asserts counters never regress
+            # within a generation (and that the generation increments).
+            self.events.instant("counters", cat="scheduler",
+                                track="scheduler", cycles=self.cycles,
+                                total_done=self.total_done,
+                                dispatched=self._fpool.dispatched)
         if total or any(j.status == PENDING for j in self._jobs.values()):
             self._save_manifest()
         return total
@@ -321,6 +410,8 @@ class TunerServer:
     def close(self) -> None:
         self._save_manifest()
         self._fpool.close()
+        if self.events is not None and self._ev_owned:
+            self.events.close()
 
     def __enter__(self):
         return self
@@ -376,10 +467,11 @@ def serve(server: TunerServer, host: str = "127.0.0.1", port: int = 0, *,
     """Run the scheduler loop with a JSON-lines TCP control plane.
 
     One request per connection: a single JSON object line with a ``verb``
-    field (``submit``/``status``/``pause``/``resume``/``cancel``/
-    ``shutdown``), one JSON reply line back. ``status`` is answered
-    directly by the handler thread (read-only — it must not wait out a
-    long flow evaluation); every mutating verb is queued and applied by
+    field (``submit``/``status``/``metrics``/``pause``/``resume``/
+    ``cancel``/``shutdown``), one JSON reply line back. ``status`` and
+    ``metrics`` are answered directly by the handler thread (read-only —
+    a scrape must not wait out a long flow evaluation); every mutating
+    verb is queued and applied by
     the scheduler between cycles, so remote requests can never cut a job's
     cycle in half. ``port=0`` picks a free port; ``ready_cb(port)`` fires
     once the socket is listening. ``drain_exit`` returns once every
@@ -403,10 +495,16 @@ def serve(server: TunerServer, host: str = "127.0.0.1", port: int = 0, *,
                 reply = {"ok": False,
                          "error": f"bad request: {exc}"}
             else:
-                if verb == "status":
+                if verb in ("status", "metrics"):
+                    # read-only: answered by the handler thread directly —
+                    # a scrape must not wait out a long flow evaluation.
                     try:
-                        reply = {"ok": True,
-                                 "status": server.status(req.get("job"))}
+                        if verb == "status":
+                            reply = {"ok": True,
+                                     "status": server.status(req.get("job"))}
+                        else:
+                            reply = {"ok": True,
+                                     "metrics": server.metrics_snapshot()}
                     except Exception as exc:
                         reply = {"ok": False,
                                  "error": f"{type(exc).__name__}: {exc}"}

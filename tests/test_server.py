@@ -498,7 +498,8 @@ class _StubJob:
 
     def __init__(self, job_id, spec, *, space=None, pool_idx=None,
                  disk=None, checkpoint_dir=None, checkpoint_every=1,
-                 reference_front=None, verbose=False):
+                 reference_front=None, verbose=False, metrics=None,
+                 events=None):
         self.id, self.spec = str(job_id), spec
         self.checkpoint_dir = checkpoint_dir
         self.status, self.error = "PENDING", None
@@ -509,6 +510,9 @@ class _StubJob:
         self._pending: list = []
 
     label = property(lambda self: f"{self.id}:{self.spec.workload}")
+
+    def _set_status(self, new):
+        self.status = new
 
     def start(self, fpool, flow, *, resume=False):
         self.status = "RUNNING"

@@ -19,8 +19,10 @@ cache-gc verb is exercised on the populated flow cache.
 ``soc-service serve --drain-exit`` run (shared pool + flow cache),
 SIGKILLed after an early checkpoint and resumed with ``--resume`` — every
 job must finish with the exact trajectory of the uninterrupted server —
-plus one wire round-trip (submit/status/shutdown) against a live serve
-process.
+plus one wire round-trip (submit/status/metrics/shutdown) against a live
+serve process run with ``--events``: the ``metrics`` verb is scraped
+mid-run (JSON and ``--prom``), and ``tools/trace_report.py`` must render
+the resulting event log into a valid non-empty Chrome trace.
 
 Run from the repo root (a scratch directory is created and removed)::
 
@@ -156,10 +158,12 @@ def main_server() -> int:
 
         print("[smoke:server] wire round-trip against a live server ...")
         port_file = os.path.join(td, "port")
+        events = os.path.join(td, "events.jsonl")
         proc = subprocess.Popen(
             [sys.executable, "-m", "repro.service.cli", "serve",
              "--n-pool", "96", "--pool-seed", "7", "--executor", "thread",
-             "--workers", "2", "--port-file", port_file, "--quiet"],
+             "--workers", "2", "--port-file", port_file,
+             "--events", events, "--quiet"],
             env=env, cwd=ROOT)
         try:
             import time
@@ -172,6 +176,11 @@ def main_server() -> int:
                            "resnet50", "--T", "2", "--n", "10", "--b", "8",
                            "--gp-steps", "15"], env, capture=True)
             jid = json.loads(sub.stdout)["job"]
+            # scrape the metrics verb MID-RUN: the registry must answer
+            # while the scheduler is live
+            met = run_cli(["metrics", "--port", port], env, capture=True)
+            snap = json.loads(met.stdout)["metrics"]
+            assert set(snap) == {"counters", "gauges", "histograms"}, snap
             for _ in range(600):
                 stat = run_cli(["status", "--port", port, "--job", jid],
                                env, capture=True)
@@ -180,12 +189,30 @@ def main_server() -> int:
                 time.sleep(0.5)
             else:
                 raise AssertionError("wire job never completed")
+            prom = run_cli(["metrics", "--port", port, "--prom"], env,
+                           capture=True)
+            assert "# TYPE pool_dispatched_total counter" in prom.stdout, \
+                prom.stdout
+            assert "job_transitions_total" in prom.stdout, prom.stdout
             run_cli(["shutdown", "--port", port], env)
             assert proc.wait(timeout=60) == 0, proc.returncode
-            print(f"[smoke:server] wire job {jid} DONE, clean shutdown")
+            print(f"[smoke:server] wire job {jid} DONE, metrics scraped, "
+                  "clean shutdown")
         finally:
             if proc.poll() is None:
                 proc.kill()
+
+        print("[smoke:server] trace_report over the event log ...")
+        trace_json = os.path.join(td, "trace.json")
+        rep = subprocess.run(
+            [sys.executable, os.path.join(ROOT, "tools", "trace_report.py"),
+             events, "--chrome", trace_json, "--quiet"],
+            check=True, env=env, cwd=ROOT, capture_output=True, text=True)
+        trace = json.load(open(trace_json))
+        assert trace["traceEvents"], "empty Chrome trace"
+        assert {e["ph"] for e in trace["traceEvents"]} <= \
+            {"X", "i", "b", "e", "M"}, "invalid trace phases"
+        print(f"[smoke:server] {rep.stdout.strip()}")
     print("[smoke:server] PASS")
     return 0
 

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Render a telemetry event log into timeline reports.
+
+The service drivers (``soc-service run/fleet/serve --events out.jsonl``)
+append structured span/instant records to a JSON-lines event log (see
+``repro.obs.events``). This tool turns one such log into:
+
+- a per-generation, per-track text summary (default): how many records
+  each run generation wrote, and per timeline track (job ids, "pool",
+  "scheduler", scenario labels) the span counts/total walls and instant
+  counts;
+- ``--chrome out.json``: Chrome ``trace_event`` JSON — load it in
+  ``chrome://tracing`` or https://ui.perfetto.dev to see every scheduler
+  cycle, job step and in-flight flow evaluation as bars on a timeline
+  (each SIGKILL-resume generation is its own process group);
+- ``--json``: the summary as machine-readable JSON (CI asserts on this).
+
+Usage::
+
+    python tools/trace_report.py runs/server/events.jsonl
+    python tools/trace_report.py events.jsonl --chrome trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import build_chrome_trace, read_events, summarize_events
+
+
+def build_arg_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("events", help="event log (JSON lines) to render")
+    p.add_argument("--chrome", default=None, metavar="OUT_JSON",
+                   help="write Chrome trace_event JSON here "
+                        "(chrome://tracing / Perfetto)")
+    p.add_argument("--json", action="store_true",
+                   help="print the summary as JSON instead of text")
+    p.add_argument("--quiet", action="store_true",
+                   help="suppress the text summary")
+    return p
+
+
+def print_summary(summary: dict) -> None:
+    for gen, g in summary["generations"].items():
+        run = g["run"] or "?"
+        print(f"generation {gen}: run={run} records={g['records']} "
+              f"duration={g['duration_s']:.3f}s")
+    for track in sorted(summary["tracks"]):
+        t = summary["tracks"][track]
+        print(f"track {track}:")
+        for name in sorted(t["spans"]):
+            sp = t["spans"][name]
+            print(f"  span    {name:<16s} x{sp['count']:<5d} "
+                  f"total {sp['total_s']:.3f}s")
+        for name in sorted(t["instants"]):
+            print(f"  instant {name:<16s} x{t['instants'][name]}")
+
+
+def main(argv=None) -> int:
+    a = build_arg_parser().parse_args(argv)
+    records = read_events(a.events)
+    if not records:
+        print(f"trace_report: no records in {a.events}", file=sys.stderr)
+        return 1
+    summary = summarize_events(records)
+    if a.json:
+        print(json.dumps(summary, indent=2))
+    elif not a.quiet:
+        print_summary(summary)
+    if a.chrome:
+        trace = build_chrome_trace(records)
+        d = os.path.dirname(os.path.abspath(a.chrome))
+        os.makedirs(d, exist_ok=True)
+        with open(a.chrome, "w") as f:
+            json.dump(trace, f)
+        print(f"trace_report: {len(trace['traceEvents'])} trace events "
+              f"-> {a.chrome}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
