@@ -13,6 +13,8 @@
 - ``fleet``       batched multi-(workload × seed × weighting) exploration,
                   optionally shard_map-sharded over a device mesh
 - ``pareto``      dominance / Pareto front / ADRS (Eq. 12) / hypervolume
+- ``propose``     between-round candidate proposal (perturbation proposer
+                  over the engines' mutable pools — escape the fixed pool)
 - ``baselines``   the six comparison methods of §IV
 
 Explore one scenario (Algorithm 3)::
@@ -50,6 +52,9 @@ from .acquisition import (imoo_scores, imoo_scores_batch,
                           mes_information_gain, frontier_maxima)
 from .engine import BOEngine, BatchedBOEngine, EngineStats
 from .pareto import adrs, dominance_counts, hypervolume, pareto_front, pareto_mask
+from .propose import (ProposerConfig, ProposerStats, ProposalOutcome,
+                      propose_and_replace, propose_candidates,
+                      pareto_parents)
 from .tuner import TunerResult, soc_tuner, frontier_subset_rows
 from .fleet import FleetScenario, FleetResult, FlowEvalCache, fleet_tuner
 from .baselines import BASELINES, run_baseline
@@ -64,6 +69,8 @@ __all__ = [
     "frontier_maxima",
     "BOEngine", "BatchedBOEngine", "EngineStats",
     "adrs", "dominance_counts", "hypervolume", "pareto_front", "pareto_mask",
+    "ProposerConfig", "ProposerStats", "ProposalOutcome",
+    "propose_and_replace", "propose_candidates", "pareto_parents",
     "TunerResult", "soc_tuner", "frontier_subset_rows",
     "FleetScenario", "FleetResult", "FlowEvalCache", "fleet_tuner",
     "BASELINES", "run_baseline",

@@ -129,6 +129,16 @@ class EngineStats:
     fantasy_steps: int = 0   # rank-1 fantasy appends (q-batch / pending)
     frontier_resamples: int = 0  # O(q³) joint frontier draws (1/refill)
     last_drift: float = 0.0  # max |params − params_ref| at the last round
+    # per-scenario factorization decisions (batched engine): in a mixed
+    # round only the drifting scenarios refactor, the rest block-update
+    scenario_refactors: int = 0
+    scenario_block_updates: int = 0
+    mixed_rounds: int = 0    # rounds where the fleet split ref/update
+    # mutable-pool bookkeeping: columns appended/replaced and the V chunks
+    # recomputed for them (never a full refactor)
+    pool_appends: int = 0
+    pool_replacements: int = 0
+    v_chunk_refreshes: int = 0
     #: cumulative per-stage wall seconds of profiled rounds (only populated
     #: by ``BOEngine(profile_stages=True)``): keys "fit", "factor",
     #: "v_update", "frontier", "moments", "score", "argmax" plus
@@ -160,7 +170,10 @@ class EngineStats:
         ``stage_wall_s`` breakdown lands as
         ``engine_stage_seconds_total{stage=...}``."""
         for k in ("rounds", "refactors", "block_updates", "dispatches",
-                  "fantasy_steps", "frontier_resamples"):
+                  "fantasy_steps", "frontier_resamples",
+                  "scenario_refactors", "scenario_block_updates",
+                  "mixed_rounds", "pool_appends", "pool_replacements",
+                  "v_chunk_refreshes"):
             v = float(getattr(self, k))
             if v:
                 registry.counter(f"{prefix}_{k}_total",
@@ -768,6 +781,42 @@ _update_select_batch = jax.jit(_update_select_batch_impl,
                                donate_argnames=("L", "V"))
 
 
+# ------------------------------------------------------------ pool mutation
+def _v_chunks_fresh_impl(params_ref: GPParams, L, x, pcs):
+    """Fresh V for a stack of pool chunks ``pcs`` [k, C, d] → [k, m, P, C]
+    under the current factorization — the dirty-chunk path of a pool edit.
+    Exactly ``_v_chunk_refactor`` per chunk, so an edited chunk's V is
+    bitwise what a full refactor under the same ``params_ref`` would put
+    there."""
+    return jax.lax.map(lambda pc: _v_chunk_refactor(params_ref, L, x, pc),
+                       pcs)
+
+
+_v_chunks_fresh = jax.jit(_v_chunks_fresh_impl)
+_v_chunks_fresh_batch = jax.jit(jax.vmap(_v_chunks_fresh_impl))
+
+
+def _pool_scores_impl(params_ref: GPParams, L, V, y_pad, mask, ystar,
+                      evalm_c, weights):
+    """[nc, C] acquisition scores of every pool column under a frozen round
+    state (cached V, whitened targets from the last padded batch, the
+    round's frozen y*). Evaluated/pad columns score −inf."""
+    yn, y_mean, y_std = _standardize(y_pad, mask)
+    beta = _train_beta(L, yn)
+
+    def step(_, inp):
+        Vc, em = inp
+        return None, _score_chunk(params_ref, beta, Vc, y_mean, y_std,
+                                  ystar, em, weights)
+
+    _, scores = jax.lax.scan(step, None, (V, evalm_c))
+    return scores
+
+
+_pool_scores_seq = jax.jit(_pool_scores_impl)
+_pool_scores_batch = jax.jit(jax.vmap(_pool_scores_impl))
+
+
 class _EngineBase:
     """Shared knob parsing + defaulting for the sequential and batched
     engines — one place for the warm-step formula and flag semantics, so the
@@ -825,6 +874,14 @@ class _EngineBase:
         conventions can never diverge."""
         n = self.pool.shape[-2]
         self._C = self._resolve_chunk(pool_chunk, n)
+        self._regrid()
+
+    def _regrid(self) -> None:
+        """(Re)build the chunk grid from ``self.pool`` under the already-
+        resolved chunk size ``self._C``. Pool edits call this directly —
+        the chunk size is part of the engine's identity (and of any live V
+        cache), so appends may add chunks but never re-resolve C."""
+        n = self.pool.shape[-2]
         self._nc = -(-n // self._C)
         self._N_pad = self._nc * self._C
         pad = self._N_pad - n
@@ -848,6 +905,188 @@ class _EngineBase:
             em = jnp.concatenate(
                 [em, jnp.ones(em.shape[:-1] + (pad,), bool)], axis=-1)
         return em.reshape(em.shape[:-1] + (self._nc, self._C))
+
+    # ------------------------------------------------------ pool mutation
+    # The mutable-pool contract (docs/surrogate.md): evaluated rows are the
+    # engine's observation keys — `pool_replace` REFUSES to touch them, so a
+    # row index, once evaluated, refers to the same design forever and the
+    # never-re-evaluate mask / driver-side caches keyed by row stay valid.
+    # Unevaluated columns may be replaced and new columns appended; every
+    # edit stamps fresh stable ids (`candidate_ids`) so external
+    # content-keyed state (proposer dedup, eval memos) can tell an edited
+    # column from the candidate that previously occupied its index.
+
+    def _init_pool_ids(self) -> None:
+        self._ids = np.arange(self.N, dtype=np.int64)
+        self._next_id = int(self.N)
+        self._pool_edited = False
+
+    @property
+    def candidate_ids(self) -> np.ndarray:
+        """Stable per-column ids [N]: assigned at construction, fresh ids on
+        every appended/replaced column, preserved by ``state_dict``."""
+        return self._ids.copy()
+
+    def _check_cols(self, cols, what: str) -> jnp.ndarray:
+        cols = jnp.asarray(cols, jnp.float32)
+        want = self.pool.ndim
+        ok = cols.ndim == want and cols.shape[-1] == self.d and (
+            want == 2 or cols.shape[0] == self.S)
+        if not ok:
+            lead = "[k, d]" if want == 2 else "[S, k, d]"
+            raise ValueError(
+                f"{what}: expected columns shaped {lead} with d={self.d}"
+                + ("" if want == 2 else f", S={self.S}")
+                + f", got {tuple(cols.shape)}")
+        return cols
+
+    def pool_append(self, cols) -> np.ndarray:
+        """Append candidate columns ([k, d], batched [S, k, d]) to the pool;
+        returns their new row indices [k].
+
+        Appends never disturb existing rows, so evaluated-row indices,
+        snapshots and row-keyed caches stay valid. The chunk grid keeps its
+        resolved chunk size C (the pool may gain chunks); with a live
+        incremental factorization only the V chunks whose column content
+        changed — the old partial tail chunk plus the new chunks — are
+        recomputed (``_v_chunk_refactor`` per dirty chunk, O(m·P²·C) each;
+        never a full O(P³) refactor)."""
+        self._check_live()
+        cols = self._check_cols(cols, "pool_append")
+        k = int(cols.shape[-2])
+        if k == 0:
+            return np.empty((0,), np.int64)
+        n_old = self.N
+        self.pool = jnp.concatenate([self.pool, cols], axis=-2)
+        self.N = int(self.pool.shape[-2])
+        self._ids = np.concatenate([
+            self._ids,
+            np.arange(self._next_id, self._next_id + k, dtype=np.int64)])
+        self._next_id += k
+        self._pool_edited = True
+        grow = jnp.zeros(self._eval_mask.shape[:-1] + (k,), bool)
+        self._eval_mask = jnp.concatenate([self._eval_mask, grow], axis=-1)
+        self._regrid()
+        self._refresh_v(list(range(n_old // self._C, self._nc)))
+        self.stats.pool_appends += k
+        return np.arange(n_old, self.N, dtype=np.int64)
+
+    def pool_replace(self, rows, cols) -> None:
+        """Replace the UNEVALUATED pool columns at ``rows`` [k] with new
+        candidates ([k, d], batched [S, k, d] — per-scenario encodings of
+        the same k designs).
+
+        Raises if any target row has been evaluated (in any scenario):
+        evaluated rows are observation keys and must keep their content.
+        Replaced columns get fresh stable ids; with a live factorization
+        only the V chunks covering the edited columns are recomputed."""
+        self._check_live()
+        rows = np.asarray(rows, np.int64).reshape(-1)
+        cols = self._check_cols(cols, "pool_replace")
+        if int(cols.shape[-2]) != len(rows):
+            raise ValueError(f"pool_replace: {len(rows)} rows but "
+                             f"{int(cols.shape[-2])} replacement columns")
+        if len(rows) == 0:
+            return
+        if rows.min() < 0 or rows.max() >= self.N:
+            raise ValueError(f"pool_replace: row indices must be in "
+                             f"[0, {self.N}), got {rows.tolist()}")
+        if len(np.unique(rows)) != len(rows):
+            raise ValueError("pool_replace: duplicate target rows")
+        ev_any = np.asarray(self._eval_mask).reshape(-1, self.N).any(0)
+        bad = rows[ev_any[rows]]
+        if bad.size:
+            raise ValueError(
+                f"pool_replace: rows {bad.tolist()} have been evaluated — "
+                "evaluated rows are observation keys and can never be "
+                "replaced (append instead)")
+        if self.pool.ndim == 2:
+            self.pool = self.pool.at[rows].set(cols)
+        else:
+            self.pool = self.pool.at[:, rows].set(cols)
+        self._ids[rows] = np.arange(self._next_id,
+                                    self._next_id + len(rows),
+                                    dtype=np.int64)
+        self._next_id += len(rows)
+        self._pool_edited = True
+        dirty = {int(r) // self._C for r in rows}
+        if 0 in rows and self._N_pad > self.N:
+            dirty.add(self._nc - 1)  # pad columns are copies of row 0
+        self._regrid()
+        self._refresh_v(sorted(dirty))
+        self.stats.pool_replacements += len(rows)
+
+    def _refresh_v(self, dirty: list) -> None:
+        """Recompute the V-cache chunks in ``dirty`` under the CURRENT
+        factorization (params_ref, L) — the per-column-chunk invalidation
+        that makes pool edits O(dirty·m·P²·C) instead of a refactor. Rows
+        [0, s0) of a refreshed chunk are bitwise what a full refactor under
+        the same params_ref would give (forward substitution row i depends
+        only on rows ≤ i); the trailing rows are recomputed by the next
+        round either way."""
+        if self._state is None or not dirty:
+            return
+        st = self._state
+        V = st.V
+        nc_have = V.shape[-4]
+        if nc_have != self._nc:  # appends added chunks
+            grow = V.shape[:-4] + (self._nc - nc_have,) + V.shape[-3:]
+            V = jnp.concatenate([V, jnp.zeros(grow, V.dtype)], axis=-4)
+        if self._last_batch is None:
+            self._state = st._replace(V=V)
+            return
+        rows_pad, _, mask = self._last_batch
+        didx = jnp.asarray(np.asarray(dirty, np.int64))
+        if self.pool.ndim == 2:
+            pool_flat = self._pool_c.reshape(self._N_pad, self.d)
+            x = (pool_flat[jnp.asarray(rows_pad)]
+                 + 10.0 * jnp.asarray(mask)[:, None])
+            fresh = _v_chunks_fresh(st.params_ref, st.L, x,
+                                    self._pool_c[didx])
+            V = V.at[didx].set(fresh)
+        else:
+            pool_flat = self._pool_c.reshape(self.S, self._N_pad, self.d)
+            x = jax.vmap(lambda pf, rp, mi: pf[rp] + 10.0 * mi[:, None])(
+                pool_flat, jnp.asarray(rows_pad), jnp.asarray(mask))
+            fresh = _v_chunks_fresh_batch(st.params_ref, st.L, x,
+                                          self._pool_c[:, didx])
+            V = V.at[:, didx].set(fresh)
+        self._state = st._replace(V=V)
+        self.stats.v_chunk_refreshes += len(dirty)
+
+    def pool_scores(self) -> np.ndarray:
+        """Acquisition scores of every pool column — [N] (sequential) /
+        [S, N] (batched) — under the LAST round's frozen state: cached V,
+        whitened targets of the last padded batch and the round's frozen
+        y*. Evaluated columns score −inf. The between-round proposer ranks
+        replacement victims with this; it reuses the cached state, so it
+        costs one O(m·P·N) scoring pass and perturbs no trajectory."""
+        self._check_live()
+        if not self.incremental:
+            raise RuntimeError(
+                "pool_scores() requires incremental=True: the exact "
+                "historical path keeps no V cache to score from")
+        if (self._state is None or self._last_ystar is None
+                or self._last_batch is None):
+            raise RuntimeError(
+                "pool_scores() requires a completed round (no frozen "
+                "state yet — call select/select_q first)")
+        st = self._state
+        rows_pad, y_pad, mask = self._last_batch
+        evalm = self._evalm_chunks()
+        if self.pool.ndim == 2:
+            weights = (jnp.ones((self.m,), jnp.float32)
+                       if self.weights is None else self.weights)
+            sc = _pool_scores_seq(st.params_ref, st.L, st.V,
+                                  jnp.asarray(y_pad), jnp.asarray(mask),
+                                  self._last_ystar, evalm, weights)
+            return np.asarray(sc).reshape(-1)[: self.N]
+        weights = (jnp.ones((self.S, self.m), jnp.float32)
+                   if self.weights is None else self.weights)
+        sc = _pool_scores_batch(st.params_ref, st.L, st.V,
+                                jnp.asarray(y_pad), jnp.asarray(mask),
+                                self._last_ystar, evalm, weights)
+        return np.asarray(sc).reshape(self.S, -1)[:, : self.N]
 
     # --------------------------------------------------- lifecycle hooks
     def _check_live(self) -> None:
@@ -907,6 +1146,25 @@ class _EngineBase:
             }
         if self._last_params is not None:
             d["last_params"] = _params_to_np(self._last_params)
+        if self._last_batch is not None:
+            rp, yp, mk = self._last_batch
+            d["last_batch"] = {"rows_pad": np.asarray(rp),
+                               "y_pad": np.asarray(yp),
+                               "mask": np.asarray(mk)}
+        if self._last_ystar is not None:
+            d["last_ystar"] = np.asarray(self._last_ystar)
+        if self._pool_edited:
+            # Only edited engines carry this block, so snapshots of
+            # fixed-pool runs stay byte-compatible with earlier formats.
+            # The pool content is authoritative: resume must rebuild the
+            # engine on the LIVE (edited) pool, and C is pinned because the
+            # grid can no longer be re-derived from the construction pool.
+            d["pool_edit"] = {
+                "pool": np.asarray(self.pool),
+                "ids": np.asarray(self._ids),
+                "next_id": int(self._next_id),
+                "C": int(self._C),
+            }
         return d
 
     def _load_base_state_dict(self, d: dict) -> None:
@@ -927,6 +1185,24 @@ class _EngineBase:
                 f"snapshot pool shape {d.get('pool_shape')} does not match "
                 f"this engine's pool {list(self.pool.shape)} — resume must "
                 "use the identical candidate pool")
+        pe = d.get("pool_edit")
+        if pe is not None:
+            if not np.array_equal(np.asarray(pe["pool"], np.float32),
+                                  np.asarray(self.pool)):
+                raise ValueError(
+                    "snapshot was taken after pool edits and its pool "
+                    "content does not match this engine's pool — rebuild "
+                    "the engine on the live (edited) pool the driver "
+                    "checkpointed alongside this snapshot")
+            self._ids = np.asarray(pe["ids"], np.int64).copy()
+            self._next_id = int(pe["next_id"])
+            self._pool_edited = True
+            if int(pe["C"]) != self._C:
+                # the snapshot's chunk size was resolved against the
+                # original pool; re-grid so the V validation below (and
+                # every later round) uses the stored grid
+                self._C = int(pe["C"])
+                self._regrid()
         self._P = int(d["P"])
         self._n_at_last_select = int(d["n_at_last_select"])
         self.stats = EngineStats.from_dict(d["stats"])
@@ -953,6 +1229,16 @@ class _EngineBase:
             self._state = None
         self._last_params = (_params_from_np(d["last_params"])
                              if "last_params" in d else None)
+        # Frozen state of the last completed round: pool_scores() (the
+        # between-round proposer's victim ranking) must work right after a
+        # resume, BEFORE this process has run a select of its own.
+        lb = d.get("last_batch")
+        self._last_batch = (None if lb is None else
+                            (np.asarray(lb["rows_pad"]),
+                             np.asarray(lb["y_pad"]),
+                             np.asarray(lb["mask"])))
+        self._last_ystar = (None if d.get("last_ystar") is None
+                            else jnp.asarray(d["last_ystar"]))
 
 
 # ============================================================== sequential
@@ -1009,6 +1295,7 @@ class BOEngine(_EngineBase):
 
         self._rows: list[int] = []
         self._y: np.ndarray | None = None       # [k, m] raw minimized metrics
+        self._init_pool_ids()
         self._eval_mask = jnp.zeros((self.N,), bool)
         self._state: EngineState | None = None
         self._last_params: GPParams | None = None   # exact-path warm start
@@ -1331,11 +1618,6 @@ class BOEngine(_EngineBase):
         d = self._base_state_dict()
         d["rows"] = np.asarray(self._rows, np.int64)
         d["y"] = None if self._y is None else np.asarray(self._y)
-        if self._last_batch is not None:
-            rp, yp, mk = self._last_batch
-            d["last_batch"] = {"rows_pad": np.asarray(rp),
-                               "y_pad": np.asarray(yp),
-                               "mask": np.asarray(mk)}
         return d
 
     def load_state_dict(self, d: dict) -> None:
@@ -1348,21 +1630,20 @@ class BOEngine(_EngineBase):
         if self._rows:
             self._eval_mask = self._eval_mask.at[
                 np.asarray(self._rows)].set(True)
-        lb = d.get("last_batch")
-        self._last_batch = (None if lb is None else
-                            (np.asarray(lb["rows_pad"]),
-                             np.asarray(lb["y_pad"]),
-                             np.asarray(lb["mask"])))
 
 
 # ================================================================= batched
 class BatchedBOEngine(_EngineBase):
     """:class:`BOEngine` with a leading scenario axis [S] — the fleet's
     backend. One vmapped program covers every scenario's round; the
-    refactor-vs-update decision is taken fleet-wide (refactor when ANY
-    scenario's drift exceeds ``drift_tol`` or the shared padded size grows),
-    so the incremental path costs two dispatches per round (fit+drift, then
-    update-or-refactor+select) instead of one.
+    refactor-vs-update decision is PER SCENARIO (a fresh/grown padded size
+    still refactors the whole fleet, but drift only refactors the scenarios
+    that exceed ``drift_tol`` — a mixed fleet runs one gathered dispatch
+    per group and scatters back, so one drifting scenario no longer costs
+    every scenario its O(P³) factorization). The incremental path costs two
+    dispatches per round (fit+drift, then update-or-refactor+select; three
+    in a mixed round) instead of one. Under a ``mesh`` the decision stays
+    fleet-wide: gathered sub-fleets would break the even device split.
 
     ``pool_chunk`` streams the pool axis exactly as in :class:`BOEngine`
     (every scenario shares the chunk grid). ``mesh`` shards the scenario
@@ -1414,6 +1695,7 @@ class BatchedBOEngine(_EngineBase):
 
         self._rows: list[list[int]] = [[] for _ in range(self.S)]
         self._ys: list[np.ndarray | None] = [None] * self.S
+        self._init_pool_ids()
         self._eval_mask = jnp.zeros((self.S, self.N), bool)
         self._state: EngineState | None = None   # leading [S] axis on leaves
         self._last_params = None                 # exact-path warm start
@@ -1669,9 +1951,23 @@ class BatchedBOEngine(_EngineBase):
         max_drift = float(jnp.max(drift))
         s0 = 0 if (first or grew) else \
             (self._n_at_last_select // self.bucket) * self.bucket
-        do_ref = first or grew or s0 <= 0 or max_drift > self.drift_tol
         fused = resolve_round_backend("auto", self.N) == "pallas"
-        if do_ref:
+        # Per-scenario refactor decisions: a fresh/grown state (or nothing
+        # reusable, s0 <= 0) refactors the whole fleet; otherwise ONLY the
+        # scenarios whose drift exceeds the tolerance refactor, the rest
+        # block-update. An all-or-nothing fleet takes the identical single
+        # dispatch as before (the golden-pinned path); a mixed fleet runs
+        # one gathered dispatch per group and scatters the results back.
+        # Under a mesh the fleet-wide decision is kept: gathered sub-fleets
+        # would break the scenario axis's even device split.
+        if first or grew or s0 <= 0:
+            ref_idx = np.arange(self.S)
+        else:
+            ref_idx = np.where(np.asarray(drift) > self.drift_tol)[0]
+            if self.mesh is not None and ref_idx.size:
+                ref_idx = np.arange(self.S)
+        upd_idx = np.setdiff1d(np.arange(self.S), ref_idx)
+        if upd_idx.size == 0:
             L, V, picks, ystar = self._dispatch(
                 "refactor_select", _refactor_select_batch_impl,
                 _refactor_select_batch,
@@ -1681,7 +1977,7 @@ class BatchedBOEngine(_EngineBase):
                 jnp.asarray(keys), weights)
             params_ref = params
             self.stats.refactors += 1
-        else:
+        elif ref_idx.size == 0:
             L, V, picks, ystar = self._dispatch(
                 "update_select", _update_select_batch_impl,
                 _update_select_batch,
@@ -1693,6 +1989,15 @@ class BatchedBOEngine(_EngineBase):
                 weights)
             params_ref = state.params_ref
             self.stats.block_updates += 1
+        else:
+            L, V, picks, ystar, params_ref = self._mixed_round(
+                state, params, x, jnp.asarray(mask), yn, y_mean, y_std,
+                jnp.asarray(sub), jnp.asarray(keys), weights, ref_idx,
+                upd_idx, s0=s0, do_select=do_select, fused=fused)
+            self.stats.mixed_rounds += 1
+            self.stats.dispatches += 1  # the group split costs one extra
+        self.stats.scenario_refactors += int(ref_idx.size)
+        self.stats.scenario_block_updates += int(upd_idx.size)
 
         self._state = EngineState(params, params_ref, L, V)
         self._P = P
@@ -1704,6 +2009,41 @@ class BatchedBOEngine(_EngineBase):
         self.stats.frontier_resamples += 1
         self.stats.last_drift = max_drift
         return np.asarray(picks)
+
+    def _mixed_round(self, state, params, x, mask, yn, y_mean, y_std, sub,
+                     keys, weights, ref_idx, upd_idx, *, s0: int,
+                     do_select: bool, fused: bool):
+        """Phase 2 of a mixed-drift round: refactor the drifting scenario
+        group, block-update the rest, scatter L/V/picks/y* back into fleet
+        order. Each group runs the SAME vmapped program as a homogeneous
+        fleet, just over a gathered sub-fleet (the donated L/V are gathered
+        copies, so the live state survives an interrupt). ``params_ref``
+        mixes per scenario: refactoring scenarios adopt their fresh fit,
+        the others keep their reference snapshot."""
+        ri, ui = jnp.asarray(ref_idx), jnp.asarray(upd_idx)
+        evalm = self._evalm_chunks()
+        take = lambda tree, i: jax.tree.map(lambda a: a[i], tree)
+        L_r, V_r, picks_r, ystar_r = _refactor_select_batch(
+            take(params, ri), x[ri], mask[ri], self._pool_c[ri],
+            self._base[ri], yn[ri], y_mean[ri], y_std[ri], sub[ri],
+            evalm[ri], keys[ri], weights[ri],
+            s=self.s_frontiers, select=do_select, fused=fused)
+        L_u, V_u, picks_u, ystar_u = _update_select_batch(
+            take(state.params_ref, ui), state.L[ui], state.V[ui], x[ui],
+            mask[ui], self._pool_c[ui], self._base[ui], yn[ui], y_mean[ui],
+            y_std[ui], sub[ui], evalm[ui], keys[ui], weights[ui],
+            s=self.s_frontiers, s0=s0, select=do_select, fused=fused)
+        L = state.L.at[ri].set(L_r).at[ui].set(L_u)
+        V = state.V.at[ri].set(V_r).at[ui].set(V_u)
+        ystar = jnp.zeros((self.S,) + ystar_r.shape[1:], ystar_r.dtype)
+        ystar = ystar.at[ri].set(ystar_r).at[ui].set(ystar_u)
+        picks = np.empty((self.S,), np.int64)
+        picks[ref_idx] = np.asarray(picks_r)
+        picks[upd_idx] = np.asarray(picks_u)
+        params_ref = jax.tree.map(
+            lambda new, old: old.at[ri].set(new[ri]),
+            params, state.params_ref)
+        return L, V, picks, ystar, params_ref
 
     def _alloc_state(self, params0, P: int, fresh: bool) -> EngineState:
         if self._state is not None and not fresh:

@@ -48,7 +48,9 @@ import numpy as np
 from .engine import BatchedBOEngine
 from .icd import icd_from_data
 from .pareto import pareto_mask
-from .sampling import soc_init
+from .propose import (PROPOSER_FOLD, ProposerConfig, ProposerStats,
+                      propose_and_replace)
+from .sampling import soc_init, transform_to_icd
 from .space import DesignSpace
 from .tuner import (TunerResult, frontier_subset_rows, icd_trial_rows,
                     merge_trial_evals)
@@ -124,6 +126,22 @@ class FlowEvalCache:
         self.evaluated = 0
         self.peek_hits = 0
         self.peek_misses = 0
+        self.invalidated = 0
+
+    # ---------------------------------------------------- pool-edit support
+    def invalidate_rows(self, rows) -> None:
+        """Drop in-memory entries for pool rows whose *design* changed (the
+        between-round proposer replaced those columns) — the memo is keyed
+        by row index, so a stale hit would return the old design's metrics.
+        The on-disk cache is content-addressed (keyed by the design index
+        vector itself) and needs no invalidation; ``self.pool_idx`` is a
+        live view of the driver's pool, so post-edit misses hash the new
+        content automatically."""
+        for r in np.asarray(rows).reshape(-1):
+            r = int(r)
+            for store in self._store.values():
+                if store.pop(r, None) is not None:
+                    self.invalidated += 1
 
     # ------------------------------------------------------- external feed
     def peek(self, workload: str, row) -> np.ndarray | None:
@@ -384,6 +402,7 @@ def fleet_tuner(
     checkpoint_dir: str | None = None,
     checkpoint_every: int = 1,
     resume: bool = False,
+    proposer=None,
     verbose: bool = False,
 ) -> FleetResult:
     """Explore every scenario of a fleet over the SAME candidate pool.
@@ -422,10 +441,33 @@ def fleet_tuner(
     engine, per-scenario keys/history) each round and continue a killed run
     bit-exactly — the resumed prologue is rebuilt from the checkpointed
     importance vectors without re-paying any flow evaluation.
+
+    ``proposer`` (None | bool | dict | :class:`ProposerConfig`; default OFF,
+    requires ``incremental=True``, incompatible with ``mesh``) enables the
+    between-round perturbation proposer fleet-wide: parents are the union
+    of every scenario's Pareto front, victims the columns no scenario still
+    values (max-over-scenarios ``pool_scores``). Row-keyed cache entries of
+    replaced columns are invalidated; checkpoints carry the live pool.
     """
     t0 = time.monotonic()
     scenarios = list(scenarios)
     pool_idx = np.asarray(pool_idx)
+    pcfg = ProposerConfig.from_arg(proposer)
+    pstats = ProposerStats()
+    if pcfg.enabled:
+        if not incremental:
+            raise ValueError(
+                "proposer requires incremental=True: victim scoring runs on "
+                "the incremental engine's cached round state (pool_scores)")
+        if mesh is not None:
+            raise ValueError(
+                "proposer is incompatible with mesh sharding: pool edits "
+                "rewrite host-gathered V chunks (run unsharded, or propose "
+                "offline between sharded runs)")
+        # Private copy — the proposer edits it; the cache below aliases the
+        # SAME array so its content-addressed disk keys and flow dispatches
+        # always see the live designs.
+        pool_idx = np.array(pool_idx)
     N = pool_idx.shape[0]
     reference_fronts = reference_fronts or {}
     cache = FlowEvalCache(space, pool_idx, [sc.workload for sc in scenarios],
@@ -445,19 +487,31 @@ def fleet_tuner(
               "scenario_params": [
                   [sc.workload, int(sc.seed), [float(w) for w in sc.weights]]
                   for sc in scenarios]}
+    if pcfg.enabled:
+        # Joins the trajectory guard only when ON — proposer-less
+        # checkpoints written before this knob existed keep resuming.
+        config["proposer"] = pcfg.as_dict()
+    from repro.core.tuner import _pool_fingerprint
+
+    # Fingerprint of the pool AS PASSED — the proposer edits pool_idx, but
+    # a resuming caller passes the original pool, so the guard pins that.
+    pool_fp = _pool_fingerprint(pool_idx)
     snap = None
     if resume and checkpoint_dir:
-        from repro.core.tuner import _pool_fingerprint
         from repro.service.checkpoint import load_latest_validated
 
         snap = load_latest_validated(
-            checkpoint_dir, driver="fleet_tuner",
-            pool=_pool_fingerprint(pool_idx), config=config)
+            checkpoint_dir, driver="fleet_tuner", pool=pool_fp, config=config)
         if snap is not None and \
                 snap["scenarios"] != [sc.label for sc in scenarios]:
             raise ValueError(f"checkpoint in {checkpoint_dir} was taken for "
                              f"scenarios {snap['scenarios']} — resume "
                              "requires the identical fleet")
+        if snap is not None and pcfg.enabled and "pool_live" in snap:
+            # In-place: the cache aliases this array. Evaluated rows are
+            # immutable, so every recorded pick still denotes its design.
+            np.copyto(pool_idx, np.asarray(snap["pool_live"]))
+            pstats = ProposerStats.from_dict(snap["proposer_stats"])
 
     # ---- Alg. 3 lines 1-4 per scenario (shared with the fleet service).
     states = fleet_prologue(space, pool_idx, scenarios, cache, n=n, mu=mu,
@@ -487,13 +541,12 @@ def fleet_tuner(
         engine.load_state_dict(snap["engine"])
 
     def save_checkpoint(round_i: int) -> None:
-        from repro.core.tuner import _pool_fingerprint
         from repro.service.checkpoint import (prune_snapshots, save_snapshot,
                                               snapshot_path)
 
-        save_snapshot(snapshot_path(checkpoint_dir, round_i), {
+        d = {
             "driver": "fleet_tuner", "round": round_i,
-            "pool": _pool_fingerprint(pool_idx), "config": config,
+            "pool": pool_fp, "config": config,
             "scenarios": [sc.label for sc in scenarios],
             "keys": np.stack([np.asarray(st.key) for st in states]),
             "vs": {str(si): np.asarray(st.v)
@@ -503,7 +556,11 @@ def fleet_tuner(
             "ys": {str(si): st.y for si, st in enumerate(states)},
             "histories": {str(si): st.history
                           for si, st in enumerate(states)},
-            "engine": engine.state_dict()})
+            "engine": engine.state_dict()}
+        if pcfg.enabled:
+            d["pool_live"] = np.array(pool_idx)
+            d["proposer_stats"] = pstats.as_dict()
+        save_snapshot(snapshot_path(checkpoint_dir, round_i), d)
         prune_snapshots(checkpoint_dir)
 
     start_round = 0 if snap is None else int(snap["round"])
@@ -530,6 +587,27 @@ def fleet_tuner(
             st.y = np.concatenate([st.y, y_new], axis=0)
             _log_round(st, it + 1, sc.label,
                        reference_fronts.get(sc.workload), verbose)
+        # Between-round proposal (default off), fleet-wide: parents are the
+        # union of every scenario's front, a column survives if ANY scenario
+        # still values it. Keyed off scenario 0's carried key via fold_in —
+        # no scenario's split schedule advances, so proposer-off trajectories
+        # stay byte-identical. Runs before the checkpoint so a killed run
+        # resumes on exactly the pool the next round would have seen.
+        if pcfg.enabled and (it + 1) % pcfg.every == 0:
+            out = propose_and_replace(
+                engine, space,
+                jax.random.fold_in(states[0].key, PROPOSER_FOLD + it),
+                pool_idx, cfg=pcfg,
+                encode_cols=lambda c: jnp.stack([
+                    transform_to_icd(space,
+                                     st.pruned.apply_pins(jnp.asarray(c)),
+                                     st.v)
+                    for st in states]),
+                evaluated=[st.evaluated for st in states],
+                ys=[st.y for st in states], stats=pstats)
+            if out is not None:
+                pool_idx[out.victims] = out.new_idx   # cache aliases this
+                cache.invalidate_rows(out.victims)
         if checkpoint_dir and (it + 1) % checkpoint_every == 0:
             save_checkpoint(it + 1)
 
@@ -539,9 +617,12 @@ def fleet_tuner(
     for st in states:
         rows = np.asarray(st.evaluated)
         front = np.asarray(pareto_mask(jnp.asarray(st.y.astype(np.float64))))
+        stats_d = engine.stats.as_dict()
+        if pcfg.enabled:
+            stats_d["proposer"] = pstats.as_dict()
         results.append(TunerResult(
             space=st.pruned, v=np.asarray(st.v), evaluated_rows=rows, y=st.y,
             pareto_rows=rows[front], pareto_y=st.y[front], history=st.history,
-            wall_s=wall, engine_stats=engine.stats.as_dict()))
+            wall_s=wall, engine_stats=stats_d))
     return FleetResult(scenarios=scenarios, results=results, cache=cache,
                        wall_s=wall)

@@ -24,7 +24,7 @@ import numpy as np
 from .space import DesignSpace
 
 __all__ = ["soc_init", "ted_select", "transform_to_icd", "median_bandwidth",
-           "TED_MAX_POOL"]
+           "TED_MAX_POOL", "TED_CAP_STATS", "fold_ted_stats"]
 
 #: Default TED candidate cap. The greedy TED loop is O(b·N²) time and O(N²)
 #: memory (the deflated kernel matrix), which is fine at the paper's 2500-pool
@@ -33,6 +33,27 @@ __all__ = ["soc_init", "ted_select", "transform_to_icd", "median_bandwidth",
 #: even-stride subsample and maps the selection back; pools at or below the
 #: cap take the historical path bit-for-bit.
 TED_MAX_POOL = 4096
+
+#: Host-side cap accounting (no-silent-caps house rule): every capped
+#: ``ted_select`` call bumps ``capped_calls`` and adds the candidates the
+#: even stride dropped to ``dropped_candidates``. Scrape into a metrics
+#: registry with :func:`fold_ted_stats`; reset by assigning zeros (tests).
+TED_CAP_STATS = {"capped_calls": 0, "dropped_candidates": 0}
+
+
+def fold_ted_stats(registry) -> None:
+    """Fold the (cumulative) TED cap counters into a
+    :class:`repro.obs.MetricsRegistry` (duck-typed). Idempotence is the
+    caller's job — fold once per finished run, like ``EngineStats``."""
+    if TED_CAP_STATS["capped_calls"]:
+        registry.counter(
+            "ted_capped_calls_total",
+            "ted_select calls that ran on the even-stride subsample",
+        ).inc(TED_CAP_STATS["capped_calls"])
+        registry.counter(
+            "ted_dropped_candidates_total",
+            "candidates excluded from TED by the max_pool stride cap",
+        ).inc(TED_CAP_STATS["dropped_candidates"])
 
 
 def transform_to_icd(space: DesignSpace, idx: jnp.ndarray, v: np.ndarray) -> jnp.ndarray:
@@ -112,9 +133,13 @@ def ted_select(x: jnp.ndarray, b: int, mu: float = 0.1,
     """
     N = x.shape[0]
     if max_pool is not None and N > max_pool:
+        dropped = int(N) - int(max_pool)
+        TED_CAP_STATS["capped_calls"] += 1
+        TED_CAP_STATS["dropped_candidates"] += dropped
         warnings.warn(
             f"ted_select: pool of {N} exceeds max_pool={max_pool}; TED init "
-            "runs on an even-stride subsample (selection differs from the "
+            f"runs on an even-stride subsample, dropping {dropped} "
+            "candidates from consideration (selection differs from the "
             "uncapped O(N²) run — pass max_pool=None to opt out)",
             stacklevel=2)
         sel = (np.arange(max_pool, dtype=np.int64) * N) // max_pool

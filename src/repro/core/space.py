@@ -135,6 +135,22 @@ class DesignSpace:
         cols = jnp.arange(self.d)
         return self._norm_table[cols, idx]  # broadcasts over leading dims
 
+    def snap(self, xn: jnp.ndarray) -> jnp.ndarray:
+        """Normalized coordinates [..., d] -> nearest-lattice index vectors
+        [..., d] (int32) — the inverse of :meth:`encode` up to rounding.
+
+        Each feature snaps to the candidate whose normalized value is
+        closest (ties keep the lower index); out-of-range coordinates clamp
+        to the nearest end of the candidate ladder. The between-round
+        proposer perturbs parents in the normalized space and uses this to
+        land back on real design points."""
+        xn = jnp.asarray(xn, jnp.float32)
+        valid = (jnp.arange(self._tmax)[None, :]
+                 < jnp.asarray(self.t)[:, None])            # [d, tmax]
+        dist = jnp.abs(xn[..., None] - self._norm_table)    # [..., d, tmax]
+        dist = jnp.where(valid, dist, jnp.inf)
+        return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
     def values(self, idx: np.ndarray) -> np.ndarray:
         """Index vectors -> raw candidate values (float64), for the SoC model."""
         idx = np.asarray(idx)

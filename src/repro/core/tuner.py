@@ -18,7 +18,9 @@ import numpy as np
 from .engine import BOEngine
 from .icd import icd_from_data
 from .pareto import adrs, pareto_mask
-from .sampling import soc_init
+from .propose import (PROPOSER_FOLD, ProposerConfig, ProposerStats,
+                      propose_and_replace)
+from .sampling import soc_init, transform_to_icd
 from .space import DesignSpace
 
 __all__ = ["TunerResult", "soc_tuner", "frontier_subset_rows",
@@ -193,6 +195,7 @@ def soc_tuner(
     checkpoint_dir: str | None = None,
     checkpoint_every: int = 1,
     resume: bool = False,
+    proposer=None,
     verbose: bool = False,
 ) -> TunerResult:
     """Run SoC-Tuner over ``pool_idx`` [N, d] candidate designs.
@@ -229,11 +232,28 @@ def soc_tuner(
     history) every ``checkpoint_every`` rounds; ``resume=True`` continues a
     killed run from the latest snapshot *bit-exactly*, without re-paying any
     flow evaluation (see ``docs/service.md``).
+
+    ``proposer`` (None | bool | dict | :class:`ProposerConfig`; default OFF,
+    requires ``incremental=True``) enables the between-round perturbation
+    proposer: after each round the lowest-scoring unevaluated pool columns
+    are replaced by novel designs sampled near the current Pareto front
+    (:mod:`repro.core.propose`). The proposer draws its randomness through
+    ``jax.random.fold_in`` off the driver key, so a proposer-off run stays
+    byte-identical to one without the knob; checkpoints additionally carry
+    the live (edited) pool and resume bit-exactly.
     """
     t0 = time.monotonic()
     key = jax.random.PRNGKey(0) if key is None else key
     pool_idx = np.asarray(pool_idx)
     N = pool_idx.shape[0]
+    pcfg = ProposerConfig.from_arg(proposer)
+    pstats = ProposerStats()
+    if pcfg.enabled:
+        if not incremental:
+            raise ValueError(
+                "proposer requires incremental=True: victim scoring runs on "
+                "the incremental engine's cached round state (pool_scores)")
+        pool_idx = np.array(pool_idx)  # private copy — the proposer edits it
     if q < 1:
         raise ValueError(f"q must be >= 1, got {q}")
     if q > 1 and not incremental:
@@ -253,14 +273,20 @@ def soc_tuner(
               "reuse_icd_trials": bool(reuse_icd_trials),
               "weights": (None if weights is None else
                           [float(x) for x in np.asarray(weights).reshape(-1)])}
+    if pcfg.enabled:
+        # Only joins the trajectory guard when ON so proposer-less
+        # checkpoints written before this knob existed keep resuming.
+        config["proposer"] = pcfg.as_dict()
+    # Fingerprint of the pool AS PASSED — the proposer edits pool_idx, but
+    # a resuming caller passes the original pool, so the guard pins that.
+    pool_fp = _pool_fingerprint(pool_idx)
 
     snap = None
     if resume and checkpoint_dir:
         from repro.service.checkpoint import load_latest_validated
 
         snap = load_latest_validated(
-            checkpoint_dir, driver="soc_tuner",
-            pool=_pool_fingerprint(pool_idx), config=config)
+            checkpoint_dir, driver="soc_tuner", pool=pool_fp, config=config)
 
     if snap is None:
         key, v, pruned, pool_icd, evaluated, y = explore_prologue(
@@ -268,6 +294,11 @@ def soc_tuner(
             use_kernels=use_kernels, reuse_icd_trials=reuse_icd_trials)
     else:
         v = np.asarray(snap["v"])
+        if pcfg.enabled and "pool_live" in snap:
+            # Continue on the edited pool; evaluated rows are immutable so
+            # every recorded pick still denotes the design it scored.
+            pool_idx = np.array(snap["pool_live"])
+            pstats = ProposerStats.from_dict(snap["proposer_stats"])
         pruned, pool_icd = _prologue_from_v(space, pool_idx, v, mu=mu, b=b,
                                             v_th=v_th, use_kernels=use_kernels)
         evaluated = [int(r) for r in snap["evaluated"]]
@@ -310,12 +341,16 @@ def soc_tuner(
         from repro.service.checkpoint import (prune_snapshots, save_snapshot,
                                               snapshot_path)
 
-        save_snapshot(snapshot_path(checkpoint_dir, round_i), {
+        d = {
             "driver": "soc_tuner", "round": round_i,
-            "pool": _pool_fingerprint(pool_idx), "config": config,
+            "pool": pool_fp, "config": config,
             "key": np.asarray(key), "v": np.asarray(v),
             "evaluated": np.asarray(evaluated, np.int64), "y": y,
-            "history": history, "engine": engine.state_dict()})
+            "history": history, "engine": engine.state_dict()}
+        if pcfg.enabled:
+            d["pool_live"] = np.asarray(pool_idx)
+            d["proposer_stats"] = pstats.as_dict()
+        save_snapshot(snapshot_path(checkpoint_dir, round_i), d)
         prune_snapshots(checkpoint_dir)
 
     for it in range(start_round, T):
@@ -332,12 +367,31 @@ def soc_tuner(
         y = np.concatenate([y, y_new], axis=0)
         engine.observe(picks, y_new)
         log_round(it + 1)
+        # Between-round proposal (default off): refresh the weakest pool
+        # columns before the next round spends acquisition budget on them.
+        # fold_in keys it off the carried key WITHOUT advancing the split
+        # schedule, and runs before the checkpoint so a killed run resumes
+        # on exactly the pool the next round would have seen. Runs after the
+        # final round too — T may grow across resumes, so the proposal
+        # schedule must not depend on it.
+        if pcfg.enabled and (it + 1) % pcfg.every == 0:
+            out = propose_and_replace(
+                engine, space, jax.random.fold_in(key, PROPOSER_FOLD + it),
+                pool_idx, cfg=pcfg,
+                encode_cols=lambda c: transform_to_icd(
+                    space, pruned.apply_pins(jnp.asarray(c)), v),
+                evaluated=[evaluated], ys=[y], stats=pstats)
+            if out is not None:
+                pool_idx[out.victims] = out.new_idx
         if checkpoint_dir and (it + 1) % checkpoint_every == 0:
             save_checkpoint(it + 1)
 
     front = _front(y)
     rows = np.asarray(evaluated)
+    stats_d = engine.stats.as_dict()
+    if pcfg.enabled:
+        stats_d["proposer"] = pstats.as_dict()
     return TunerResult(
         space=pruned, v=np.asarray(v), evaluated_rows=rows, y=y,
         pareto_rows=rows[front], pareto_y=y[front], history=history,
-        wall_s=time.monotonic() - t0, engine_stats=engine.stats.as_dict())
+        wall_s=time.monotonic() - t0, engine_stats=stats_d)

@@ -60,6 +60,27 @@ __all__ = ["main", "build_parser", "build_fleet_parser",
            "build_cache_gc_parser"]
 
 
+def _add_proposer_flags(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--proposer", action="store_true",
+                   help="enable the between-round perturbation proposer: "
+                        "replace the weakest unevaluated pool columns with "
+                        "designs sampled near the current Pareto front "
+                        "(requires the incremental engine)")
+    p.add_argument("--proposer-every", type=int, default=1,
+                   help="propose after every N completed evaluations")
+    p.add_argument("--proposer-n", type=int, default=4,
+                   help="replacement candidates per proposal step")
+    p.add_argument("--proposer-scale", type=float, default=0.15,
+                   help="perturbation stddev in the normalized design space")
+
+
+def _proposer_arg(a) -> dict | None:
+    if not getattr(a, "proposer", False):
+        return None
+    return {"enabled": True, "every": a.proposer_every,
+            "n_propose": a.proposer_n, "scale": a.proposer_scale}
+
+
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(prog="soc-service", description=__doc__)
     p.add_argument("--workload", default="resnet50")
@@ -114,6 +135,7 @@ def build_parser() -> argparse.ArgumentParser:
                    help="test hook: SIGKILL right after the checkpoint "
                         "covering this many evaluations")
     p.add_argument("--quiet", action="store_true")
+    _add_proposer_flags(p)
     return p
 
 
@@ -167,6 +189,7 @@ def build_fleet_parser() -> argparse.ArgumentParser:
                    help="test hook: SIGKILL right after the checkpoint "
                         "covering this many TOTAL fleet evaluations")
     p.add_argument("--quiet", action="store_true")
+    _add_proposer_flags(p)
     return p
 
 
@@ -261,6 +284,7 @@ def build_client_parser(verb: str) -> argparse.ArgumentParser:
         p.add_argument("--n", type=int, default=30)
         p.add_argument("--b", type=int, default=20)
         p.add_argument("--gp-steps", type=int, default=150)
+        _add_proposer_flags(p)
     return p
 
 
@@ -306,6 +330,7 @@ def main_fleet(argv=None) -> int:
         pool_chunk=pool_chunk, flow_factory=flow_factory,
         cache_dir=a.cache_dir, checkpoint_dir=a.checkpoint_dir,
         checkpoint_every=a.checkpoint_every, resume=a.resume,
+        proposer=_proposer_arg(a),
         verbose=not a.quiet, events=a.events, _kill_after=a.kill_after)
 
     if not a.quiet:
@@ -411,6 +436,9 @@ def main_client(verb: str, argv=None) -> int:
                     "gp_steps": a.gp_steps}
             if a.weights is not None:
                 spec["weights"] = [float(w) for w in a.weights.split(",")]
+            prop = _proposer_arg(a)
+            if prop is not None:
+                spec["proposer"] = prop
         req["spec"] = spec
     reply = request(a.port, req, host=a.host, timeout=a.timeout)
     if verb == "metrics" and getattr(a, "prom", False) and reply.get("ok"):
@@ -481,8 +509,9 @@ def main(argv=None) -> int:
         incremental=not a.no_incremental, bucket=a.bucket,
         pool_chunk=pool_chunk, cache_dir=a.cache_dir,
         checkpoint_dir=a.checkpoint_dir, checkpoint_every=a.checkpoint_every,
-        resume=a.resume, verbose=not a.quiet, events=a.events,
-        profile_stages=a.profile_stages, _kill_after=a.kill_after)
+        resume=a.resume, proposer=_proposer_arg(a), verbose=not a.quiet,
+        events=a.events, profile_stages=a.profile_stages,
+        _kill_after=a.kill_after)
 
     if not a.quiet:
         print(f"[service] {len(res.evaluated_rows)} evaluations, "

@@ -44,6 +44,9 @@ from repro.core.engine import FANTASY_MODES, BatchedBOEngine
 from repro.core.fleet import (FleetResult, FlowEvalCache, _log_round,
                               fleet_prologue)
 from repro.core.pareto import pareto_mask
+from repro.core.propose import (PROPOSER_FOLD, ProposerConfig, ProposerStats,
+                                propose_and_replace)
+from repro.core.sampling import transform_to_icd
 from repro.core.tuner import (TunerResult, _pool_fingerprint,
                               frontier_subset_rows)
 from repro.obs import EventLog, MetricsRegistry
@@ -89,6 +92,7 @@ def fleet_service(
     checkpoint_dir: str | None = None,
     checkpoint_every: int = 1,
     resume: bool = False,
+    proposer=None,
     verbose: bool = False,
     metrics: MetricsRegistry | None = None,
     events: EventLog | str | None = None,
@@ -109,6 +113,14 @@ def fleet_service(
     :func:`repro.core.fleet.fleet_tuner`. ``_kill_after`` is a test hook:
     SIGKILL this process right after the checkpoint covering that many
     TOTAL (fleet-wide) BO evaluations.
+
+    ``proposer`` (None | bool | dict | ``ProposerConfig``; default OFF,
+    requires ``incremental=True``, incompatible with ``mesh``) enables the
+    fleet-wide between-round proposer: after every ``every``-th fleet-wide
+    completion, columns no scenario values (and no scenario has in flight)
+    are replaced by designs sampled near the union of the per-scenario
+    fronts; row-keyed memo entries of replaced columns are invalidated and
+    checkpoints carry the live pool for bit-exact SIGKILL resume.
 
     Telemetry (host-side only, zero trajectory perturbation — see
     ``repro.obs``): ``metrics`` joins an existing registry (one is created
@@ -136,6 +148,22 @@ def fleet_service(
     if fantasy not in FANTASY_MODES:
         raise ValueError(f"fantasy must be one of {FANTASY_MODES}")
     pool_idx = np.asarray(pool_idx)
+    pcfg = ProposerConfig.from_arg(proposer)
+    pstats = ProposerStats()
+    if pcfg.enabled:
+        if not incremental:
+            raise ValueError(
+                "proposer requires incremental=True: victim scoring runs on "
+                "the incremental engine's cached round state (pool_scores)")
+        if mesh is not None:
+            raise ValueError(
+                "proposer is incompatible with mesh sharding: pool edits "
+                "rewrite host-gathered V chunks (run unsharded, or propose "
+                "offline between sharded runs)")
+        # Private copy — the proposer edits it; the evaluation cache and
+        # submit_pick below alias the SAME array, so dispatches and
+        # content-addressed disk keys always see the live designs.
+        pool_idx = np.array(pool_idx)
     N = pool_idx.shape[0]
     reference_fronts = reference_fronts or {}
     if flow_factory is None:
@@ -157,12 +185,18 @@ def fleet_service(
               "scenario_params": [
                   [sc.workload, int(sc.seed), [float(w) for w in sc.weights]]
                   for sc in scenarios]}
+    if pcfg.enabled:
+        # Joins the trajectory guard only when ON — proposer-less
+        # checkpoints written before this knob existed keep resuming.
+        config["proposer"] = pcfg.as_dict()
+    # Fingerprint of the pool AS PASSED — the proposer edits pool_idx, but
+    # a resuming caller passes the original pool, so the guard pins that.
+    pool_fp = _pool_fingerprint(pool_idx)
 
     snap = None
     if resume and checkpoint_dir:
         snap = load_latest_validated(
-            checkpoint_dir, driver="fleet_service",
-            pool=_pool_fingerprint(pool_idx),
+            checkpoint_dir, driver="fleet_service", pool=pool_fp,
             config={k: v for k, v in config.items() if k != "T"})
         if snap is not None and \
                 snap["scenarios"] != [sc.label for sc in scenarios]:
@@ -172,6 +206,11 @@ def fleet_service(
         if snap is not None and verbose:
             print(f"[fleet-svc] resuming at "
                   f"{[int(x) for x in snap['done']]}/{T} evaluations")
+        if snap is not None and pcfg.enabled and "pool_live" in snap:
+            # In-place: the evaluation cache aliases this array. Evaluated
+            # rows are immutable, so every recorded pick keeps its design.
+            np.copyto(pool_idx, np.asarray(snap["pool_live"]))
+            pstats = ProposerStats.from_dict(snap["proposer_stats"])
 
     disk = FlowDiskCache(cache_dir) if cache_dir else None
     # ONE flow instance per workload, shared by the prologue (through the
@@ -235,6 +274,11 @@ def fleet_service(
         return fpool.submit(row, pool_idx[row], workload=wl, flow=flows[wl])
 
     pending: list[list[tuple[int, int]]] = [[] for _ in range(S)]
+    # Proposal cadence marker: highest ``sum(done) // every`` already
+    # proposed for. Checkpointed — a resumed run must not re-propose (or
+    # skip) a cadence slot the killed run already consumed.
+    prop_mark = (0 if snap is None
+                 else int(snap.get("prop_mark", sum(done) // pcfg.every)))
     try:
         if snap is not None:  # re-dispatch what was in flight at the kill
             for si in range(S):
@@ -316,12 +360,39 @@ def fleet_service(
             if ev is not None:
                 ev.instant("cycle", cat="fleet", track="fleet",
                            cycle=cycle, done=sum(done))
+            # Fleet-wide between-cycle proposal (default off): keyed off
+            # scenario 0's carried key + the fleet-wide completion count via
+            # fold_in — no scenario's split schedule advances. A column any
+            # scenario has in flight is never a victim; row-keyed memo
+            # entries of replaced columns are dropped (the disk cache is
+            # content-addressed and needs nothing). Runs before the
+            # checkpoint so a SIGKILL resumes on the edited pool.
+            if pcfg.enabled and any(obs_rows) and \
+                    sum(done) // pcfg.every > prop_mark:
+                out = propose_and_replace(
+                    engine, space,
+                    jax.random.fold_in(states[0].key,
+                                       PROPOSER_FOLD + sum(done)),
+                    pool_idx, cfg=pcfg,
+                    encode_cols=lambda c: jnp.stack([
+                        transform_to_icd(space,
+                                         st.pruned.apply_pins(jnp.asarray(c)),
+                                         st.v)
+                        for st in states]),
+                    evaluated=[st.evaluated for st in states],
+                    ys=[st.y for st in states],
+                    pending=[r for p in pending for _, r in p],
+                    stats=pstats)
+                prop_mark = sum(done) // pcfg.every
+                if out is not None:
+                    pool_idx[out.victims] = out.new_idx  # cache aliases this
+                    cache.invalidate_rows(out.victims)
             if checkpoint_dir and any(obs_rows) and \
                     (cycle % checkpoint_every == 0
                      or all(d >= T for d in done)):
                 save_snapshot(snapshot_path(checkpoint_dir, cycle), {
                     "driver": "fleet_service", "cycle": cycle,
-                    "pool": _pool_fingerprint(pool_idx), "config": config,
+                    "pool": pool_fp, "config": config,
                     "scenarios": [sc.label for sc in scenarios],
                     "done": np.asarray(done, np.int64),
                     "keys": np.stack([np.asarray(st.key) for st in states]),
@@ -336,7 +407,11 @@ def fleet_service(
                         str(si): np.asarray([r for _, r in pending[si]],
                                             np.int64)
                         for si in range(S)},
-                    "engine": engine.state_dict()})
+                    "engine": engine.state_dict(),
+                    **({"pool_live": np.array(pool_idx),
+                        "proposer_stats": pstats.as_dict(),
+                        "prop_mark": int(prop_mark)}
+                       if pcfg.enabled else {})})
                 prune_snapshots(checkpoint_dir)
                 if _kill_after is not None and sum(done) >= _kill_after:
                     os.kill(os.getpid(), signal.SIGKILL)
@@ -355,6 +430,9 @@ def fleet_service(
     wall = time.monotonic() - t0
     engine.stats.fold_into(metrics)
     stats = engine.stats.as_dict()
+    if pcfg.enabled:
+        pstats.fold_into(metrics)
+        stats["proposer"] = pstats.as_dict()
     stats["service"] = {
         "pool_dispatched": fpool.dispatched,
         "pool_cache_hits": fpool.cache_hits,

@@ -43,6 +43,9 @@ from repro.core.engine import FANTASY_MODES, BatchedBOEngine
 from repro.core.fleet import (FleetScenario, FlowEvalCache, _log_round,
                               fleet_prologue)
 from repro.core.pareto import pareto_mask
+from repro.core.propose import (PROPOSER_FOLD, ProposerConfig, ProposerStats,
+                                propose_and_replace)
+from repro.core.sampling import transform_to_icd
 from repro.core.tuner import (TunerResult, _pool_fingerprint,
                               frontier_subset_rows)
 from repro.obs import MetricsRegistry
@@ -101,10 +104,18 @@ class JobSpec:
     drift_tol: float = 1.0
     pool_chunk: int | str | None = None
     bucket: int | None = None
+    #: between-round proposer knobs (``repro.core.propose.ProposerConfig``
+    #: as a wire dict, or None/absent = off — old specs stay valid).
+    proposer: dict | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "weights",
                            tuple(float(w) for w in self.weights))
+        pcfg = ProposerConfig.from_arg(self.proposer)  # validates knobs
+        if pcfg.enabled and not self.incremental:
+            raise ValueError("proposer requires incremental=True (victim "
+                             "scoring runs on the incremental engine's "
+                             "cached round state)")
         if self.T < 1:
             raise ValueError(f"T must be >= 1, got {self.T}")
         if self.q < 1:
@@ -159,7 +170,13 @@ class JobSpec:
                 "drift_tol": float(self.drift_tol), "bucket": self.bucket,
                 "reuse_icd_trials": bool(self.reuse_icd_trials),
                 "scenario_params": [[self.workload, int(self.seed),
-                                     [float(w) for w in self.weights]]]}
+                                     [float(w) for w in self.weights]]],
+                # only joins the guard when ON — older proposer-less
+                # checkpoints keep resuming
+                **({"proposer": ProposerConfig.from_arg(self.proposer)
+                                .as_dict()}
+                   if ProposerConfig.from_arg(self.proposer).enabled
+                   else {})}
 
 
 class Job:
@@ -174,6 +191,17 @@ class Job:
         self.spec = spec
         self.space = space
         self.pool_idx = np.asarray(pool_idx)
+        self._pcfg = ProposerConfig.from_arg(spec.proposer)
+        self._pstats = ProposerStats()
+        self._prop_mark = 0
+        if self._pcfg.enabled:
+            # Private per-job copy — this job's proposer edits it; the
+            # job's evaluation cache aliases the SAME array so dispatches
+            # and disk keys always see the live designs.
+            self.pool_idx = np.array(self.pool_idx)
+        # Fingerprint of the pool AS GIVEN — checkpoints of an edited pool
+        # must still validate against the server's original pool.
+        self._pool_fp = _pool_fingerprint(self.pool_idx)
         self.N = self.pool_idx.shape[0]
         self.disk = disk
         self.checkpoint_dir = checkpoint_dir
@@ -241,9 +269,14 @@ class Job:
             if snap is None and self.checkpoint_dir:
                 snap = load_latest_validated(
                     self.checkpoint_dir, driver=JOB_DRIVER,
-                    pool=_pool_fingerprint(self.pool_idx),
+                    pool=self._pool_fp,
                     config={k: v for k, v in sp.config().items()
                             if k != "T"})
+        if snap is not None and self._pcfg.enabled and "pool_live" in snap:
+            # In-place: the evaluation cache below aliases this array.
+            np.copyto(self.pool_idx, np.asarray(snap["pool_live"]))
+            self._pstats = ProposerStats.from_dict(snap["proposer_stats"])
+            self._prop_mark = int(snap["prop_mark"])
         self._flow = flow
         self._cache = FlowEvalCache(
             self.space, self.pool_idx, [sp.workload], disk=self.disk,
@@ -356,6 +389,25 @@ class Job:
                        events=self.events)
         self._t_cycle = now
         self.cycle += 1
+        # Per-job between-cycle proposal (default off): keyed off the job's
+        # carried key + completion count via fold_in (the split schedule
+        # never advances), so the trajectory stays bitwise-independent of
+        # the other jobs on the server. In-flight rows are never victims.
+        if self._pcfg.enabled and obs_rows and \
+                self.done // self._pcfg.every > self._prop_mark:
+            out = propose_and_replace(
+                self._engine, self.space,
+                jax.random.fold_in(st.key, PROPOSER_FOLD + self.done),
+                self.pool_idx, cfg=self._pcfg,
+                encode_cols=lambda c: jnp.stack([transform_to_icd(
+                    self.space, st.pruned.apply_pins(jnp.asarray(c)),
+                    st.v)]),
+                evaluated=[st.evaluated], ys=[st.y],
+                pending=[r for _, r in pending], stats=self._pstats)
+            self._prop_mark = self.done // self._pcfg.every
+            if out is not None:
+                self.pool_idx[out.victims] = out.new_idx  # cache aliases
+                self._cache.invalidate_rows(out.victims)
         finished = not self._active()
         if self.checkpoint_dir and obs_rows and \
                 (self.cycle % self.checkpoint_every == 0 or finished):
@@ -407,16 +459,21 @@ class Job:
         rows = np.asarray(st.evaluated)
         front = np.asarray(
             pareto_mask(jnp.asarray(st.y.astype(np.float64))))
+        stats_d = self._engine.stats.as_dict()
+        if self._pcfg.enabled:
+            stats_d["proposer"] = self._pstats.as_dict()
         self._result = TunerResult(
             space=st.pruned, v=np.asarray(st.v), evaluated_rows=rows,
             y=st.y, pareto_rows=rows[front], pareto_y=st.y[front],
             history=st.history, wall_s=self.wall_s,
-            engine_stats=self._engine.stats.as_dict())
+            engine_stats=stats_d)
         # Fold the finished engine's counters (incl. any stage_wall_s
         # breakdown) into the registry ONCE, at the terminal transition —
         # pause/resume restores cumulative stats, so folding at eviction
         # would double-count.
         self._engine.stats.fold_into(self.metrics)
+        if self._pcfg.enabled:
+            self._pstats.fold_into(self.metrics)
         self._teardown_engine()
         self._set_status(DONE)
 
@@ -439,9 +496,9 @@ class Job:
     # ----------------------------------------------------------- checkpoint
     def _snapshot_record(self) -> dict:
         st = self._st
-        return {
+        rec = {
             "driver": JOB_DRIVER, "cycle": self.cycle,
-            "pool": _pool_fingerprint(self.pool_idx),
+            "pool": self._pool_fp,
             "config": self.spec.config(),
             "scenarios": [self.spec.scenario.label],
             "done": np.asarray([self.done], np.int64),
@@ -453,6 +510,11 @@ class Job:
             "pending": {"0": np.asarray([r for _, r in self._pending],
                                         np.int64)},
             "engine": self._engine.state_dict()}
+        if self._pcfg.enabled:
+            rec["pool_live"] = np.array(self.pool_idx)
+            rec["proposer_stats"] = self._pstats.as_dict()
+            rec["prop_mark"] = int(self._prop_mark)
+        return rec
 
     def _write_snapshot(self, rec: dict) -> None:
         save_snapshot(snapshot_path(self.checkpoint_dir, self.cycle), rec)

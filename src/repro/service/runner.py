@@ -43,6 +43,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import BOEngine, FANTASY_MODES
+from repro.core.propose import (PROPOSER_FOLD, ProposerConfig, ProposerStats,
+                                propose_and_replace)
+from repro.core.sampling import transform_to_icd
 from repro.core.tuner import (TunerResult, _front, _pool_fingerprint,
                               _prologue_from_v, explore_prologue,
                               frontier_subset_rows)
@@ -91,6 +94,7 @@ def service_tuner(
     checkpoint_dir: str | None = None,
     checkpoint_every: int = 1,
     resume: bool = False,
+    proposer=None,
     verbose: bool = False,
     metrics: MetricsRegistry | None = None,
     events: EventLog | str | None = None,
@@ -110,6 +114,14 @@ def service_tuner(
     jit-cache pad bucket (larger buckets = fewer recompiles on long runs).
     ``_kill_after`` is a test hook: SIGKILL this process right after the
     checkpoint that covers that many BO evaluations (exercises crash-resume).
+
+    ``proposer`` (None | bool | dict | ``ProposerConfig``) enables the
+    between-round perturbation proposer: after every ``every``-th completed
+    evaluation the weakest unevaluated, non-pending pool columns are
+    replaced by designs sampled near the current front
+    (:mod:`repro.core.propose`). Default off — the historical trajectory
+    stays byte-identical; checkpoints carry the live pool so a SIGKILL'd
+    proposer run still resumes bit-exactly.
 
     Telemetry (all host-side, zero trajectory perturbation — see
     ``repro.obs``): ``metrics`` joins an existing registry (one is created
@@ -135,6 +147,14 @@ def service_tuner(
         raise ValueError(f"fantasy must be one of {FANTASY_MODES}")
     key = jax.random.PRNGKey(0) if key is None else key
     pool_idx = np.asarray(pool_idx)
+    pcfg = ProposerConfig.from_arg(proposer)
+    pstats = ProposerStats()
+    if pcfg.enabled:
+        if not incremental:
+            raise ValueError(
+                "proposer requires incremental=True: victim scoring runs on "
+                "the incremental engine's cached round state (pool_scores)")
+        pool_idx = np.array(pool_idx)  # private copy — the proposer edits it
     N = pool_idx.shape[0]
     # Everything that defines the trajectory must survive a resume intact;
     # ``T`` is stored for reference but exempt from the resume guard —
@@ -151,16 +171,27 @@ def service_tuner(
               "reuse_icd_trials": bool(reuse_icd_trials),
               "weights": (None if weights is None else
                           [float(x) for x in np.asarray(weights).reshape(-1)])}
+    if pcfg.enabled:
+        # Joins the trajectory guard only when ON — proposer-less
+        # checkpoints written before this knob existed keep resuming.
+        config["proposer"] = pcfg.as_dict()
+    # Fingerprint of the pool AS PASSED — the proposer edits pool_idx, but
+    # a resuming caller passes the original pool, so the guard pins that.
+    pool_fp = _pool_fingerprint(pool_idx)
 
     snap = None
     if resume and checkpoint_dir:
         snap = load_latest_validated(
-            checkpoint_dir, driver="service_tuner",
-            pool=_pool_fingerprint(pool_idx),
+            checkpoint_dir, driver="service_tuner", pool=pool_fp,
             config={k: v for k, v in config.items() if k != "T"})
         if snap is not None and verbose:
             print(f"[service] resuming at {int(snap['done'])}/{T} "
                   "evaluations")
+        if snap is not None and pcfg.enabled and "pool_live" in snap:
+            # Continue on the edited pool; evaluated rows are immutable so
+            # every recorded pick still denotes the design it scored.
+            pool_idx = np.array(snap["pool_live"])
+            pstats = ProposerStats.from_dict(snap["proposer_stats"])
 
     disk = FlowDiskCache(cache_dir) if cache_dir else None
     # Prologue flow calls go through the disk cache too (a restart re-pays
@@ -214,6 +245,11 @@ def service_tuner(
     if disk is not None:
         disk.bind_metrics(metrics)
     pending: list[tuple[int, int]] = []  # (ticket, pool row), ticket order
+    # Proposal cadence marker: the highest ``done // every`` already
+    # proposed for. Checkpointed — a resumed run must not re-propose (or
+    # skip) a cadence slot the killed run already consumed.
+    prop_mark = (0 if snap is None
+                 else int(snap.get("prop_mark", done // pcfg.every)))
     try:
         if snap is not None:  # re-dispatch what was in flight at the kill
             for r in (int(r) for r in snap["pending"]):
@@ -239,16 +275,38 @@ def service_tuner(
                 pending.remove((t, row))
                 done += 1
                 log_round(done)
+            # Between-evaluation proposal (default off): keyed off the
+            # carried key + completion count via fold_in (the split schedule
+            # never advances), so an ordered run's proposals are worker-
+            # timing independent. In-flight rows are never victims; runs
+            # before the checkpoint so a SIGKILL resumes on the edited pool.
+            if pcfg.enabled and results and done // pcfg.every > prop_mark:
+                out = propose_and_replace(
+                    engine, space,
+                    jax.random.fold_in(key, PROPOSER_FOLD + done),
+                    pool_idx, cfg=pcfg,
+                    encode_cols=lambda c: transform_to_icd(
+                        space, pruned.apply_pins(jnp.asarray(c)), v),
+                    evaluated=[evaluated], ys=[y],
+                    pending=[r for _, r in pending], stats=pstats)
+                prop_mark = done // pcfg.every
+                if out is not None:
+                    pool_idx[out.victims] = out.new_idx
             if checkpoint_dir and results and \
                     (done % checkpoint_every == 0 or done >= T):
-                save_snapshot(snapshot_path(checkpoint_dir, done), {
+                ckpt = {
                     "driver": "service_tuner", "done": done,
-                    "pool": _pool_fingerprint(pool_idx), "config": config,
+                    "pool": pool_fp, "config": config,
                     "key": np.asarray(key), "v": np.asarray(v),
                     "evaluated": np.asarray(evaluated, np.int64), "y": y,
                     "history": history,
                     "pending": np.asarray([r for _, r in pending], np.int64),
-                    "engine": engine.state_dict()})
+                    "engine": engine.state_dict()}
+                if pcfg.enabled:
+                    ckpt["pool_live"] = np.array(pool_idx)
+                    ckpt["proposer_stats"] = pstats.as_dict()
+                    ckpt["prop_mark"] = int(prop_mark)
+                save_snapshot(snapshot_path(checkpoint_dir, done), ckpt)
                 prune_snapshots(checkpoint_dir)
                 if ev is not None:
                     ev.instant("checkpoint", cat="service", track=workload,
@@ -264,6 +322,9 @@ def service_tuner(
     rows = np.asarray(evaluated)
     engine.stats.fold_into(metrics)
     stats = engine.stats.as_dict()
+    if pcfg.enabled:
+        pstats.fold_into(metrics)
+        stats["proposer"] = pstats.as_dict()
     stats["service"] = {
         "pool_dispatched": fpool.dispatched,
         "pool_cache_hits": fpool.cache_hits,

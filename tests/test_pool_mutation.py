@@ -1,0 +1,404 @@
+"""Mutable candidate pools + the between-round proposer (ISSUE 10).
+
+The contract under test (docs/surrogate.md, "mutable pools"):
+- evaluated rows are observation keys: ``pool_replace`` refuses them, so a
+  row index, once evaluated, refers to the same design forever;
+- a COLD pool edit (no live factorization) is bitwise-indistinguishable
+  from having constructed the engine on the edited pool — across chunk
+  sizes, chunk-boundary rows, pad-chunk aliasing (row 0) and both engines;
+- a WARM edit recomputes only the dirty V chunks, and an edited engine's
+  snapshot round-trips through ``state_dict`` bit-exactly (the
+  ``pool_edit`` block pins ids + chunk grid and validates pool content);
+- ``pool_scores`` exposes the last round's frozen acquisition state
+  ([N] / [S, N], −inf on evaluated rows) and works right after
+  ``load_state_dict`` — the proposer ranks victims with it;
+- the proposer is default-OFF and a proposal step that replaces nothing
+  leaves the driver trajectory bitwise identical to ``proposer=None``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import soc_tuner
+from repro.core.engine import BOEngine, BatchedBOEngine
+from repro.core.propose import (ProposerConfig, ProposerStats,
+                                pareto_parents, propose_candidates)
+
+GP = dict(gp_steps=10)  # tiny fits: parity claims are bitwise, not quality
+
+
+def _mkpool(n, d=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+
+def _yfun(pool):
+    """Deterministic 2-objective metrics from (final) pool content."""
+    p = np.asarray(pool, np.float64)
+
+    def f(rows):
+        sub = p[np.asarray(rows, np.int64)]
+        y = np.stack([np.abs(sub).sum(-1), 1.0 + np.cos(sub).sum(-1) ** 2],
+                     axis=-1)
+        return y.astype(np.float32)
+
+    return f
+
+
+def _run_rounds(eng, yf, seed=11, rounds=3, q=2):
+    """Drive observe/select_q rounds; returns the pick trajectory."""
+    batched = isinstance(eng, BatchedBOEngine)
+    key = jax.random.PRNGKey(seed)
+    picks_all = []
+    for t in range(rounds):
+        key, k = jax.random.split(key)
+        if batched:
+            picks = eng.select_q(jax.random.split(k, eng.S), q=q)
+            rows = np.unique(np.asarray(picks).reshape(-1))
+            eng.observe([rows] * eng.S, [yf(rows), 2.0 * yf(rows)])
+        else:
+            picks = eng.select_q(k, q=q)
+            rows = np.asarray(picks).reshape(-1)
+            eng.observe(rows, yf(rows))
+        picks_all.append(np.asarray(picks))
+    return np.concatenate([p.reshape(-1) for p in picks_all])
+
+
+# ------------------------------------------------------------ stable ids
+def test_candidate_ids_construction_append_replace():
+    eng = BOEngine(_mkpool(12), **GP)
+    np.testing.assert_array_equal(eng.candidate_ids, np.arange(12))
+    new_rows = eng.pool_append(np.asarray(_mkpool(3, seed=1)))
+    np.testing.assert_array_equal(new_rows, [12, 13, 14])
+    np.testing.assert_array_equal(eng.candidate_ids, np.arange(15))
+    eng.pool_replace([3, 7], np.asarray(_mkpool(2, seed=2)))
+    ids = eng.candidate_ids
+    assert ids[3] == 15 and ids[7] == 16  # fresh, monotone
+    untouched = np.delete(np.arange(15), [3, 7])
+    np.testing.assert_array_equal(ids[untouched],
+                                  np.delete(np.arange(15), [3, 7]))
+    assert eng.stats.pool_appends == 3
+    assert eng.stats.pool_replacements == 2
+
+
+# ----------------------------------------------- cold-edit bitwise parity
+@pytest.mark.parametrize("chunk", [8, 16, None])
+def test_cold_replace_bitwise_matches_fresh_engine(chunk):
+    """Replacing unevaluated columns on a cold engine ≡ constructing on the
+    edited pool — including row 0 (pad-chunk alias), chunk-boundary rows
+    and the last row."""
+    final = _mkpool(30, seed=3)          # 30 < pad: pad copies row 0
+    victims = np.asarray([0, 7, 8, 29])  # chunk edges for C=8
+    junk = np.asarray(_mkpool(4, seed=4)) + 5.0
+    start = np.asarray(final).copy()
+    start[victims] = junk
+    yf = _yfun(final)
+    init = [2, 5, 17]
+
+    edited = BOEngine(jnp.asarray(start), pool_chunk=chunk, **GP)
+    edited.pool_replace(victims, np.asarray(final)[victims])
+    edited.observe(init, yf(init))
+    fresh = BOEngine(final, pool_chunk=chunk, **GP)
+    fresh.observe(init, yf(init))
+
+    np.testing.assert_array_equal(_run_rounds(edited, yf),
+                                  _run_rounds(fresh, yf))
+    np.testing.assert_array_equal(edited.pool_scores(), fresh.pool_scores())
+
+
+def test_cold_append_bitwise_matches_fresh_engine():
+    full = _mkpool(34, seed=5)  # 24 -> 34 crosses a C=8 chunk boundary
+    yf = _yfun(full)
+    init = [1, 9, 20]
+    grown = BOEngine(full[:24], pool_chunk=8, **GP)
+    rows = grown.pool_append(np.asarray(full[24:]))
+    np.testing.assert_array_equal(rows, np.arange(24, 34))
+    grown.observe(init, yf(init))
+    fresh = BOEngine(full, pool_chunk=8, **GP)
+    fresh.observe(init, yf(init))
+    np.testing.assert_array_equal(_run_rounds(grown, yf),
+                                  _run_rounds(fresh, yf))
+
+
+def test_cold_replace_batched_bitwise():
+    d = 5
+    base = np.asarray(_mkpool(20, seed=6))
+    final = np.stack([base, 0.5 * base])            # [S=2, N, d]
+    victims = np.asarray([0, 10, 19])
+    start = final.copy()
+    start[:, victims] = np.asarray(_mkpool(3, seed=7)) + 4.0
+    yf = _yfun(final[0])
+    init = [3, 12]
+
+    edited = BatchedBOEngine(jnp.asarray(start), pool_chunk=8, **GP)
+    edited.pool_replace(victims, jnp.asarray(final[:, victims]))
+    edited.observe([init, init], [yf(init), 2.0 * yf(init)])
+    fresh = BatchedBOEngine(jnp.asarray(final), pool_chunk=8, **GP)
+    fresh.observe([init, init], [yf(init), 2.0 * yf(init)])
+    np.testing.assert_array_equal(_run_rounds(edited, yf),
+                                  _run_rounds(fresh, yf))
+    np.testing.assert_array_equal(edited.pool_scores(), fresh.pool_scores())
+
+
+# -------------------------------------------------------------- refusals
+def test_pool_replace_validation():
+    eng = BOEngine(_mkpool(16), **GP)
+    yf = _yfun(eng.pool)
+    eng.observe([2, 5], yf([2, 5]))
+    with pytest.raises(ValueError, match="evaluated"):
+        eng.pool_replace([5], np.asarray(_mkpool(1, seed=9)))
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.pool_replace([3, 3], np.asarray(_mkpool(2, seed=9)))
+    with pytest.raises(ValueError, match=r"in \[0, 16\)"):
+        eng.pool_replace([16], np.asarray(_mkpool(1, seed=9)))
+    with pytest.raises(ValueError, match="expected columns"):
+        eng.pool_replace([3], np.asarray(_mkpool(1, d=3, seed=9)))
+    with pytest.raises(ValueError, match="1 rows but 2"):
+        eng.pool_replace([3], np.asarray(_mkpool(2, seed=9)))
+    # refusal is per-scenario-union for a fleet
+    beng = BatchedBOEngine(jnp.stack([_mkpool(16), _mkpool(16, seed=1)]),
+                           **GP)
+    beng.observe([[4], []], [yf([4]), None])
+    with pytest.raises(ValueError, match="evaluated"):
+        beng.pool_replace([4], jnp.stack([_mkpool(1, seed=9)] * 2))
+
+
+# --------------------------------------------- warm edits: dirty V chunks
+def test_warm_replace_refreshes_only_dirty_chunks():
+    pool = _mkpool(30, seed=10)  # C=8 -> 4 chunks, pad in the last
+    eng = BOEngine(pool, pool_chunk=8, **GP)
+    yf = _yfun(pool)
+    eng.observe([1, 4, 22], yf([1, 4, 22]))
+    _run_rounds(eng, yf, rounds=1)
+    before = eng.stats.v_chunk_refreshes
+    # rows 9 and 10 share chunk 1 -> exactly one dirty chunk
+    eng.pool_replace([9, 10], np.asarray(_mkpool(2, seed=11)))
+    assert eng.stats.v_chunk_refreshes == before + 1
+    # row 0 additionally dirties the pad chunk (pads copy row 0)
+    eng.pool_replace([0], np.asarray(_mkpool(1, seed=12)))
+    assert eng.stats.v_chunk_refreshes == before + 3
+    # the engine still rounds after warm edits
+    _run_rounds(eng, yf, rounds=1, seed=13)
+
+
+def test_warm_edit_checkpoint_roundtrip_bitwise():
+    """Snapshot an engine AFTER warm pool edits; a fresh engine on the
+    edited pool restores it bit-exactly and continues identically."""
+    pool = _mkpool(28, seed=14)
+    yf = _yfun(pool)
+    for cls, mk in ((BOEngine, lambda p: p),
+                    (BatchedBOEngine, lambda p: jnp.stack([p, 0.5 * p]))):
+        eng = cls(mk(pool), pool_chunk=8, **GP)
+        init = [2, 6, 19]
+        if cls is BOEngine:
+            eng.observe(init, yf(init))
+        else:
+            eng.observe([init, init], [yf(init), 2.0 * yf(init)])
+        _run_rounds(eng, yf, rounds=1)
+        cols = _mkpool(2, seed=15)
+        eng.pool_replace([3, 11], mk(np.asarray(cols))[..., :2, :]
+                         if cls is BatchedBOEngine else np.asarray(cols))
+        snap = eng.state_dict()
+        twin = cls(eng.pool, pool_chunk=8, **GP)
+        twin.load_state_dict(snap)
+        np.testing.assert_array_equal(twin.candidate_ids, eng.candidate_ids)
+        np.testing.assert_array_equal(twin.pool_scores(), eng.pool_scores())
+        np.testing.assert_array_equal(_run_rounds(eng, yf, seed=16),
+                                      _run_rounds(twin, yf, seed=16))
+
+
+def test_edited_snapshot_refuses_mismatched_pool():
+    pool = _mkpool(16, seed=17)
+    eng = BOEngine(pool, **GP)
+    eng.pool_replace([3], np.asarray(_mkpool(1, seed=18)))
+    snap = eng.state_dict()
+    other = BOEngine(pool, **GP)  # un-edited construction pool
+    with pytest.raises(ValueError, match="pool content does not match"):
+        other.load_state_dict(snap)
+
+
+# ---------------------------------------------------------- pool_scores
+def test_pool_scores_contract():
+    pool = _mkpool(24, seed=19)
+    yf = _yfun(pool)
+    exact = BOEngine(pool, incremental=False, **GP)
+    exact.observe([1, 2], yf([1, 2]))
+    with pytest.raises(RuntimeError, match="incremental"):
+        exact.pool_scores()
+    eng = BOEngine(pool, **GP)
+    eng.observe([1, 2, 9], yf([1, 2, 9]))
+    with pytest.raises(RuntimeError, match="completed round"):
+        eng.pool_scores()
+    _run_rounds(eng, yf, rounds=1)
+    sc = eng.pool_scores()
+    assert sc.shape == (24,)
+    evaluated = np.asarray(sorted(set(eng._rows)))
+    assert np.all(np.isneginf(sc[evaluated]))
+    live = np.delete(sc, evaluated)
+    assert np.all(np.isfinite(live))
+    # works right after load_state_dict, BEFORE any select in this process
+    twin = BOEngine(pool, **GP)
+    twin.load_state_dict(eng.state_dict())
+    np.testing.assert_array_equal(twin.pool_scores(), sc)
+
+
+# ------------------------------------------------------------- proposer
+def test_proposer_config_from_arg():
+    assert not ProposerConfig.from_arg(None).enabled
+    assert ProposerConfig.from_arg(True).enabled
+    assert ProposerConfig.from_arg({"enabled": True, "every": 3}).every == 3
+    cfg = ProposerConfig(enabled=True)
+    assert ProposerConfig.from_arg(cfg) is cfg
+    assert ProposerConfig.from_arg(cfg.as_dict()) == cfg
+    with pytest.raises(ValueError, match="unknown proposer knob"):
+        ProposerConfig.from_arg({"bogus": 1})
+    with pytest.raises(ValueError, match="every"):
+        ProposerConfig.from_arg({"every": 0})
+    with pytest.raises(ValueError, match="scale"):
+        ProposerConfig.from_arg({"scale": -0.1})
+    with pytest.raises(TypeError, match="proposer"):
+        ProposerConfig.from_arg(3.14)
+
+
+def test_pareto_parents_union_dedup():
+    pool_idx = np.arange(24, dtype=np.int64).reshape(8, 3)
+    y0 = np.asarray([[1.0, 4.0], [2.0, 2.0], [4.0, 1.0]])  # all on front
+    y1 = np.asarray([[0.5, 9.0], [9.0, 9.0]])              # row 5 dominated
+    parents = pareto_parents(pool_idx, [[0, 1, 2], [4, 5]], [y0, y1])
+    np.testing.assert_array_equal(parents, pool_idx[[0, 1, 2, 4]])
+    # duplicate design content across scenarios collapses
+    parents = pareto_parents(pool_idx, [[0], [0]], [y0[:1], y0[:1]])
+    assert len(parents) == 1
+    assert len(pareto_parents(pool_idx, [[]], [None])) == 0
+
+
+def test_propose_candidates_novel_and_snapped(space):
+    key = jax.random.PRNGKey(0)
+    pool_idx = np.asarray(space.sample(key, 64))
+    parents = pool_idx[:4]
+    exclude = {np.asarray(r, np.int64).tobytes() for r in pool_idx}
+    cand = propose_candidates(space, jax.random.PRNGKey(1), parents,
+                              n_propose=6, scale=0.3, exclude=exclude)
+    assert 0 < len(cand) <= 6
+    seen = set()
+    for vec in cand:
+        b = np.asarray(vec, np.int64).tobytes()
+        assert b not in exclude    # novel vs the live pool
+        assert b not in seen       # unique among themselves
+        seen.add(b)
+        # snapped onto the lattice: every coordinate is a valid level
+        for j, f in enumerate(space.features):
+            assert 0 <= int(vec[j]) < f.t
+    # nothing to propose from no parents
+    none = propose_candidates(space, key, parents[:0], n_propose=4,
+                              scale=0.3, exclude=set())
+    assert len(none) == 0
+
+
+def test_proposer_stats_roundtrip_and_fold():
+    st = ProposerStats(rounds=3, proposed=7, replaced=5, wall_s=0.25)
+    assert ProposerStats.from_dict(st.as_dict()) == st
+
+    class _Reg:
+        def __init__(self):
+            self.vals = {}
+
+        def counter(self, name, help=""):
+            reg = self
+
+            class _C:
+                def inc(self, v=1):
+                    reg.vals[name] = reg.vals.get(name, 0) + v
+
+            return _C()
+
+    reg = _Reg()
+    st.fold_into(reg)
+    assert reg.vals["pool_proposed_total"] == 7
+    assert reg.vals["pool_replaced_total"] == 5
+    assert reg.vals["proposer_rounds_total"] == 3
+    ProposerStats().fold_into(reg)  # zero stats add nothing
+    assert reg.vals["pool_proposed_total"] == 7
+
+
+# ------------------------------------------------- driver-level parity
+TUNER_KW = dict(T=3, n=10, b=6, gp_steps=25, incremental=True)
+
+
+@pytest.fixture(scope="module")
+def pool96(space):
+    return np.asarray(space.sample(jax.random.PRNGKey(7), 96))
+
+
+def _traj(res):
+    return (np.asarray(res.evaluated_rows), np.asarray(res.y),
+            [{k: v for k, v in h.items() if k != "wall_s"}
+             for h in res.history])
+
+
+def test_soc_tuner_proposer_off_is_bitwise_noop(space, pool96, resnet_flow):
+    base = soc_tuner(space, pool96, resnet_flow,
+                     key=jax.random.PRNGKey(0), **TUNER_KW)
+    off = soc_tuner(space, pool96, resnet_flow, key=jax.random.PRNGKey(0),
+                    proposer={"enabled": False}, **TUNER_KW)
+    for a, b in zip(_traj(base), _traj(off)):
+        assert np.array_equal(a, b) if isinstance(a, np.ndarray) else a == b
+    assert "proposer" not in (off.engine_stats or {})
+
+
+def test_soc_tuner_noop_proposal_keeps_fixed_pool_trajectory(
+        space, pool96, resnet_flow, monkeypatch):
+    """An ENABLED proposer whose every step replaces nothing must leave the
+    trajectory bitwise identical to proposer=None — the proposer draws all
+    randomness via fold_in and never advances the driver's key schedule."""
+    base = soc_tuner(space, pool96, resnet_flow,
+                     key=jax.random.PRNGKey(1), **TUNER_KW)
+    import repro.core.tuner as tuner_mod
+    monkeypatch.setattr(tuner_mod, "propose_and_replace",
+                        lambda *a, **k: None)
+    noop = soc_tuner(space, pool96, resnet_flow, key=jax.random.PRNGKey(1),
+                     proposer={"enabled": True}, **TUNER_KW)
+    for a, b in zip(_traj(base), _traj(noop)):
+        assert np.array_equal(a, b) if isinstance(a, np.ndarray) else a == b
+
+
+def test_soc_tuner_proposer_replaces_and_reports(space, pool96, resnet_flow):
+    pool_copy = pool96.copy()
+    res = soc_tuner(space, pool96, resnet_flow, key=jax.random.PRNGKey(2),
+                    proposer={"enabled": True, "n_propose": 3,
+                              "scale": 0.3}, **TUNER_KW)
+    np.testing.assert_array_equal(pool96, pool_copy)  # caller pool untouched
+    ps = res.engine_stats["proposer"]
+    assert ps["rounds"] == TUNER_KW["T"]
+    assert ps["replaced"] > 0
+    assert res.engine_stats["pool_replacements"] == ps["replaced"]
+
+
+def test_proposer_requires_incremental(space, pool96, resnet_flow):
+    with pytest.raises(ValueError, match="incremental"):
+        soc_tuner(space, pool96, resnet_flow, T=2, n=10, b=6,
+                  incremental=False, proposer={"enabled": True})
+
+
+def test_flow_eval_cache_invalidate_rows(space, pool96):
+    """The row-keyed eval memo drops entries for replaced pool columns —
+    a stale hit would return the OLD design's metrics — and because the
+    cache aliases the driver's live pool array, a re-request after the
+    edit evaluates (and caches) the NEW design's content."""
+    from repro.core.fleet import FlowEvalCache
+    pool = pool96.copy()
+    cache = FlowEvalCache(space, pool, ["resnet50"])
+    y_old = cache.evaluate_many([("resnet50", np.asarray([3]))])[0][0]
+    assert cache.peek("resnet50", 3) is not None
+    new_design = pool96[50]
+    pool[3] = new_design  # in place: cache.pool_idx aliases this array
+    cache.invalidate_rows([3])
+    assert cache.invalidated == 1
+    assert cache.peek("resnet50", 3) is None
+    y_new = cache.evaluate_many([("resnet50", np.asarray([3]))])[0][0]
+    y_ref = cache.evaluate_many([("resnet50", np.asarray([50]))])[0][0]
+    np.testing.assert_array_equal(y_new, y_ref)
+    assert not np.array_equal(y_new, y_old)
+    cache.invalidate_rows([7])  # un-cached rows are a no-op
+    assert cache.invalidated == 1

@@ -196,6 +196,37 @@ def test_ted_cap_subsamples_huge_pools():
     assert TED_MAX_POOL >= 2500  # paper-scale pools must keep the exact path
 
 
+def test_ted_cap_warns_and_counts_dropped():
+    """No-silent-caps regression: a capped ted_select warns with the exact
+    drop count, bumps the host counters, and fold_ted_stats exposes them as
+    registry counters; uncapped calls touch neither."""
+    import warnings
+
+    from repro.core.sampling import TED_CAP_STATS, fold_ted_stats
+    from repro.obs import MetricsRegistry
+
+    TED_CAP_STATS["capped_calls"] = 0
+    TED_CAP_STATS["dropped_candidates"] = 0
+    x = jnp.asarray(_pool(300, d=4, seed=12))
+    with pytest.warns(UserWarning, match=r"dropping 172 candidates"):
+        rows = ted_select(x, b=4, max_pool=128)
+    assert all(0 <= int(r) < 300 for r in rows)
+    assert TED_CAP_STATS == {"capped_calls": 1, "dropped_candidates": 172}
+    with warnings.catch_warnings():  # under the cap: silent, no counting
+        warnings.simplefilter("error")
+        ted_select(x, b=4, max_pool=None)
+    assert TED_CAP_STATS["capped_calls"] == 1
+    reg = MetricsRegistry()
+    fold_ted_stats(reg)
+    assert reg.counter("ted_capped_calls_total").value() == 1
+    assert reg.counter("ted_dropped_candidates_total").value() == 172
+    TED_CAP_STATS["capped_calls"] = 0
+    TED_CAP_STATS["dropped_candidates"] = 0
+    reg2 = MetricsRegistry()
+    fold_ted_stats(reg2)  # zero counters register nothing at all
+    assert "ted_capped_calls_total" not in reg2._instruments
+
+
 def test_pairdist_chunked_bitwise_matches_auto():
     rng = np.random.default_rng(11)
     a = jnp.asarray(rng.normal(size=(37, 6)), jnp.float32)

@@ -723,6 +723,37 @@ def test_flow_cache_gc_validation(tmp_path):
         cache.gc(max_bytes=-1)
 
 
+def test_flow_cache_get_survives_failed_mtime_touch(tmp_path, monkeypatch):
+    """Regression: a hit whose LRU mtime refresh fails (read-only root,
+    racing gc) must still return the entry — recency is advisory."""
+    cache = FlowDiskCache(str(tmp_path / "fc"))
+    cache.put("wl", np.asarray([1]), np.asarray([2.5]))
+
+    def _utime_raises(path, times=None):
+        raise OSError("read-only file system")
+
+    monkeypatch.setattr(os, "utime", _utime_raises)
+    np.testing.assert_array_equal(cache.get("wl", np.asarray([1])), [2.5])
+    assert cache.hits == 1 and cache.misses == 0
+
+
+def test_flow_cache_gc_equal_mtime_tiebreak_is_deterministic(tmp_path):
+    """Regression: entries sharing one mtime (coarse filesystem clocks)
+    sort — and evict — in lexicographic path order, so concurrent workers
+    running the same gc policy agree on what goes."""
+    cache = FlowDiskCache(str(tmp_path / "fc"))
+    for i in range(4):
+        cache.put("wl", np.asarray([i]), np.arange(8, dtype=np.float64))
+        os.utime(cache._path(cache.key("wl", np.asarray([i]))), (5, 5))
+    entries = cache.entries()
+    paths = [p for p, _, _ in entries]
+    assert paths == sorted(paths)  # (mtime, path) tie-break
+    stats = cache.gc(max_bytes=2 * entries[0][1])
+    assert stats["removed"] == 2
+    left = {p for p, _, _ in cache.entries()}
+    assert left == set(paths[2:])  # lexicographically smallest went first
+
+
 # ------------------------------------------------------------- disk cache
 def test_disk_cache_hit_across_processes(tmp_path):
     """An entry written by another PROCESS is served from disk here — the

@@ -24,9 +24,17 @@ serve process run with ``--events``: the ``metrics`` verb is scraped
 mid-run (JSON and ``--prom``), and ``tools/trace_report.py`` must render
 the resulting event log into a valid non-empty Chrome trace.
 
+``--proposer`` runs the ISSUE 10 variant: a proposer-enabled
+``soc-service`` run whose between-round proposer rewrites pool columns
+mid-run, SIGKILLed after an early checkpoint and resumed — the live
+(mutated) pool is part of the checkpoint, so the resumed trajectory and
+the proposer's own counters must match the uninterrupted reference
+bit-exactly.
+
 Run from the repo root (a scratch directory is created and removed)::
 
-    PYTHONPATH=src python tools/service_smoke.py [--fleet | --server]
+    PYTHONPATH=src python tools/service_smoke.py \\
+        [--fleet | --server | --proposer]
 """
 from __future__ import annotations
 
@@ -217,6 +225,55 @@ def main_server() -> int:
     return 0
 
 
+def main_proposer() -> int:
+    """ISSUE 10 variant: the between-round proposer REWRITES pool columns
+    mid-run, so resume must restore the live (mutated) pool alongside the
+    engine snapshot — a SIGKILLed proposer-enabled run still resumes to
+    the uninterrupted trajectory bit-exactly, proposals included."""
+    env = _env()
+    base = ["--workload", "resnet50", "--n-pool", "96", "--T", "6",
+            "--q", "2", "--min-done", "1", "--executor", "thread",
+            "--workers", "2", "--gp-steps", "15", "--n", "10", "--b", "8",
+            "--seed", "3", "--quiet", "--proposer", "--proposer-n", "3",
+            "--proposer-every", "2", "--proposer-scale", "0.3"]
+    with tempfile.TemporaryDirectory() as td:
+        ref = os.path.join(td, "ref.json")
+        ck = os.path.join(td, "ckpt")
+        res = os.path.join(td, "res.json")
+
+        print("[smoke:proposer] uninterrupted proposer-enabled run ...")
+        run_cli(base + ["--out", ref], env)
+        a = json.load(open(ref))
+        ps = a["engine_stats"]["proposer"]
+        assert ps["replaced"] > 0, \
+            f"proposer never replaced a pool column: {ps}"
+        assert a["engine_stats"]["pool_replacements"] == ps["replaced"], ps
+
+        print("[smoke:proposer] SIGKILL after an early checkpoint ...")
+        killed = run_cli(base + ["--checkpoint-dir", ck, "--kill-after",
+                                 "4", "--out", os.path.join(td, "dead.json")],
+                         env, check=False)
+        assert killed.returncode == -signal.SIGKILL, killed.returncode
+        assert not os.path.exists(os.path.join(td, "dead.json")), \
+            "killed run must not have produced a result"
+
+        print("[smoke:proposer] resume with the mutated pool ...")
+        run_cli(base + ["--checkpoint-dir", ck, "--resume", "--out", res],
+                env)
+        b = json.load(open(res))
+        assert a["evaluated_rows"] == b["evaluated_rows"], \
+            (a["evaluated_rows"], b["evaluated_rows"])
+        assert a["y"] == b["y"], "resumed metrics differ from reference"
+        pb = b["engine_stats"]["proposer"]
+        assert (ps["rounds"], ps["proposed"], ps["replaced"]) == \
+            (pb["rounds"], pb["proposed"], pb["replaced"]), (ps, pb)
+        print(f"[smoke:proposer] resume bit-exact over "
+              f"{len(a['evaluated_rows'])} evaluations with "
+              f"{ps['replaced']} pool columns replaced")
+    print("[smoke:proposer] PASS")
+    return 0
+
+
 def main() -> int:
     env = _env()
     base = ["--workload", "resnet50", "--n-pool", "96", "--T", "4",
@@ -267,4 +324,6 @@ def main() -> int:
 if __name__ == "__main__":
     if "--server" in sys.argv[1:]:
         raise SystemExit(main_server())
+    if "--proposer" in sys.argv[1:]:
+        raise SystemExit(main_proposer())
     raise SystemExit(main_fleet() if "--fleet" in sys.argv[1:] else main())
